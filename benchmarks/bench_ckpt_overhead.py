@@ -1,0 +1,50 @@
+"""Paper Fig. 2 analogue: checkpoint time vs writer-rank count on the Burst
+Buffer vs the (bandwidth-throttled) Lustre/CSCRATCH tier.
+
+Gromacs/ADH in the paper scaled 4→64 ranks with growing aggregate memory;
+here aggregate state grows with rank count the same way. Expected shape
+(paper's finding): BB time stays low and flat-ish; Lustre time grows with
+aggregate size — "performance on the Burst Buffers is superior … and also
+scales better."
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.checkpoint import CheckpointManager
+
+from .common import (abstract, bb_store, cleanup, emit, scratch_store,
+                     synth_state)
+
+RANKS = (4, 8, 16, 32, 64)
+BYTES_PER_RANK = 12 << 20  # aggregate grows with ranks (ADH-style)
+
+
+def run():
+    rows = []
+    tmp = Path(tempfile.mkdtemp())
+    for ranks in RANKS:
+        agg = ranks * BYTES_PER_RANK
+        state = synth_state(agg, shards=ranks)
+        times = {}
+        for tier_name, store in (("bb", bb_store(f"fig2-{ranks}")),
+                                 ("scratch",
+                                  scratch_store(f"fig2-{ranks}", tmp))):
+            mgr = CheckpointManager(store, n_writers=min(ranks, 16),
+                                    codec="raw", retain=1)
+            t0 = time.monotonic()
+            rep = mgr.save(state, 1)
+            times[tier_name] = time.monotonic() - t0
+            cleanup(store)
+        rows.append((ranks, agg / 2**30, times["bb"], times["scratch"]))
+        emit(f"fig2_ckpt_ranks{ranks}", times["bb"] * 1e6,
+             f"agg_gib={agg/2**30:.2f};bb_s={times['bb']:.3f};"
+             f"scratch_s={times['scratch']:.3f};"
+             f"speedup={times['scratch']/max(times['bb'],1e-9):.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

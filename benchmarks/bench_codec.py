@@ -1,0 +1,38 @@
+"""Checkpoint-size/overhead reduction (the paper's stated future work):
+raw vs zstd vs int8-block codecs — encode throughput, compression ratio,
+and max quantization error on params-like data."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.codec import decode, encode
+
+from .common import emit
+
+N = 16 << 20  # 64 MB f32
+
+
+def run():
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal(N // 4) * 0.02).astype(np.float32)
+    out = {}
+    for codec in ("raw", "zstd", "int8"):
+        t0 = time.monotonic()
+        payload, meta = encode(x, codec)
+        enc_s = time.monotonic() - t0
+        t0 = time.monotonic()
+        y = decode(payload, codec, x.shape, x.dtype, meta)
+        dec_s = time.monotonic() - t0
+        err = float(np.max(np.abs(np.asarray(y, np.float32) - x)))
+        ratio = x.nbytes / len(payload)
+        out[codec] = (enc_s, dec_s, ratio, err)
+        emit(f"codec_{codec}", enc_s * 1e6,
+             f"ratio={ratio:.2f}x;enc_gbps={x.nbytes/enc_s/1e9:.2f};"
+             f"dec_gbps={x.nbytes/dec_s/1e9:.2f};max_err={err:.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 1 analogue ("top applications coverage"): transparent C/R
+works across the whole assigned workload zoo — checkpoint + bit-exact
+restore for all 10 architectures (reduced configs)."""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, CONFIGS, reduced
+from repro.core.checkpoint import CheckpointManager
+from repro.core.split_state import init_train_state
+from repro.models import Model
+from repro.optim import make_optimizer
+
+from .common import abstract, bb_store, cleanup, emit
+
+
+def run():
+    ok = 0
+    for arch in ARCH_IDS:
+        cfg = reduced(CONFIGS[arch])
+        model = Model(cfg)
+        opt = make_optimizer(cfg)
+        state = init_train_state(model, opt, jax.random.PRNGKey(0))
+        store = bb_store(f"zoo-{arch}")
+        mgr = CheckpointManager(store, n_writers=2, retain=1)
+        t0 = time.monotonic()
+        rep = mgr.save(state, 1)
+        save_s = time.monotonic() - t0
+        t0 = time.monotonic()
+        restored, _ = mgr.restore(abstract(state))
+        rest_s = time.monotonic() - t0
+        exact = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(state),
+                            jax.tree.leaves(restored)))
+        ok += exact
+        cleanup(store)
+        emit(f"zoo_cr_{arch}", save_s * 1e6,
+             f"bytes={rep['bytes']};restore_s={rest_s:.3f};exact={exact}")
+    emit("zoo_cr_coverage", 0.0, f"archs_ok={ok}/{len(ARCH_IDS)}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

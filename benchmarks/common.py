@@ -1,0 +1,58 @@
+"""Shared benchmark helpers: tiered stores mirroring the paper's Cori setup
+(Burst Buffer = /dev/shm, CSCRATCH/Lustre = throttled disk) and synthetic
+states of controlled aggregate size."""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.storage import Tier, TieredStore  # noqa: E402
+
+LUSTRE_BW = 200e6  # simulated shared-filesystem aggregate bandwidth
+
+
+def bb_store(tag: str) -> TieredStore:
+    root = Path("/dev/shm") if os.access("/dev/shm", os.W_OK) \
+        else Path(tempfile.gettempdir())
+    return TieredStore(Tier("burst-buffer", root / f"repro-bench-{tag}"))
+
+
+def scratch_store(tag: str, tmp: Path) -> TieredStore:
+    return TieredStore(Tier("cscratch-sim", tmp / tag,
+                            bw_bytes_per_s=LUSTRE_BW))
+
+
+def synth_state(total_bytes: int, *, shards: int = 8, seed: int = 0) -> dict:
+    """Params-like f32 state of ~total_bytes aggregate size."""
+    per = max(total_bytes // (4 * shards), 1)
+    side = max(int(per ** 0.5), 1)
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {f"w{i}": jnp.asarray(
+            rng.standard_normal((side, side), dtype=np.float32))
+            for i in range(shards)},
+        "step": jnp.asarray(1, jnp.int32),
+    }
+
+
+def abstract(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def cleanup(store: TieredStore):
+    for t in store.tiers():
+        shutil.rmtree(t.root, ignore_errors=True)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

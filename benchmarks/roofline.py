@@ -1,0 +1,109 @@
+"""Roofline report: reads the dry-run artifacts and renders the per-cell
+three-term table (§Roofline), flags the dominant bottleneck, and nominates
+the three hillclimb cells (worst roofline fraction / most collective-bound /
+most C/R-representative)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh="single"):
+    rows = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            rows.append(r)
+    return rows
+
+
+def table(rows):
+    hdr = (f"{'arch':24s} {'shape':11s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'dom':>5s} {'frac':>5s} {'useful':>6s} "
+           f"{'HBM GiB':>8s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        t = r["roofline"]
+        out.append(
+            f"{r['arch']:24s} {r['shape']:11s} "
+            f"{t['compute_s']:8.4f} {t['memory_s']:8.4f} "
+            f"{t['collective_s']:8.4f} {t['dominant'][:4]:>5s} "
+            f"{t['roofline_fraction']:5.2f} "
+            f"{r['useful_flops_fraction']:6.2f} "
+            f"{r['memory']['peak_bytes_est']/2**30:8.2f}")
+    return "\n".join(out)
+
+
+def nominate(rows):
+    """The three hillclimb cells per the assignment.
+
+    Decode cells are excluded from "worst fraction": a single decode token
+    is inherently memory-bound (compute fraction ≈ 0 by construction), so
+    the metric is only informative on train/prefill cells.
+    """
+    nondecode = [r for r in rows if r["shape"] in ("train_4k", "prefill_32k")]
+    coll = max(rows, key=lambda r: r["roofline"]["collective_s"])
+    picks = [("most-collective", coll["arch"], coll["shape"])]
+
+    worst = min((r for r in nondecode
+                 if (r["arch"], r["shape"]) != (coll["arch"], coll["shape"])),
+                key=lambda r: r["roofline"]["roofline_fraction"])
+    picks.append(("worst-fraction", worst["arch"], worst["shape"]))
+
+    # most C/R-representative: biggest state ⇒ heaviest checkpoint (the
+    # paper's scaling axis) — the largest train cell not already picked
+    taken = {(a, s) for _, a, s in picks}
+    big = max((r for r in rows if r["shape"] == "train_4k"
+               and (r["arch"], r["shape"]) not in taken),
+              key=lambda r: r["model_flops_global"])
+    picks.append(("paper-representative", big["arch"], big["shape"]))
+    return picks
+
+
+def optimized_rows():
+    """Best optimized variant per cell from artifacts/dryrun-opt*."""
+    best = {}
+    for d in sorted(ART.parent.glob("dryrun-opt*")):
+        for p in d.glob("*__single.json"):
+            r = json.loads(p.read_text())
+            if r.get("status") != "ok":
+                continue
+            key = (r["arch"], r["shape"])
+            if key not in best or (r["roofline"]["roofline_fraction"]
+                                   > best[key]["roofline"]["roofline_fraction"]):
+                best[key] = r
+    return best
+
+
+def run():
+    rows = load("single")
+    if not rows:
+        print("roofline,0,no_dryrun_artifacts_yet")
+        return
+    print(table(rows))
+    print()
+    for tag, arch, shape in nominate(rows):
+        print(f"hillclimb_{tag},0,{arch}x{shape}")
+    opt = optimized_rows()
+    for (arch, shape), r in sorted(opt.items()):
+        base = next((b for b in rows
+                     if (b["arch"], b["shape"]) == (arch, shape)), None)
+        if base is None:
+            continue
+        f0 = base["roofline"]["roofline_fraction"]
+        f1 = r["roofline"]["roofline_fraction"]
+        ov = r.get("overrides", {})
+        print(f"perf_{arch}x{shape},0,"
+              f"frac {f0:.3f}->{f1:.3f};coll "
+              f"{base['roofline']['collective_s']:.1f}->"
+              f"{r['roofline']['collective_s']:.1f}s;hbm "
+              f"{base['memory']['peak_bytes_est']/2**30:.1f}->"
+              f"{r['memory']['peak_bytes_est']/2**30:.1f}GiB;{ov}")
+    (ART.parent / "roofline_table.txt").write_text(table(rows))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Master benchmark harness.
+
+Paper artifact ↔ bench map:
+  Fig 2  (Gromacs ckpt time, BB vs Lustre, 4→64 ranks)  → bench_ckpt_overhead
+  HPCG ¶ (512-rank ckpt 30s vs 600s; restart ~2.5×)     → bench_restart
+  Fig 1  (top-application coverage)                     → bench_workload_sweep
+  future work (ckpt overhead reduction)                 → bench_codec
+  beyond-paper (overlap compute/IO)                     → bench_async_overlap
+  §Roofline (from dry-run artifacts)                    → roofline
+"""
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    from . import (bench_async_overlap, bench_ckpt_overhead, bench_codec,
+                   bench_restart, bench_workload_sweep, roofline)
+    print("name,us_per_call,derived")
+    for mod in (bench_ckpt_overhead, bench_restart, bench_codec,
+                bench_workload_sweep, bench_async_overlap, roofline):
+        try:
+            mod.run()
+        except Exception as e:  # noqa — one bench failing must not hide others
+            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,37 @@
+"""Architecture registry: all 10 assigned architectures, selectable via --arch."""
+from __future__ import annotations
+
+from .base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSM, ModelConfig, MoEConfig,
+                   RGLRUConfig, SSMConfig, Stage, build_stages, param_counts,
+                   reduced)
+from .shapes import SHAPES, ShapeSpec, applicable, cells
+
+from . import (chameleon_34b, gemma2_9b, gemma3_1b, hubert_xlarge,
+               kimi_k2_1t_a32b, llama4_scout_17b_16e, mamba2_780m,
+               recurrentgemma_9b, stablelm_1_6b, starcoder2_3b)
+
+_MODULES = (
+    kimi_k2_1t_a32b, llama4_scout_17b_16e, gemma3_1b, stablelm_1_6b,
+    starcoder2_3b, gemma2_9b, hubert_xlarge, recurrentgemma_9b, mamba2_780m,
+    chameleon_34b,
+)
+
+CONFIGS: dict[str, ModelConfig] = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+ARCH_IDS = tuple(sorted(CONFIGS))
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return CONFIGS[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ARCH_IDS)}"
+        ) from None
+
+
+__all__ = [
+    "ATTN_GLOBAL", "ATTN_LOCAL", "RGLRU", "SSM", "ModelConfig", "MoEConfig",
+    "RGLRUConfig", "SSMConfig", "Stage", "build_stages", "param_counts",
+    "reduced", "SHAPES", "ShapeSpec", "applicable", "cells", "CONFIGS",
+    "ARCH_IDS", "get_config",
+]

@@ -1,0 +1,29 @@
+"""The paper's primary contribution, adapted to JAX: MANA-style transparent,
+topology-agnostic (M×N) checkpoint/restart with production hardening —
+coordinator with keepalive, two-phase atomic commit, drain protocol,
+two-tier storage, buddy redundancy, codecs, preemption, AOT restart cache.
+See DESIGN.md for the paper↔module map (P1–P12).
+"""
+from .atomic import CrashInjector, CrashPoint
+from .checkpoint import CheckpointManager
+from .coordinator import CheckpointCoordinator
+from .drain import DrainCounters, quiesce_device_state
+from .errors import (AbortedError, CkptError, CorruptShardError,
+                     MissingShardError, NamespaceError, NoCheckpointError,
+                     RegistryMismatchError, SpaceError)
+from .preempt import PreemptionGuard, PreemptQueue
+from .split_state import (abstract_train_state, config_digest,
+                          init_train_state, leaf_paths,
+                          lower_half_descriptor, state_shardings)
+from .storage import Tier, TieredStore, default_store
+
+__all__ = [
+    "AbortedError", "CheckpointCoordinator", "CheckpointManager",
+    "CkptError", "CorruptShardError", "CrashInjector", "CrashPoint",
+    "DrainCounters", "MissingShardError", "NamespaceError",
+    "NoCheckpointError", "PreemptQueue", "PreemptionGuard",
+    "RegistryMismatchError", "SpaceError", "Tier", "TieredStore",
+    "abstract_train_state", "config_digest", "default_store",
+    "init_train_state", "leaf_paths", "lower_half_descriptor",
+    "quiesce_device_state", "state_shardings",
+]

@@ -1,0 +1,72 @@
+"""AOT compiled-executable cache — the static-linking analogue.
+
+Paper: "For best startup performance at scale, it is recommended to
+broadcast a statically linked executable to all nodes." The JAX analogue of
+startup cost is XLA compilation at restart; we serialize compiled
+executables keyed by (config digest, input avals, mesh, jax version) so a
+restarted (or newly scaled) job loads instead of recompiling.
+
+Falls back to the persistent compilation cache dir, then to a no-op, when
+executable serialization is unsupported on the runtime.
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+import time
+from pathlib import Path
+
+from .errors import warn
+
+
+def _key(tag: str, avals_repr: str, mesh_repr: str) -> str:
+    import jax
+    blob = f"{tag}|{avals_repr}|{mesh_repr}|jax-{jax.__version__}"
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+class AotCache:
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.stats = {"hits": 0, "misses": 0, "stores": 0, "errors": 0}
+
+    def _path(self, key: str) -> Path:
+        return self.root / f"{key}.aotexec"
+
+    def load_or_compile(self, jitted, args, *, tag: str, mesh=None):
+        """Returns (compiled, source) where source is 'cache' | 'compile'."""
+        from jax.experimental import serialize_executable as se
+        avals = repr(jax.tree.map(
+            lambda x: (tuple(x.shape), str(x.dtype)), args)) \
+            if args is not None else ""
+        key = _key(tag, avals, repr(mesh))
+        path = self._path(key)
+        if path.exists():
+            try:
+                payload, in_tree, out_tree = pickle.loads(path.read_bytes())
+                compiled = se.deserialize_and_load(payload, in_tree, out_tree)
+                self.stats["hits"] += 1
+                return compiled, "cache"
+            except Exception as e:  # noqa — cache is best-effort
+                self.stats["errors"] += 1
+                warn("CKPT_W_AOT", "stale AOT cache entry; recompiling",
+                     key=key, err=str(e)[:120])
+        t0 = time.monotonic()
+        compiled = jitted.lower(*args).compile()
+        self.stats["misses"] += 1
+        try:
+            blob = pickle.dumps(se.serialize(compiled))
+            tmp = path.with_suffix(".tmp")
+            tmp.write_bytes(blob)
+            tmp.rename(path)
+            self.stats["stores"] += 1
+        except Exception as e:  # noqa
+            self.stats["errors"] += 1
+            warn("CKPT_W_AOT", "executable serialization unavailable",
+                 err=str(e)[:120])
+        self.stats["last_compile_s"] = time.monotonic() - t0
+        return compiled, "compile"
+
+
+import jax  # noqa: E402  (bottom import keeps module import cheap)

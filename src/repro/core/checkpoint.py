@@ -1,0 +1,431 @@
+"""Topology-agnostic checkpoint save/restore — MANA's split-process C/R as a
+JAX subsystem.
+
+Save path (two-phase commit, coordinator-supervised, async-capable):
+
+  drain → host snapshot → [rank writers: encode+crc+write shards] → barrier
+        → manifest (single handle, P7) → atomic rename commit → LATEST
+        → background drain to the slow storage tier → GC old steps
+
+Restore path (elastic, P2/P6):
+
+  manifest → per-device index ranges from the *current* sharding
+           → plan_reads over saved ranges → read (fast tier → slow tier →
+             buddy replica) → crc verify → decode → assemble →
+             jax.make_array_from_callback → registry validation
+
+Nothing about the saving topology is required to match: different device
+count, mesh shape, or sharding restores correctly (tested 1↔4↔8-device).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+import zlib
+from collections import OrderedDict
+from pathlib import Path
+
+import jax
+import msgpack
+import numpy as np
+
+from . import atomic, codec as codec_mod
+from .atomic import NO_CRASH, CrashInjector
+from .coordinator import CheckpointCoordinator
+from .drain import DrainCounters, quiesce_device_state
+from .elastic import ShardRange, normalize_index, assemble, plan_reads
+from .errors import (AbortedError, CorruptShardError, MissingShardError,
+                     NoCheckpointError, warn)
+from .namespace import REPLICA_SUFFIX, UPPER_DIR, leaf_to_fname
+from .registry import build_registry, registry_json, validate_against
+from .split_state import leaf_paths
+from .storage import TieredStore
+
+FORMAT_VERSION = 2
+
+
+# ---------------------------------------------------------------------------
+# shard files
+# ---------------------------------------------------------------------------
+
+def _pack_shard(leaf: str, rng: ShardRange, arr: np.ndarray, codec: str):
+    payload, meta = codec_mod.encode(arr, codec)
+    header = {
+        "leaf": leaf,
+        "global_dtype": str(arr.dtype),
+        "start": list(rng.start),
+        "stop": list(rng.stop),
+        "codec": codec,
+        "meta": meta,
+        "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+        "payload_bytes": len(payload),
+    }
+    hb = msgpack.packb(header)
+    return len(hb).to_bytes(4, "little") + hb + payload, header
+
+
+def _unpack_shard(data: bytes):
+    hlen = int.from_bytes(data[:4], "little")
+    header = msgpack.unpackb(data[4:4 + hlen])
+    payload = data[4 + hlen:4 + hlen + header["payload_bytes"]]
+    if (zlib.crc32(payload) & 0xFFFFFFFF) != header["crc32"]:
+        raise CorruptShardError("payload crc mismatch", leaf=header["leaf"])
+    rng = ShardRange(tuple(header["start"]), tuple(header["stop"]))
+    arr = codec_mod.decode(payload, header["codec"], rng.shape,
+                           header["global_dtype"], header["meta"])
+    return rng, arr
+
+
+# ---------------------------------------------------------------------------
+# manager
+# ---------------------------------------------------------------------------
+
+class CheckpointManager:
+    def __init__(self, store: TieredStore, *, n_writers: int = 4,
+                 codec: str = "zstd", params_codec: str | None = None,
+                 replicas: int = 1, retain: int = 3,
+                 keepalive_s: float = 10.0, save_timeout_s: float = 600.0,
+                 max_retries: int = 1, async_drain_to_slow: bool = True):
+        self.store = store
+        self.n_writers = n_writers
+        self.codec = codec
+        self.params_codec = params_codec or codec   # int8 opt-in for params
+        self.replicas = replicas                    # 2 = buddy redundancy
+        self.retain = retain
+        self.save_timeout_s = save_timeout_s
+        # node-failure recovery: a failed/dead writer rank is excluded and
+        # its shards are redistributed to survivors, up to max_retries times
+        self.max_retries = max_retries
+        self.coordinator = CheckpointCoordinator(n_writers,
+                                                 keepalive_s=keepalive_s)
+        self.counters = DrainCounters()
+        self._async_thread: threading.Thread | None = None
+        self._async_err = None
+        self._read_cache: OrderedDict = OrderedDict()
+        self._read_cache_bytes = 0
+        self.read_cache_limit = 1 << 30
+        self.last_report: dict = {}
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+    def save(self, state, step: int, *, extra: dict | None = None,
+             blocking: bool = True, crash: CrashInjector = NO_CRASH) -> dict:
+        """Checkpoint `state` at `step`. With blocking=False the host
+        snapshot is synchronous but file IO overlaps subsequent compute
+        (drain protocol guarantees quiescence before the next round)."""
+        t0 = time.monotonic()
+        # P4: quiescence before snapshot
+        self.wait()                                  # previous round drained
+        wait_s = quiesce_device_state(state)
+        registry = build_registry(state)
+        items = self._snapshot(state)
+        snap_s = time.monotonic() - t0
+        total = sum(a.nbytes for _, _, a in items)
+        self.store.fast.preflight(total // max(self._est_ratio(), 1))
+        self.counters.enqueue(total)
+        args = (items, registry, state, step, extra or {}, total, t0,
+                snap_s, wait_s, crash)
+        if blocking:
+            return self._write_round(*args)
+        self._async_thread = threading.Thread(
+            target=self._async_entry, args=args, daemon=True)
+        self._async_thread.start()
+        return {"step": step, "async": True, "snapshot_s": snap_s,
+                "bytes": total}
+
+    def _est_ratio(self):
+        return 2 if self.codec != "raw" else 1
+
+    def _async_entry(self, *args):
+        try:
+            self._write_round(*args)
+        except Exception as e:  # noqa
+            self._async_err = e
+            # counters must still drain or the trainer deadlocks
+            self.counters.commit(args[5])
+
+    def wait(self):
+        """Drain the async writer (two-counter equality, P4)."""
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+        if not self.counters.drained():
+            self.counters.wait(timeout=self.save_timeout_s)
+        if self._async_err is not None:
+            e, self._async_err = self._async_err, None
+            raise e
+
+    def _snapshot(self, state) -> list:
+        """Device → host copy; one entry per unique logical shard range."""
+        items = []
+        for name, leaf in leaf_paths(state):
+            if hasattr(leaf, "addressable_shards"):
+                seen = set()
+                gshape = leaf.shape
+                for sh in leaf.addressable_shards:
+                    rng = normalize_index(sh.index, gshape)
+                    key = (rng.start, rng.stop)
+                    if key in seen:
+                        continue           # replicated copy — save once
+                    seen.add(key)
+                    items.append((name, rng, np.asarray(sh.data)))
+            else:
+                arr = np.asarray(leaf)
+                rng = ShardRange((0,) * arr.ndim, arr.shape)
+                items.append((name, rng, arr))
+        return items
+
+    def _leaf_codec(self, leaf_name: str) -> str:
+        if leaf_name.startswith("params/"):
+            return self.params_codec
+        return self.codec
+
+    def _write_round(self, items, registry, state, step, extra, total, t0,
+                     snap_s, wait_s, crash) -> dict:
+        stage = atomic.staging_dir(self.store.root, step)
+        stage.mkdir(parents=True, exist_ok=True)
+        atomic.mark_pending(stage, {"step": step, "t": time.time()})
+        coord = self.coordinator
+        rel_stage = stage.name
+
+        stats_lock = threading.Lock()
+        stats = {"files": 0, "payload_bytes": 0}
+        manifest_shards = {}
+        dead: set = set()
+
+        def assign(alive: list):
+            """Round-robin shard assignment over surviving ranks; the next
+            alive rank writes the buddy replica."""
+            per_rank = {r: [] for r in alive}
+            shards = {}
+            for i, (name, rng, arr) in enumerate(items):
+                r = alive[i % len(alive)]
+                fname = f"{UPPER_DIR}/{leaf_to_fname(name)}/shard-{i:05d}.bin"
+                per_rank[r].append((name, rng, arr, fname, False))
+                replicas = [fname]
+                if self.replicas > 1 and len(alive) > 1:
+                    buddy = alive[(i + 1) % len(alive)]
+                    rf = fname + REPLICA_SUFFIX
+                    per_rank[buddy].append((name, rng, arr, rf, True))
+                    replicas.append(rf)
+                shards.setdefault(name, []).append({
+                    "file": fname, "replicas": replicas,
+                    "start": list(rng.start), "stop": list(rng.stop),
+                    "dtype": str(arr.dtype),
+                    "codec": self._leaf_codec(name),
+                })
+            return per_rank, shards
+
+        def writer(rank: int, work: list):
+            try:
+                coord.rank_begin(rank)
+                nbytes = 0
+                files = []
+                for name, rng, arr, fname, is_replica in work:
+                    data, header = _pack_shard(name, rng, arr,
+                                               self._leaf_codec(name))
+                    crash.maybe(f"rank{rank}_before_write")
+                    self.store.fast.write_file(f"{rel_stage}/{fname}", data)
+                    nbytes += len(data)
+                    files.append(fname)
+                    coord.heartbeat(rank)
+                    if not is_replica:
+                        with stats_lock:
+                            stats["files"] += 1
+                            stats["payload_bytes"] += header["payload_bytes"]
+                coord.rank_prepared(rank, nbytes=nbytes, files=files)
+            except Exception as e:  # noqa
+                coord.rank_failed(rank, f"{type(e).__name__}: {e}")
+
+        ok = False
+        reason = ""
+        for attempt in range(self.max_retries + 1):
+            alive = [r for r in range(self.n_writers) if r not in dead]
+            if not alive:
+                reason = "no surviving writer ranks"
+                break
+            stats["files"] = stats["payload_bytes"] = 0
+            per_rank, manifest_shards = assign(alive)
+            coord.begin_round(step, participants=alive)
+            threads = [threading.Thread(target=writer, args=(r, per_rank[r]),
+                                        daemon=True) for r in alive]
+            for t in threads:
+                t.start()
+            ok = coord.wait_all_prepared(timeout=self.save_timeout_s)
+            reason = coord.abort_reason()
+            newly_dead = set(coord.round.failed) if coord.round else set()
+            for t in threads:
+                t.join()
+            coord.finish_round(ok)
+            if ok:
+                break
+            dead |= newly_dead or set(alive)  # timeout w/o blame: give up
+            if attempt < self.max_retries and newly_dead:
+                warn("CKPT_W_RETRY",
+                     "writer rank(s) failed; redistributing their shards "
+                     "to survivors and retrying",
+                     dead=sorted(dead), step=step, reason=reason)
+        if not ok:
+            shutil.rmtree(stage, ignore_errors=True)
+            self.counters.commit(total)
+            raise AbortedError("checkpoint aborted", step=step, reason=reason)
+
+        # phase 2: manifest = commit record (single handle, P7)
+        manifest = {
+            "format": FORMAT_VERSION,
+            "step": step,
+            "created": time.time(),
+            "leaves": {
+                name: {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                       "shards": manifest_shards.get(name, [])}
+                for name, leaf in leaf_paths(state)
+            },
+            "registry": registry_json(registry),
+            "extra": extra,
+        }
+        crash.maybe("before_manifest")
+        atomic.atomic_write_bytes(stage / atomic.MANIFEST,
+                                  json.dumps(manifest).encode(), crash)
+        atomic.clear_pending(stage)
+        final = atomic.committed_dir(self.store.root, step)
+        atomic.commit_dir(stage, final, crash)
+        atomic.write_latest(self.store.root, step, crash)
+        self.counters.commit(total)
+        self._gc()
+        self.store.drain_step(final.name)
+        dt = time.monotonic() - t0
+        report = {
+            "step": step, "bytes": total,
+            "payload_bytes": stats["payload_bytes"],
+            "files": stats["files"], "seconds": dt,
+            "snapshot_s": snap_s, "drain_wait_s": wait_s,
+            "throughput_gbps": total / dt / 1e9 if dt else 0.0,
+            "compression_ratio": total / max(stats["payload_bytes"], 1),
+        }
+        self.last_report = report
+        return report
+
+    def _gc(self):
+        steps = atomic.list_committed_steps(self.store.root)
+        for s in steps[:-self.retain] if self.retain else []:
+            shutil.rmtree(atomic.committed_dir(self.store.root, s),
+                          ignore_errors=True)
+        atomic.gc_staging(self.store.root)
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def latest_step(self):
+        s = atomic.read_latest(self.store.root)
+        if s is not None:
+            return s
+        for tier in self.store.tiers():
+            steps = atomic.list_committed_steps(tier.root)
+            if steps:
+                return steps[-1]
+        return None
+
+    def load_manifest(self, step: int) -> dict:
+        rel = f"{atomic.committed_dir(Path('.'), step).name}/{atomic.MANIFEST}"
+        tier = self.store.locate(rel)
+        if tier is None:
+            raise NoCheckpointError("no manifest for step", step=step)
+        return json.loads(tier.read_file(rel))
+
+    def restore(self, abstract_state, shardings=None, *, step: int | None = None,
+                validate: bool = True):
+        """Restore onto the CURRENT topology. `abstract_state`: pytree of
+        ShapeDtypeStruct (or arrays — shapes/dtypes used); `shardings`:
+        matching tree of Shardings or None for single-device."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise NoCheckpointError("no committed checkpoint found",
+                                    root=str(self.store.root))
+        manifest = self.load_manifest(step)
+        step_dir = atomic.committed_dir(Path("."), step).name
+        leaves = manifest["leaves"]
+
+        flat, treedef = jax.tree_util.tree_flatten(abstract_state)
+        shard_flat = (treedef.flatten_up_to(shardings)
+                      if shardings is not None else [None] * len(flat))
+        names = [n for n, _ in leaf_paths(abstract_state)]
+        out = []
+        for name, sds, sharding in zip(names, flat, shard_flat):
+            rec = leaves.get(name)
+            if rec is None:
+                raise MissingShardError("leaf missing from checkpoint",
+                                        leaf=name, step=step)
+            out.append(self._restore_leaf(step_dir, name, rec, sds, sharding))
+        state = jax.tree_util.tree_unflatten(treedef, out)
+        if validate:
+            validate_against(state, leaves)
+        self._read_cache.clear()
+        self._read_cache_bytes = 0
+        return state, manifest.get("extra", {})
+
+    def _restore_leaf(self, step_dir, name, rec, sds, sharding):
+        shape = tuple(sds.shape)
+        dtype = sds.dtype
+        available = [(ShardRange(tuple(s["start"]), tuple(s["stop"])), s)
+                     for s in rec["shards"]]
+
+        def fetch(target: ShardRange) -> np.ndarray:
+            picks = plan_reads(target, available)
+            pieces = [(rng, self._read_shard(step_dir, s))
+                      for rng, s in picks]
+            try:
+                return assemble(target, pieces, np.asarray(
+                    jax.numpy.zeros((), dtype)).dtype)
+            except LookupError as e:
+                raise MissingShardError(str(e), leaf=name) from None
+
+        if sharding is None:
+            full = fetch(ShardRange((0,) * len(shape), shape))
+            return jax.numpy.asarray(full, dtype=dtype)
+
+        cache = {}
+
+        def cb(index):
+            rng = normalize_index(index, shape)
+            key = (rng.start, rng.stop)
+            if key not in cache:
+                cache[key] = fetch(rng)
+            return cache[key]
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    def _read_shard(self, step_dir: str, srec: dict) -> np.ndarray:
+        key = srec["file"]
+        if key in self._read_cache:
+            return self._read_cache[key][1]
+        last_err = None
+        for fname in srec.get("replicas", [srec["file"]]):
+            rel = f"{step_dir}/{fname}"
+            tier = self.store.locate(rel)
+            if tier is None:
+                last_err = MissingShardError("shard not on any tier",
+                                             file=fname)
+                continue
+            try:
+                rng, arr = _unpack_shard(tier.read_file(rel))
+                if fname != srec["file"]:
+                    warn("CKPT_W_REPLICA", "primary shard unavailable; "
+                         "restored from buddy replica", file=srec["file"])
+                self._cache_put(key, arr)
+                return arr
+            except (CorruptShardError, OSError, ValueError) as e:
+                last_err = e
+                continue
+        raise last_err if last_err else MissingShardError(
+            "unreadable shard", file=srec["file"])
+
+    def _cache_put(self, key, arr):
+        self._read_cache[key] = (time.monotonic(), arr)
+        self._read_cache_bytes += arr.nbytes
+        while self._read_cache_bytes > self.read_cache_limit \
+                and len(self._read_cache) > 1:
+            _, (_, old) = self._read_cache.popitem(last=False)
+            self._read_cache_bytes -= old.nbytes

@@ -1,0 +1,103 @@
+"""Shard payload codecs: raw | zstd | int8 block-quantization (+zstd).
+
+The int8 codec addresses the paper's stated future work ("reducing the
+checkpoint overhead for large-scale applications"): 4×/2× size reduction on
+f32/bf16 leaves with per-block scales. The device-side quantizer has a Pallas
+TPU kernel (repro.kernels.ckpt_codec) validated against the numpy encoder
+here; on the host path we quantize with numpy after device→host transfer.
+"""
+from __future__ import annotations
+
+import numpy as np
+import zstandard
+
+BLOCK = 256
+
+# zstandard (de)compressor objects are NOT thread-safe; the checkpoint writer
+# runs N rank threads concurrently (observed: "Src size is incorrect" under
+# shared compressors — the paper's missing-locks failure class). Thread-local
+# instances instead of a lock keep ranks parallel.
+import threading
+
+_TL = threading.local()
+
+
+def _zc() -> zstandard.ZstdCompressor:
+    if not hasattr(_TL, "zc"):
+        _TL.zc = zstandard.ZstdCompressor(level=3)
+    return _TL.zc
+
+
+def _zd() -> zstandard.ZstdDecompressor:
+    if not hasattr(_TL, "zd"):
+        _TL.zd = zstandard.ZstdDecompressor()
+    return _TL.zd
+
+
+def _as_u16(x: np.ndarray) -> np.ndarray:
+    return x.view(np.uint16) if x.dtype == np.dtype("bfloat16") else x
+
+
+def encode(arr: np.ndarray, codec: str) -> tuple:
+    """Returns (payload_bytes, meta_dict)."""
+    if codec == "raw":
+        return arr.tobytes(), {}
+    if codec == "zstd":
+        return _zc().compress(np.ascontiguousarray(arr).tobytes()), {}
+    if codec == "int8":
+        q, scales = quantize_int8(arr)
+        payload = _zc().compress(q.tobytes() + scales.tobytes())
+        return payload, {"q_bytes": q.nbytes, "s_bytes": scales.nbytes,
+                         "n": arr.size}
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode(payload: bytes, codec: str, shape, dtype, meta: dict) -> np.ndarray:
+    dtype = np.dtype(dtype) if not str(dtype).startswith("bfloat") else dtype
+    if codec == "raw":
+        return np.frombuffer(payload, dtype=_np_dtype(dtype)).reshape(shape)
+    if codec == "zstd":
+        raw = _zd().decompress(payload)
+        return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
+    if codec == "int8":
+        raw = _zd().decompress(payload)
+        q = np.frombuffer(raw[:meta["q_bytes"]], np.int8)
+        scales = np.frombuffer(raw[meta["q_bytes"]:], np.float32)
+        return dequantize_int8(q, scales, meta["n"]).astype(
+            _np_dtype(dtype), copy=False).reshape(shape)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _np_dtype(dtype):
+    s = str(dtype)
+    if s == "bfloat16":
+        import ml_dtypes  # ships with jax
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(s)
+
+
+def quantize_int8(arr: np.ndarray) -> tuple:
+    """Symmetric per-block int8 quantization over the flattened array.
+
+    Matches repro.kernels.ckpt_codec (the Pallas TPU kernel oracle):
+      scale_b = max(|x_b|) / 127 ;  q = round(x / scale) clipped to ±127.
+    """
+    x = np.asarray(arr).astype(np.float32).reshape(-1)
+    n = x.size
+    pad = (-n) % BLOCK
+    if pad:
+        x = np.concatenate([x, np.zeros(pad, np.float32)])
+    xb = x.reshape(-1, BLOCK)
+    amax = np.abs(xb).max(axis=1)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(xb / scale[:, None]), -127, 127).astype(np.int8)
+    return q.reshape(-1)[: n + pad], scale
+
+
+def dequantize_int8(q: np.ndarray, scales: np.ndarray, n: int) -> np.ndarray:
+    xb = q.reshape(-1, BLOCK).astype(np.float32) * scales[:, None]
+    return xb.reshape(-1)[:n]
+
+
+def lossy(codec: str) -> bool:
+    return codec == "int8"

@@ -1,0 +1,100 @@
+"""Elastic restore planner — the M×N portability core.
+
+A checkpoint stores, per pytree leaf, shard files covering logical index
+ranges of the global array. Restoring onto a NEW mesh asks, per device, for
+some index range; the planner computes which saved files overlap and how to
+assemble the requested block. Nothing about the saving topology (device
+count, mesh shape, host count, sharding) is assumed — the direct analogue of
+MANA's "restart under a different MPI / network than the one you
+checkpointed under", strengthened to arbitrary re-sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ShardRange:
+    """Half-open logical index range [start, stop) per dim."""
+    start: tuple
+    stop: tuple
+
+    @property
+    def shape(self):
+        return tuple(b - a for a, b in zip(self.start, self.stop))
+
+    def size(self):
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def normalize_index(index, global_shape) -> ShardRange:
+    """jax shard .index (tuple of slices, possibly with Nones) → ShardRange."""
+    start, stop = [], []
+    for sl, dim in zip(index, global_shape):
+        start.append(0 if sl.start is None else int(sl.start))
+        stop.append(dim if sl.stop is None else int(sl.stop))
+    return ShardRange(tuple(start), tuple(stop))
+
+
+def overlap(a: ShardRange, b: ShardRange) -> ShardRange | None:
+    start = tuple(max(x, y) for x, y in zip(a.start, b.start))
+    stop = tuple(min(x, y) for x, y in zip(a.stop, b.stop))
+    if any(p >= q for p, q in zip(start, stop)) and len(start) > 0:
+        return None
+    return ShardRange(start, stop)
+
+
+def assemble(target: ShardRange, pieces, dtype) -> np.ndarray:
+    """pieces: iterable of (ShardRange, np.ndarray) fully covering `target`.
+
+    Raises if coverage is incomplete (missing shards are a restore error the
+    caller maps to CKPT_E_MISSING).
+    """
+    out = np.empty(target.shape, dtype=dtype)
+    covered = np.zeros(target.shape, dtype=bool) if target.shape else \
+        np.zeros((), dtype=bool)
+    for rng, arr in pieces:
+        ov = overlap(rng, target)
+        if ov is None and target.shape:
+            continue
+        if not target.shape:  # scalar
+            out[...] = arr
+            covered = np.ones((), bool)
+            continue
+        dst = tuple(slice(a - t, b - t)
+                    for a, b, t in zip(ov.start, ov.stop, target.start))
+        src = tuple(slice(a - s, b - s)
+                    for a, b, s in zip(ov.start, ov.stop, rng.start))
+        out[dst] = arr[src]
+        covered[dst] = True
+    if not bool(np.all(covered)):
+        missing = int(covered.size - covered.sum()) if target.shape else 1
+        raise LookupError(f"restore plan leaves {missing} elements uncovered "
+                          f"for target {target}")
+    return out
+
+
+def plan_reads(target: ShardRange, available: list) -> list:
+    """available: list of (ShardRange, handle). Returns the minimal subset
+    (greedy by overlap size) that covers `target`."""
+    picks = []
+    remaining = target.size()
+    # greedy: biggest overlaps first — avoids reading redundant replicas
+    scored = []
+    for rng, handle in available:
+        ov = overlap(rng, target)
+        if ov is not None or not target.shape:
+            scored.append((ov.size() if ov else 1, rng, handle))
+    scored.sort(key=lambda t: -t[0])
+    seen = None
+    for sz, rng, handle in scored:
+        picks.append((rng, handle))
+        remaining -= sz                      # upper bound (ignores overlap
+        if remaining <= 0:                   # between picks — safe, we verify
+            break                            # coverage in assemble())
+    return picks

@@ -1,0 +1,61 @@
+"""Preemption handling — the paper's scheduling-flexibility use case:
+
+  "making space for high-priority, real-time workloads by preempting
+   low-priority jobs" — i.e. SIGTERM arrives, the job checkpoints at the
+   next step boundary and exits cleanly; the scheduler later restarts it
+   and it resumes bit-exactly.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+import time
+
+
+class PreemptionGuard:
+    """Installs handlers for `signals`; the training loop polls
+    ``should_preempt`` at step boundaries (checkpointing mid-step is exactly
+    the in-transit-message hazard the drain protocol exists to avoid)."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGUSR1)):
+        self.signals = signals
+        self._flag = threading.Event()
+        self._old = {}
+        self.received_at: float | None = None
+        self.signum: int | None = None
+
+    def _handler(self, signum, frame):
+        self.signum = signum
+        self.received_at = time.time()
+        self._flag.set()
+
+    def __enter__(self):
+        for s in self.signals:
+            self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+        self._old.clear()
+        return False
+
+    @property
+    def should_preempt(self) -> bool:
+        return self._flag.is_set()
+
+    def request(self):
+        """Programmatic preemption (tests / preempt-queue simulation)."""
+        self._handler(signal.SIGUSR1, None)
+
+
+class PreemptQueue:
+    """Tiny priority-scheduler simulation for examples: high-priority
+    arrivals preempt the running low-priority job via its guard."""
+
+    def __init__(self):
+        self.events = []
+
+    def submit_high_priority(self, guard: PreemptionGuard, job: str):
+        self.events.append(("preempt", job, time.time()))
+        guard.request()

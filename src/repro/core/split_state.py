@@ -1,0 +1,113 @@
+"""Split-state model — the JAX adaptation of MANA's split-process approach.
+
+MANA tags application memory as *upper half* (checkpointed) and MPI/network
+libraries as *lower half* (re-instantiated by a trivial MPI application on
+restart). Here:
+
+  upper half  = TrainState: {params, opt, step, rng} (+ DataState, held by
+                the Trainer) — a pure pytree of logical global arrays.
+                This is the ONLY thing checkpoints persist.
+  lower half  = mesh, shardings, compiled executables, device buffers —
+                derived from (config, current topology) at restore time by
+                ``lower_half_bringup`` (the "trivial MPI application").
+
+Because the upper half stores *logical* arrays (global shape + dtype + index
+ranges per shard file), a checkpoint taken on one mesh restores onto any
+other — the M×N portability property, strengthened to elasticity.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..sharding.partition import param_specs
+
+
+# ---------------------------------------------------------------------------
+# upper half
+# ---------------------------------------------------------------------------
+
+def init_train_state(model, optimizer, rng):
+    """Concrete initial state (small models / examples; full-size states are
+    only ever created abstractly or restored shard-by-shard)."""
+    params = model.init(rng)
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jax.numpy.zeros((), jax.numpy.int32),
+        "rng": jax.random.key_data(jax.random.PRNGKey(0)),
+    }
+
+
+def abstract_train_state(model, optimizer, rng=None):
+    """ShapeDtypeStruct pytree of the state — no allocation (dry-run path)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: init_train_state(model, optimizer, r), rng)
+
+
+def state_shardings(abstract_state, mesh: Mesh, optimizer):
+    ps = param_specs(abstract_state["params"], mesh)
+    return {
+        "params": ps,
+        "opt": optimizer.state_sharding(ps, abstract_state["params"], mesh),
+        "step": NamedSharding(mesh, P()),
+        "rng": NamedSharding(mesh, P()),
+    }
+
+
+def with_shardings(abstract_state, shardings):
+    """Attach shardings to a ShapeDtypeStruct tree (for jit .lower())."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        abstract_state, shardings)
+
+
+def leaf_paths(tree):
+    """Stable string path per leaf — checkpoint shard naming ("memory-region
+    table" entries, Lesson 1)."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lower half
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LowerHalfDescriptor:
+    """Recorded in the manifest FOR INFORMATION ONLY — restore never requires
+    any of it to match (that's the point of the split)."""
+    mesh_shape: tuple
+    mesh_axes: tuple
+    n_devices: int
+    runtime: str
+    config_digest: str
+
+    def to_json(self):
+        return asdict(self)
+
+
+def config_digest(cfg) -> str:
+    from dataclasses import asdict as dc_asdict
+    blob = json.dumps(dc_asdict(cfg), sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def lower_half_descriptor(mesh: Mesh, cfg) -> LowerHalfDescriptor:
+    return LowerHalfDescriptor(
+        mesh_shape=tuple(mesh.devices.shape),
+        mesh_axes=tuple(mesh.axis_names),
+        n_devices=mesh.devices.size,
+        runtime=f"jax-{jax.__version__}",
+        config_digest=config_digest(cfg),
+    )

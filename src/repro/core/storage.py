@@ -1,0 +1,166 @@
+"""Two-tier checkpoint storage: burst buffer (fast, node-local) + scratch
+(slow, shared) — the Cori DataWarp-vs-Lustre hierarchy from the paper's Fig 2.
+
+On this box the "burst buffer" is /dev/shm (RAM-backed, real) and "scratch"
+is disk behind a token-bucket bandwidth throttle, so the paper's measured
+hierarchy (>20× checkpoint, ~2.5× restart) is reproducible deterministically.
+
+Also implements the paper's P8: capacity preflight with a coded warning/error
+instead of a mid-write failure.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .errors import SpaceError, warn
+
+
+@dataclass
+class Tier:
+    name: str
+    root: Path
+    bw_bytes_per_s: float | None = None     # None = unthrottled
+    capacity_bytes: int | None = None       # None = filesystem free space
+
+    def __post_init__(self):
+        self.root = Path(self.root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+        self._bucket = 0.0
+        self._last = time.monotonic()
+        self._used = 0
+
+    # --- capacity ---
+    def free_bytes(self) -> int:
+        if self.capacity_bytes is not None:
+            return max(self.capacity_bytes - self._used, 0)
+        st = os.statvfs(self.root)
+        return st.f_bavail * st.f_frsize
+
+    def preflight(self, required_bytes: int, *, headroom: float = 1.1):
+        """Paper P8: warn at <2× requirement, fail below the requirement."""
+        free = self.free_bytes()
+        need = int(required_bytes * headroom)
+        if free < need:
+            raise SpaceError("insufficient space for checkpoint image",
+                             tier=self.name, free=free, required=need)
+        if free < 2 * need:
+            warn("CKPT_W_SPACE", "checkpoint space headroom below 2x",
+                 tier=self.name, free=free, required=need)
+
+    # --- throttled IO ---
+    def _throttle(self, nbytes: int):
+        if not self.bw_bytes_per_s:
+            return
+        with self._lock:
+            now = time.monotonic()
+            self._bucket = min(self._bucket + (now - self._last)
+                               * self.bw_bytes_per_s, self.bw_bytes_per_s)
+            self._last = now
+            self._bucket -= nbytes
+            deficit = -self._bucket
+        if deficit > 0:
+            time.sleep(deficit / self.bw_bytes_per_s)
+
+    def write_file(self, rel: str, data: bytes):
+        path = self.root / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        chunk = 4 << 20
+        with open(path, "wb") as f:
+            for i in range(0, len(data), chunk):
+                piece = data[i:i + chunk]
+                self._throttle(len(piece))
+                f.write(piece)
+            f.flush()
+            os.fsync(f.fileno())
+        self._used += len(data)
+        return path
+
+    def read_file(self, rel: str) -> bytes:
+        path = self.root / rel
+        data = path.read_bytes()
+        self._throttle(len(data))
+        return data
+
+
+class TieredStore:
+    """Writes land on the fast tier; committed checkpoints drain to the slow
+    tier in the background (real burst-buffer semantics). Reads prefer fast.
+    """
+
+    def __init__(self, fast: Tier, slow: Tier | None = None,
+                 drain_async: bool = True):
+        self.fast = fast
+        self.slow = slow
+        self.drain_async = drain_async
+        self._drainer: threading.Thread | None = None
+        self._drain_err = None
+
+    @property
+    def root(self) -> Path:
+        return self.fast.root
+
+    def tiers(self):
+        return [t for t in (self.fast, self.slow) if t is not None]
+
+    def drain_step(self, step_dir_name: str):
+        """Copy a committed checkpoint dir fast→slow (throttled)."""
+        if self.slow is None:
+            return
+        src = self.fast.root / step_dir_name
+
+        def _copy():
+            try:
+                for p in sorted(src.rglob("*")):
+                    if p.is_file():
+                        rel = str(Path(step_dir_name) / p.relative_to(src))
+                        self.slow.write_file(rel, p.read_bytes())
+            except Exception as e:  # noqa
+                self._drain_err = e
+
+        if self.drain_async:
+            self.wait_drained()
+            self._drainer = threading.Thread(target=_copy, daemon=True)
+            self._drainer.start()
+        else:
+            _copy()
+
+    def wait_drained(self):
+        if self._drainer is not None:
+            self._drainer.join()
+            self._drainer = None
+        if self._drain_err is not None:
+            e, self._drain_err = self._drain_err, None
+            raise e
+
+    def locate(self, rel: str) -> Tier | None:
+        for t in self.tiers():
+            if (t.root / rel).exists():
+                return t
+        return None
+
+    def evict_fast(self, step_dir_name: str):
+        """Free burst-buffer space once a step is safely on the slow tier."""
+        if self.slow is None:
+            return
+        self.wait_drained()
+        shutil.rmtree(self.fast.root / step_dir_name, ignore_errors=True)
+
+
+def default_store(workdir: str | Path, *, burst_buffer: bool = True,
+                  lustre_bw: float | None = 500e6) -> TieredStore:
+    """fast = /dev/shm (if available), slow = <workdir>/scratch (throttled)."""
+    workdir = Path(workdir)
+    shm = Path("/dev/shm")
+    if burst_buffer and shm.exists() and os.access(shm, os.W_OK):
+        fast = Tier("burst-buffer", shm / f"repro-bb-{os.getpid()}" /
+                    workdir.name)
+    else:
+        fast = Tier("local", workdir / "bb")
+    slow = Tier("scratch-sim", workdir / "scratch", bw_bytes_per_s=lustre_bw)
+    return TieredStore(fast, slow)

@@ -1,0 +1,3 @@
+from .pipeline import DataState, SyntheticPipeline
+
+__all__ = ["DataState", "SyntheticPipeline"]

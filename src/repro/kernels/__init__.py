@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>/{kernel.py, ops.py, ref.py}: the pallas_call with
+explicit BlockSpec VMEM tiling, a jit'd wrapper, and the pure-jnp oracle it
+is validated against (interpret=True on CPU; see tests/test_kernels_*).
+
+The paper itself is infrastructure (C/R) with no kernel-level contribution -
+these kernels serve the framework's perf-critical layers (attention at 32k,
+norms) and the paper's stated future work of reducing checkpoint overhead
+(ckpt_codec: on-device int8 block quantization before D2H transfer).
+"""

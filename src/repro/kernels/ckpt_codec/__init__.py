@@ -1,0 +1,5 @@
+from .ops import dequantize_blocks, quantize_blocks
+from .ref import dequantize_reference, quantize_reference
+
+__all__ = ["dequantize_blocks", "quantize_blocks", "dequantize_reference",
+           "quantize_reference"]

@@ -1,0 +1,29 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK, dequantize_blocks_2d, quantize_blocks_2d
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize_blocks(x, *, interpret=False):
+    """x: any shape/float dtype -> (q int8 (padded flat,), scales (nb,), n)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(-1, BLOCK)
+    q, s = quantize_blocks_2d(xb, interpret=interpret)
+    return q.reshape(-1), s
+
+
+@partial(jax.jit, static_argnames=("n", "out_dtype", "interpret"))
+def dequantize_blocks(q, scales, *, n, out_dtype=jnp.float32,
+                      interpret=False):
+    xb = dequantize_blocks_2d(q.reshape(-1, BLOCK), scales,
+                              out_dtype=out_dtype, interpret=interpret)
+    return xb.reshape(-1)[:n]

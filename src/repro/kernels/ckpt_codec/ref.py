@@ -1,0 +1,14 @@
+"""Oracle = the host-side numpy codec used by the checkpoint writer."""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.codec import BLOCK, dequantize_int8, quantize_int8
+
+
+def quantize_reference(x: np.ndarray):
+    return quantize_int8(np.asarray(x))
+
+
+def dequantize_reference(q: np.ndarray, scales: np.ndarray, n: int):
+    return dequantize_int8(np.asarray(q), np.asarray(scales), n)

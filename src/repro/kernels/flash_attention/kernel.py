@@ -1,0 +1,150 @@
+"""Flash-attention Pallas TPU kernel (forward).
+
+TPU adaptation notes (vs the CUDA algorithm):
+  * grid = (batch, q_heads, q_blocks, kv_blocks); the LAST dim is the
+    sequential ("arbitrary") dimension on TPU — the online-softmax state
+    (m, l, acc) lives in VMEM scratch and persists across kv iterations,
+    replacing CUDA's shared-memory tile loop.
+  * blocks are (block_q × head_dim) / (block_k × head_dim) VMEM tiles sized
+    to MXU-friendly multiples of 128 lanes.
+  * GQA is indexed, not materialized: the k/v BlockSpec index_map maps query
+    head h to kv head h // group — no repeated KV in HBM (the XLA fallback
+    path pays that 8× read amplification; the kernel does not).
+  * causal/window masking skips fully-masked kv blocks via pl.when — the
+    2× causal waste of the XLA online-softmax path disappears.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, softcap, sq, sk, block_q, block_k):
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+    i = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    # skip blocks that the causal/window mask rules out entirely
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(
+            run, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap and softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = (qpos < sq) & (kpos < sk)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+            if not causal:
+                mask &= kpos - qpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0, softcap=0.0,
+                         scale=None, block_q=128, block_k=128,
+                         interpret=False):
+    """q: (B, H, Sq, D); k, v: (B, K, Sk, D) with H % K == 0. Returns
+    (B, H, Sq, D). Sq/Sk padded to block multiples internally."""
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // block_q
+    nk = (Sk + pk) // block_k
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        sq=Sq, sk=Sk, block_q=block_q, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, _G=G: (b, h // _G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, _G=G: (b, h // _G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,)),
+            _vmem((block_q,)),
+            _vmem((block_q, D)),
+        ],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _tpu_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    except Exception:  # noqa - older pallas API
+        return None

@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model-layout (B, S, H, D) tensors used across repro.models and
+handles transposition + padding. ``interpret=True`` executes the kernel body
+on CPU for validation; on TPU the same call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, K, D) -> (B, Sq, H, D)."""
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    ot = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                              softcap=softcap, scale=scale, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    return jnp.transpose(ot, (0, 2, 1, 3))

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive O(S²) attention)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q: (B, H, Sq, D); k, v: (B, K, Sk, D). Returns (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kh = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vh = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kh)
+    if softcap and softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+        if not causal:
+            mask &= kpos - qpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+    return o.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import rmsnorm_fused
+from .ref import rmsnorm_reference
+
+__all__ = ["rmsnorm_fused", "rmsnorm_reference"]

@@ -1,0 +1,43 @@
+"""Fused RMSNorm Pallas kernel: one HBM round-trip per row block.
+
+VMEM tiling: (block_rows, D) input tile + (D,) scale, f32 math inside the
+tile, single fused multiply on the way out — the XLA fallback materializes
+the f32 upcast and the mean-square reduction separately.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))).astype(
+        o_ref.dtype)
+
+
+def rmsnorm_rows(x, scale, *, eps=1e-6, block_rows=256, interpret=False):
+    """x: (N, D); scale: (D,) — gemma (1+scale) convention."""
+    N, D = x.shape
+    block_rows = min(block_rows, max(N, 1))
+    pad = (-N) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = ((N + pad) // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N + pad, D), x.dtype),
+        interpret=interpret,
+    )(x, scale)
+    return out[:N]

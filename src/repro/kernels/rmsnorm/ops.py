@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import rmsnorm_rows
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_fused(x, scale, *, eps=1e-6, block_rows=256, interpret=False):
+    """x: (..., D); scale: (D,)."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = rmsnorm_rows(flat, scale, eps=eps, block_rows=block_rows,
+                       interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: .lower().compile() must succeed on the 16×16 single-pod mesh and
+the 2×16×16 multi-pod mesh for every runnable cell, and its
+memory_analysis()/cost_analysis()/HLO-collective census feed EXPERIMENTS.md
+§Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (CONFIGS, SHAPES, applicable, get_config, param_counts,
+                       reduced)
+from ..models import Model
+from ..models.model import set_constrainer, set_exec_mesh
+from ..optim import make_optimizer
+from ..sharding.partition import (act_constrainer, batch_spec, cache_specs,
+                                  mesh_axes, param_specs)
+from ..core.split_state import (abstract_train_state, state_shardings,
+                                with_shardings)
+from ..train.steps import make_serve_fns, make_train_step
+from .hlo_analysis import analyze, op_census
+from .mesh import HW, make_production_mesh
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _attach(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encoder":
+        if shape.kind in ("train",):
+            tree = {
+                "features": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+            }
+        else:  # encode "prefill"
+            tree = {"features": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                     jnp.bfloat16)}
+    elif shape.kind == "decode":
+        tree = {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    else:
+        tree = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return _attach(tree, batch_spec(tree, mesh, cfg))
+
+
+def prepare_cell(arch, shape_name, mesh, overrides=None, *,
+                 grad_accum=1, accum_dtype=None):
+    """Build (jitted_fn, example_args) for one cell, with shardings attached."""
+    from dataclasses import replace
+
+    cfg = get_config(arch)
+    if overrides:
+        overrides = dict(overrides)
+        ssm_chunk = overrides.pop("ssm_chunk", None)
+        if ssm_chunk and cfg.ssm is not None:
+            cfg = replace(cfg, ssm=replace(cfg.ssm, chunk_size=ssm_chunk))
+        cfg = replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ax = mesh_axes(mesh)
+    if cfg.n_heads and ax.tp > 1 and cfg.n_heads % ax.tp != 0:
+        # heads don't divide TP: fall back to sequence-parallel attention
+        # (see sharding/partition.py docstring)
+        cfg = replace(cfg, seq_shard_attn=True)
+    set_constrainer(act_constrainer(cfg, mesh))
+    set_exec_mesh(mesh)
+    model = Model(cfg)
+    optimizer = make_optimizer(cfg)
+
+    if shape.kind == "train":
+        state = abstract_train_state(model, optimizer)
+        sh = state_shardings(state, mesh, optimizer)
+        state = _attach(state, sh)
+        batch = input_specs(cfg, shape, mesh)
+        step = make_train_step(model, optimizer, grad_accum=grad_accum,
+                               accum_dtype=accum_dtype)
+        fn = jax.jit(step, donate_argnums=(0,), out_shardings=(sh, None))
+        return fn, (state, batch), cfg
+
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    psh = param_specs(params, mesh)
+    params = _attach(params, psh)
+
+    if shape.kind == "prefill":
+        prefill_fn, decode_fn, encode_fn = make_serve_fns(model)
+        batch = input_specs(cfg, shape, mesh)
+        if cfg.family == "encoder":
+            fn = jax.jit(lambda p, feats: encode_fn(p, feats))
+            return fn, (params, batch["features"]), cfg
+        fn = jax.jit(prefill_fn)
+        return fn, (params, batch["tokens"]), cfg
+
+    # decode: one token with a KV cache of seq_len
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    csh = cache_specs(cache, mesh, cfg)
+    cache = _attach(cache, csh)
+    tokens = input_specs(cfg, shape, mesh)["tokens"]
+    _, decode_fn, _ = make_serve_fns(model)
+    fn = jax.jit(decode_fn, donate_argnums=(1,))
+    return fn, (params, cache, tokens), cfg
+
+
+def model_flops(cfg, shape) -> float:
+    """Assigned formula: 6·N·D (train) / 2·N·D (inference), N = active matmul
+    params incl. the LM head, D = tokens processed this step."""
+    pc = param_counts(cfg)
+    n = pc["n_active_matmul"] + cfg.d_model * cfg.vocab_size
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch, shape_name, mesh_kind, *, keep_hlo=False, overrides=None,
+             grad_accum=1, accum_dtype=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "skipped", "reason": reason}
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    if grad_accum != 1:
+        rec["grad_accum"] = grad_accum
+        rec["accum_dtype"] = str(accum_dtype)
+    if not ok:
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        fn, args, cfg2 = prepare_cell(arch, shape_name, mesh, overrides,
+                                      grad_accum=grad_accum,
+                                      accum_dtype=accum_dtype)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        an = analyze(hlo, total_devices=n_chips)
+        census = op_census(hlo)
+        # trip-weighted per-device figures (cost_analysis counts loop bodies
+        # once — see hlo_analysis docstring); raw values kept for comparison
+        flops_dev = an["flops"]
+        bytes_dev = an["hbm_bytes"]
+        coll = {"per_kind": an["collectives"],
+                "wire_bytes_per_device": an["wire_bytes"]}
+        mf = model_flops(cfg2, shape)
+        terms = roofline_terms(flops_dev, bytes_dev,
+                               coll["wire_bytes_per_device"])
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "n_chips": n_chips,
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "raw_cost_analysis": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0)),
+            },
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_est": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            "collectives": coll,
+            "op_census": census,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_chips,
+            "useful_flops_fraction": (mf / n_chips) / flops_dev
+            if flops_dev else 0.0,
+            "roofline": terms,
+        })
+        if keep_hlo:
+            hdir = ART_DIR / "hlo"
+            hdir.mkdir(parents=True, exist_ok=True)
+            (hdir / f"{arch}__{shape_name}__{mesh_kind}.txt").write_text(hlo)
+    except Exception as e:  # noqa
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    finally:
+        set_constrainer(None)
+        set_exec_mesh(None)
+    return rec
+
+
+def roofline_terms(flops_dev, bytes_dev, wire_bytes_dev):
+    t_c = flops_dev / HW["peak_flops_bf16"]
+    t_m = bytes_dev / HW["hbm_bw"]
+    t_n = wire_bytes_dev / HW["ici_bw"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))
+    step = max(t_c, t_m, t_n)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom[1],
+        "bound_step_s": step,
+        "roofline_fraction": (t_c / step) if step else 0.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default=str(ART_DIR))
+    ap.add_argument("--preset", action="store_true",
+                    help="apply the per-arch production parallelism preset "
+                         "(configs/presets.py; the §Perf winners)")
+    ap.add_argument("--moe-impl", default=None, choices=["gspmd", "shard_map"])
+    ap.add_argument("--dp-over-model", action="store_true")
+    ap.add_argument("--remat", default=None,
+                    choices=["nothing", "dots", "full", "offload_resid"])
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--seq-shard-resid", action="store_true")
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--accum-dtype", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+    if args.dp_over_model:
+        overrides["dp_over_model"] = True
+    if args.remat:
+        overrides["remat_policy"] = args.remat
+    if args.attn_chunk:
+        overrides["attn_chunk"] = args.attn_chunk
+    if args.seq_shard_resid:
+        overrides["seq_shard_resid"] = True
+    if args.ssm_chunk:
+        overrides["ssm_chunk"] = args.ssm_chunk
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in sorted(CONFIGS) for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape_name in cells:
+        for mk in meshes:
+            path = out_dir / f"{arch}__{shape_name}__{mk}.json"
+            cell_over = dict(overrides)
+            if args.preset:
+                from ..configs.presets import preset_overrides
+                cell_over = {**preset_overrides(arch), **cell_over}
+            rec = run_cell(arch, shape_name, mk, keep_hlo=args.keep_hlo,
+                           overrides=cell_over or None,
+                           grad_accum=args.grad_accum,
+                           accum_dtype=args.accum_dtype)
+            path.write_text(json.dumps(rec, indent=1))
+            tag = rec["status"]
+            extra = ""
+            if tag == "ok":
+                r = rec["roofline"]
+                extra = (f" compile={rec['compile_s']}s"
+                         f" dom={r['dominant']}"
+                         f" frac={r['roofline_fraction']:.2f}"
+                         f" mem={rec['memory']['peak_bytes_est']/2**30:.2f}GiB")
+            elif tag == "error":
+                n_fail += 1
+                extra = " " + rec["error"][:160]
+            print(f"[{tag:7s}] {arch} × {shape_name} × {mk}{extra}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

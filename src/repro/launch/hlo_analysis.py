@@ -1,0 +1,296 @@
+"""Trip-weighted cost analysis over post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — for a
+framework whose layers run under ``lax.scan`` that undercounts FLOPs by the
+scan length. XLA annotates static trip counts
+(``backend_config={"known_trip_count":{"n":...}}``), so we walk the HLO call
+graph (ENTRY → while/fusion/call computations), multiply each computation's
+intrinsic costs by its execution count, and report:
+
+  * flops            — dot/convolution FLOPs (2·|result|·contraction)
+  * hbm_bytes        — Σ (operand + result bytes) over compute ops; fusions
+                       count only their boundary traffic (the right HBM model)
+  * collectives      — result bytes and ring wire bytes per collective kind
+
+All figures are per-device (the HLO module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\\\":{]+n[\\\":]+(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{(.+?)\}\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "copy-start", "copy-done", "iota", "partition-id", "replica-id",
+} | set(COLLECTIVE_KINDS) | {k + "-start" for k in COLLECTIVE_KINDS} \
+  | {k + "-done" for k in COLLECTIVE_KINDS}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _split_args(line: str) -> str:
+    i = line.find("(")
+    depth = 0
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[i + 1:j]
+    return line[i + 1:]
+
+
+class _Op:
+    __slots__ = ("kind", "type_str", "line", "name")
+
+    def __init__(self, name, kind, type_str, line):
+        self.name = name
+        self.kind = kind
+        self.type_str = type_str
+        self.line = line
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_ARGNAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_computations(text: str):
+    """Returns (comps, symtab): symtab maps op name -> result type string
+    (operand shapes are NOT printed inline in compiled HLO dumps)."""
+    comps = {}
+    symtab = {}
+    cur = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line[0].isspace():
+            m = _COMP_RE.match(line.strip().rstrip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = {"ops": [], "entry": line.lstrip().startswith("ENTRY")}
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            nm = _NAME_RE.match(line)
+            name = nm.group(1) if nm else ""
+            op = _Op(name, m.group(2), m.group(1), line)
+            comps[cur]["ops"].append(op)
+            if name:
+                symtab[name] = m.group(1)
+    return comps, symtab
+
+
+def _operand_types(op: _Op, symtab: dict):
+    args = _split_args(op.line)
+    out = []
+    for name in _ARGNAME_RE.findall(args):
+        t = symtab.get(name)
+        if t:
+            out.append(t)
+    return out
+
+
+def _dot_flops(op: _Op, symtab: dict) -> float:
+    result = 1
+    for d in _first_shape_dims(op.type_str):
+        result *= d
+    lhs_m = _LHS_C_RE.search(op.line)
+    contract = 1
+    if lhs_m is not None:
+        operands = _operand_types(op, symtab)
+        if operands:
+            lhs_dims = _first_shape_dims(operands[0])
+            idxs = [int(i) for i in lhs_m.group(1).split(",") if i]
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * result * contract
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}", 1)[0]
+        return first.count(",") + 1
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+def _wire_factor(kind: str, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    f = (group - 1) / group
+    if kind == "all-reduce":
+        return 2.0 * f
+    if kind == "collective-permute":
+        return 1.0
+    return f
+
+
+def analyze(hlo_text: str, total_devices: int = 1) -> dict:
+    comps, symtab = _parse_computations(hlo_text)
+
+    # computations called by fusion ops / reduction lambdas: their interior
+    # ops never touch HBM — flops still count, bytes do not.
+    fused_bodies = set()
+    lambda_bodies = set()
+    for c in comps.values():
+        for op in c["ops"]:
+            if op.kind == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    fused_bodies.add(m.group(1))
+            else:
+                m = _TO_APPLY_RE.search(op.line)
+                if m:
+                    lambda_bodies.add(m.group(1))
+
+    # --- per-computation intrinsic costs and call edges ---
+    intr = {}
+    edges = defaultdict(list)  # comp -> [(child, mult)]
+    for name, c in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        count_bytes = name not in fused_bodies and name not in lambda_bodies
+        colls = defaultdict(lambda: {"count": 0.0, "result_bytes": 0.0,
+                                     "wire_bytes": 0.0, "max_group": 1})
+        for op in c["ops"]:
+            k = op.kind
+            if k in ("dot", "convolution"):
+                flops += _dot_flops(op, symtab)
+            base = k[:-6] if k.endswith("-start") else k
+            if base in COLLECTIVE_KINDS and not k.endswith("-done"):
+                g = _group_size(op.line, total_devices)
+                nb = _shape_bytes(op.type_str)
+                s = colls[base]
+                s["count"] += 1
+                s["result_bytes"] += nb
+                s["wire_bytes"] += nb * _wire_factor(base, g)
+                s["max_group"] = max(s["max_group"], g)
+            if k == "while":
+                t = 1
+                m = _TRIP_RE.search(op.line)
+                if m:
+                    t = int(m.group(1))
+                b = _BODY_RE.search(op.line)
+                cd = _COND_RE.search(op.line)
+                if b:
+                    edges[name].append((b.group(1), t))
+                if cd:
+                    edges[name].append((cd.group(1), t + 1))
+            elif k == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    edges[name].append((m.group(1), 1))
+            elif k in ("call", "custom-call", "reduce", "scatter", "sort",
+                       "map", "reduce-window", "select-and-scatter"):
+                m = _TO_APPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+                if m:
+                    edges[name].append((m.group(1), 1))
+            elif k == "conditional":
+                m = _BRANCHES_RE.search(op.line)
+                if m:
+                    for br in m.group(1).split(","):
+                        edges[name].append((br.strip().lstrip("%"), 1))
+            if count_bytes and k not in _SKIP_BYTES_OPS:
+                operand_bytes = sum(_shape_bytes(t)
+                                    for t in _operand_types(op, symtab))
+                bytes_ += _shape_bytes(op.type_str) + operand_bytes
+        intr[name] = {"flops": flops, "bytes": bytes_, "colls": dict(colls)}
+
+    # --- propagate multipliers from ENTRY ---
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    memo = {}
+
+    def total(name):
+        if name in memo:
+            return memo[name]
+        base = intr.get(name, {"flops": 0.0, "bytes": 0.0, "colls": {}})
+        f, b = base["flops"], base["bytes"]
+        colls = {k: dict(v) for k, v in base["colls"].items()}
+        memo[name] = {"flops": f, "bytes": b, "colls": colls}  # cycle guard
+        for child, mult in edges.get(name, ()):
+            ct = total(child)
+            f += mult * ct["flops"]
+            b += mult * ct["bytes"]
+            for k, v in ct["colls"].items():
+                s = colls.setdefault(k, {"count": 0.0, "result_bytes": 0.0,
+                                         "wire_bytes": 0.0, "max_group": 1})
+                s["count"] += mult * v["count"]
+                s["result_bytes"] += mult * v["result_bytes"]
+                s["wire_bytes"] += mult * v["wire_bytes"]
+                s["max_group"] = max(s["max_group"], v["max_group"])
+        memo[name] = {"flops": f, "bytes": b, "colls": colls}
+        return memo[name]
+
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collectives": {},
+                "wire_bytes": 0.0}
+    t = total(entry)
+    wire = sum(v["wire_bytes"] for v in t["colls"].values())
+    return {
+        "flops": t["flops"],
+        "hbm_bytes": t["bytes"],
+        "collectives": t["colls"],
+        "wire_bytes": wire,
+    }
+
+
+def op_census(hlo_text: str, ops=("fusion", "convolution", "dot", "scatter",
+                                  "gather", "transpose",
+                                  "dynamic-slice", "dynamic-update-slice",
+                                  "while", "all-gather", "all-reduce",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute")):
+    counts = {}
+    for op in ops:
+        counts[op] = len(re.findall(rf"\s{op}\(", hlo_text))
+    return counts

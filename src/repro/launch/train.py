@@ -1,0 +1,68 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a REDUCED config end-to-end on local devices (the full configs are
+exercised by the dry-run; this box is CPU-only). Demonstrates the paper's
+full production path: restore-on-start → train → periodic async checkpoints
+→ preempt-safe exit, with the AOT compile cache standing in for
+statically-linked-binary startup.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+from ..configs import ARCH_IDS, get_config, reduced
+from ..train.loop import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--workdir", default="runs/train")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--codec", default="zstd",
+                    choices=["raw", "zstd", "int8"])
+    ap.add_argument("--params-codec", default=None)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--writers", type=int, default=4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-ckpt", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full-size config (only sane on real pods)")
+    ap.add_argument("--preset", action="store_true",
+                    help="apply the per-arch production parallelism preset")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(
+        level=logging.INFO,
+        format="%(asctime)s %(name)s %(levelname)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.preset:
+        from dataclasses import replace
+        from ..configs.presets import preset_overrides
+        ov = preset_overrides(args.arch)
+        if ov:
+            cfg = replace(cfg, **ov)
+    if not args.full_config:
+        cfg = reduced(cfg)
+    tcfg = TrainerConfig(
+        workdir=f"{args.workdir}/{args.arch}", batch=args.batch,
+        seq_len=args.seq_len, ckpt_every=args.ckpt_every,
+        async_ckpt=not args.sync_ckpt, codec=args.codec,
+        params_codec=args.params_codec, replicas=args.replicas,
+        n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed)
+    trainer = Trainer(cfg, tcfg).init_or_restore()
+    report = trainer.fit(args.steps)
+    print(f"status={report['status']} step={report['step']} "
+          f"ckpt={report['ckpt_metrics']}")
+    if report["history"]:
+        print("final:", report["history"][-1])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

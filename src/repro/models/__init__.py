@@ -1,0 +1,4 @@
+from .model import Model, chunked_xent
+from . import layers, moe, rglru, ssm
+
+__all__ = ["Model", "chunked_xent", "layers", "moe", "rglru", "ssm"]

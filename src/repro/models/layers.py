@@ -1,0 +1,374 @@
+"""Shared neural-net layers: norms, rope, MLPs, chunked-online-softmax attention.
+
+Attention here is the **XLA path**: a flash-style online-softmax computed with
+``lax.scan`` over KV chunks so S×S score matrices are never materialized (this
+is mandatory for the 32k-prefill and 500k-decode assigned shapes). The Pallas
+kernel in ``repro.kernels.flash_attention`` implements the same math for the
+TPU target and is validated against ``attention_reference`` below.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, *, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    # gemma convention: scale is a (1 + s) multiplier
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(params, x, cfg):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params.get("bias"))
+
+
+def init_norm(cfg, d):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), _pdt(cfg))}  # (1+s) convention
+    p = {"scale": jnp.ones((d,), _pdt(cfg))}
+    if cfg.use_bias:
+        p["bias"] = jnp.zeros((d,), _pdt(cfg))
+    return p
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def rope_table(positions, head_dim, theta, rope_pct=1.0):
+    """cos/sin tables for (partial) rotary embedding.
+
+    positions: (...,) int32 -> (cos, sin) each (..., rot_dim/2) float32.
+    """
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang), rot_dim
+
+
+def apply_rope(x, cos, sin, rot_dim):
+    """x: (..., S, H, D); cos/sin: (S, rot/2) broadcast over batch/heads."""
+    if rot_dim == 0:
+        return x
+    dt = x.dtype
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]  # (S, 1, rot/2) to broadcast over heads
+    s = sin[..., :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1.astype(dt), y2.astype(dt), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+def _act(name):
+    return jax.nn.silu if name == "silu" else partial(jax.nn.gelu, approximate=True)
+
+
+def mlp_apply(params, x, cfg):
+    act = _act(cfg.act)
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, params["wg"])
+        u = jnp.einsum("...d,df->...f", x, params["wu"])
+        h = act(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        if "bi" in params:
+            h = h + params["bi"]
+        h = act(h)
+    y = jnp.einsum("...f,fd->...d", h, params["wd"])
+    if "bd" in params:
+        y = y + params["bd"]
+    return y
+
+
+def init_mlp(key, cfg, d, ff):
+    dt = _pdt(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    if cfg.gated_mlp:
+        p = {
+            "wg": (jax.random.normal(k1, (d, ff)) * s_in).astype(dt),
+            "wu": (jax.random.normal(k2, (d, ff)) * s_in).astype(dt),
+            "wd": (jax.random.normal(k3, (ff, d)) * s_out).astype(dt),
+        }
+    else:
+        p = {
+            "wi": (jax.random.normal(k1, (d, ff)) * s_in).astype(dt),
+            "wd": (jax.random.normal(k3, (ff, d)) * s_out).astype(dt),
+        }
+        if cfg.use_bias:
+            p["bi"] = jnp.zeros((ff,), dt)
+    if cfg.use_bias:
+        p["bd"] = jnp.zeros((d,), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention — XLA chunked online-softmax paths
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _softcap(s, cap):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+def attention_reference(q, k, v, *, causal, window=0, softcap=0.0, scale=None,
+                        q_start=0):
+    """Naive O(S²) oracle. q:(B,Sq,H,D) k,v:(B,Skv,K,D). Used by tests only."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale or 1.0 / math.sqrt(D)
+    qf = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf * scale, k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    qpos = q_start + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _expand_kv(k, n_heads):
+    """(B, S, K, D) -> (B, S, H, D) by repeating each KV head H/K times.
+
+    GQA sharding note: attention score einsums index heads by H (not (K, G))
+    so the head dim shards cleanly over the "model" mesh axis whenever
+    H % tp == 0 even if K < tp. The repeat is a gather; when H is sharded,
+    each device only materializes its own head slice.
+    """
+    K = k.shape[2]
+    if K == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // K, axis=2)
+
+
+def attention_full(q, k, v, *, causal, softcap=0.0, scale=None, chunk=1024,
+                   chunk_q=0, q_start=0):
+    """Online-softmax, doubly chunked (q and kv) — never builds S×S and keeps
+    per-step score blocks at (B, H, chunk_q, chunk) regardless of S.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, K, D) with H % K == 0.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(D)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    ck = min(chunk, Skv)
+    cq = min(chunk_q or chunk, Sq)
+    pad_k = (-Skv) % ck
+    pad_q = (-Sq) % cq
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nk = (Skv + pad_k) // ck
+    nq = (Sq + pad_q) // cq
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 2, 3, 4)
+    qc = (q.reshape(B, nq, cq, H, D) * scale).astype(q.dtype).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, xs_q):
+        qi, qb = xs_q
+
+        # flash-style backward: remat each kv step so (B,H,cq,ck) score
+        # blocks are recomputed per-chunk in the VJP instead of being saved
+        # stacked across the scan (they dominated peak memory otherwise)
+        @partial(jax.checkpoint,
+                 policy=jax.checkpoint_policies.nothing_saveable,
+                 prevent_cse=False)
+        def kv_body(carry, xs_kv):
+            m, l, acc = carry
+            ki, kb, vb = xs_kv
+            s = jnp.einsum("bqhd,bchd->bhqc", qb, kb,
+                           preferred_element_type=jnp.float32)
+            s = _softcap(s, softcap)
+            qpos = q_start + qi * cq + jnp.arange(cq)
+            kpos = ki * ck + jnp.arange(ck)
+            msk = (kpos[None, :] < Skv) & (qpos[:, None] < q_start + Sq)
+            if causal:
+                msk = msk & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqc,bchd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.transpose(0, 2, 1, 3)  # (B, cq, H, D)
+
+    _, oc = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, H, D)
+    return o[:, :Sq].astype(q.dtype)
+
+
+def attention_local(q, k, v, *, window, softcap=0.0, scale=None, chunk=1024,
+                    causal=True):
+    """Sliding-window attention, linear in S: scan over q chunks, each
+    attending a static (chunk + window)-wide KV span. Requires q/k aligned
+    (self-attention over the same positions)."""
+    B, S, H, D = q.shape
+    scale = scale or 1.0 / math.sqrt(D)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    cq = min(chunk, S)
+    pad_q = (-S) % cq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = (S + pad_q) // cq
+    W = window
+    kp = jnp.pad(k, ((0, 0), (W, pad_q), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, pad_q), (0, 0), (0, 0)))
+    qc = q.reshape(B, nq, cq, H, D).transpose(1, 0, 2, 3, 4)
+    span = cq + W
+
+    @partial(jax.checkpoint,
+             policy=jax.checkpoint_policies.nothing_saveable,
+             prevent_cse=False)
+    def body(_, xs):
+        i, qb = xs
+        qb = (qb * scale).astype(q.dtype)
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * cq, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * cq, span, axis=1)
+        s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                       preferred_element_type=jnp.float32)
+        s = _softcap(s, softcap)
+        # absolute positions: q = i*cq + aq ; kv = i*cq + ak - W
+        aq = jnp.arange(cq)[:, None]
+        ak = jnp.arange(span)[None, :]
+        qpos = i * cq + aq
+        kpos = i * cq + ak - W
+        msk = (kpos >= 0) & (qpos < S)
+        if causal:
+            msk &= (qpos >= kpos) & (qpos - kpos < W)
+        else:
+            msk &= jnp.abs(qpos - kpos) < W
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+        return None, o
+
+    _, oc = jax.lax.scan(body, None, (jnp.arange(nq), qc))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, H, D)
+    return o[:, :S].astype(q.dtype)
+
+
+def attention_decode(q, k, v, *, kv_len, window=0, softcap=0.0, scale=None,
+                     pos=None):
+    """Single-token decode over a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, D); k, v: (B, Smax, K, D); kv_len: number of valid entries.
+    For ring buffers (window caches), entries are valid iff slot < min(len, Smax).
+    """
+    B, _, H, D = q.shape
+    Smax, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale or 1.0 / math.sqrt(D)
+    qf = (q.reshape(B, K, G, D) * scale)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k, preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    valid = jnp.arange(Smax)[None, :] < jnp.minimum(kv_len, Smax)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv positional embedding (HuBERT) and causal conv1d (mamba/rglru)
+# ---------------------------------------------------------------------------
+
+def conv_pos_embed(params, x):
+    """Depthwise same-padded conv positional embedding (w2v2/HuBERT style).
+
+    Implemented as a real grouped convolution: the obvious
+    stack-of-shifted-slices formulation materializes a width(=128)×
+    activation tensor — 21 GiB/device at hubert train_4k (§Perf hillclimb:
+    this one change removed ~80 GiB of peak temp)."""
+    w = params["w"]  # (width, d)
+    width, d = w.shape
+    dn = jax.lax.conv_dimension_numbers(
+        x.shape, (width, 1, d), ("NWC", "WIO", "NWC"))
+    pos = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32).reshape(width, 1, d),
+        window_strides=(1,),
+        padding=[(width // 2, width - 1 - width // 2)],
+        dimension_numbers=dn,
+        feature_group_count=d)
+    return x + jax.nn.gelu(pos).astype(x.dtype)
+
+
+def causal_conv1d(x, w, b=None, *, state=None):
+    """Causal depthwise conv. x: (B, S, C); w: (width, C).
+
+    If state (B, width-1, C) is given, it is prepended (decode) and the new
+    state returned; else zero history (train/prefill).
+    """
+    width = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    new_state = xp[:, -(width - 1):] if width > 1 else hist
+    return out.astype(x.dtype), new_state

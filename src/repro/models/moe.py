@@ -1,0 +1,137 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch via scatter/gather.
+
+Design notes (roofline-driven):
+  * The classic GShard one-hot dispatch einsum costs O(T·E·C·D) matmul FLOPs —
+    for kimi-k2 (E=384) that exceeds the expert FLOPs themselves and would
+    poison the HLO-FLOPs roofline term. We instead dispatch with
+    scatter/gather (no matmul FLOPs) so HLO compute ≈ active-parameter
+    compute.
+  * Tokens are processed in groups (GSPMD-friendly): group axis shards over
+    ("pod","data"), expert axis of the packed buffer shards over "model" (EP);
+    XLA inserts the all-to-all at the expert einsum boundary.
+  * position-in-expert is computed with a chunked cumulative count (bounded
+    memory, no (T·k, E) one-hot materialization).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _act, _pdt, init_mlp, mlp_apply
+
+
+def capacity(mcfg, group_tokens: int) -> int:
+    c = math.ceil(mcfg.top_k * group_tokens * mcfg.capacity_factor / mcfg.n_experts)
+    return max(16, -(-c // 16) * 16)  # round up to multiple of 16 (MXU lanes)
+
+
+def init_moe(key, cfg, d):
+    m = cfg.moe
+    dt = _pdt(cfg)
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(m.d_expert)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, m.n_experts)) * s_in).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (m.n_experts, d, m.d_expert)) * s_in).astype(dt),
+        "wu": (jax.random.normal(ks[2], (m.n_experts, d, m.d_expert)) * s_in).astype(dt),
+        "wd": (jax.random.normal(ks[3], (m.n_experts, m.d_expert, d)) * s_out).astype(dt),
+    }
+    if m.n_shared_experts:
+        shared_ff = m.d_expert * m.n_shared_experts
+        p["shared"] = init_mlp(ks[4], cfg, d, shared_ff)
+    return p
+
+
+def _positions_in_expert(idx_flat, n_experts, *, block=2048):
+    """Arrival-order position of each assignment within its expert.
+
+    idx_flat: (N,) int32 expert ids (token-major ⇒ earlier tokens win
+    capacity, GShard semantics). Returns (pos (N,), counts (E,)).
+    Memory-bounded: processes N in blocks of `block` (cumsum over a
+    (block, E) one-hot instead of (N, E)).
+    """
+    n = idx_flat.shape[0]
+    pad = (-n) % block
+    idx_p = jnp.pad(idx_flat, (0, pad), constant_values=n_experts)  # OOB pad
+    blocks = idx_p.reshape(-1, block)
+
+    def body(counts, ib):
+        oh = jax.nn.one_hot(ib, n_experts, dtype=jnp.int32)  # (block, E)
+        excl = jnp.cumsum(oh, axis=0) - oh
+        pos_b = counts[None, :] + excl
+        pos_b = jnp.take_along_axis(
+            pos_b, jnp.clip(ib, 0, n_experts - 1)[:, None], axis=1)[:, 0]
+        return counts + oh.sum(axis=0), pos_b
+
+    counts, pos = jax.lax.scan(body, jnp.zeros((n_experts,), jnp.int32), blocks)
+    return pos.reshape(-1)[:n], counts
+
+
+def moe_apply(params, x, cfg, *, group_size=4096):
+    """x: (B, S, D) -> (y, aux) with aux = {load_balance_loss, router_z_loss,
+    drop_fraction}."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = capacity(m, g)
+    E, k = m.n_experts, m.top_k
+
+    xt = x.reshape(G, g, D)
+    # ---- routing (f32) ----
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                      # (G, g, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    topi = jax.lax.stop_gradient(topi)
+
+    # ---- aux losses (switch-style load balance + z-loss) ----
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jax.nn.one_hot(topi[..., 0], E).mean(axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- positions within experts (per group, scanned: bounded memory) ----
+    def per_group_pos(ti):
+        return _positions_in_expert(ti.reshape(-1), E)        # (g*k,), (E,)
+    pos, counts = jax.lax.map(per_group_pos, topi)            # (G,g*k),(G,E)
+    pos = pos.reshape(G, g, k)
+    within = pos < C                                           # capacity mask
+    drop_frac = 1.0 - within.mean()
+
+    # ---- dispatch: scatter tokens into (G, E, C, D) ----
+    e_flat = topi.reshape(G, g * k)
+    p_flat = jnp.where(within, pos, C).reshape(G, g * k)       # C slot = dropped
+
+    def scatter_group(xg, eg, pg):
+        buf = jnp.zeros((E, C, D), xg.dtype)
+        src = jnp.repeat(xg, k, axis=0)                        # (g*k, D)
+        return buf.at[eg, pg].set(src, mode="drop")
+
+    buf = jax.vmap(scatter_group)(xt, e_flat, p_flat)          # (G, E, C, D)
+
+    # ---- expert FFNs (batched einsum; E shards over "model" ⇒ EP) ----
+    act = _act(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", buf, params["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", buf, params["wu"])
+    out = jnp.einsum("gecf,efd->gecd", h, params["wd"])        # (G, E, C, D)
+
+    # ---- combine: gather back, weight, sum over k ----
+    def gather_group(og, eg, pg):
+        return og[eg, pg]                                      # (g*k, D)
+    y = jax.vmap(gather_group)(out, e_flat, p_flat)            # (G, g*k, D)
+    y = y.reshape(G, g, k, D)
+    w = (topw * within).astype(y.dtype)
+    y = jnp.einsum("gtkd,gtk->gtd", y, w)
+
+    if m.n_shared_experts:
+        y = y + mlp_apply(params["shared"], xt, cfg)
+
+    aux = {"load_balance_loss": lb_loss, "router_z_loss": z_loss,
+           "drop_fraction": drop_frac}
+    return y.reshape(B, S, D), aux

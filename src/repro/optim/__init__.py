@@ -1,0 +1,15 @@
+from .adafactor import Adafactor, make_optimizer
+from .adamw import AdamW, clip_by_global_norm
+
+__all__ = ["Adafactor", "AdamW", "clip_by_global_norm", "make_optimizer"]
+
+
+def lr_schedule(step, *, peak=3e-4, warmup=100, total=10_000, floor=0.1):
+    """Linear warmup + cosine decay to floor*peak."""
+    import jax.numpy as jnp
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak * (step + 1) / warmup
+    import jax
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

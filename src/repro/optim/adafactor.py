@@ -1,0 +1,94 @@
+"""Hand-rolled Adafactor (factored second moment, no momentum).
+
+Used for the 1T-class MoEs: optimizer state is ~O(rows+cols) per matrix
+instead of 2× params, which is what lets kimi-k2 train on a 256-chip pod
+(see EXPERIMENTS.md §Dry-run memory analysis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class Adafactor:
+    def __init__(self, decay=0.99, eps=1e-30, clip_threshold=1.0,
+                 min_dim_size_to_factor=32, weight_decay=0.0):
+        self.decay = decay
+        self.eps = eps
+        self.clip_threshold = clip_threshold
+        self.min_factor = min_dim_size_to_factor
+        self.weight_decay = weight_decay
+
+    def _factored(self, p):
+        return (p.ndim >= 2 and p.shape[-1] >= self.min_factor
+                and p.shape[-2] >= self.min_factor)
+
+    def init(self, params):
+        def leaf(p):
+            if self._factored(p):
+                return {
+                    "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        c = state["count"] + 1
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if "v_row" in s:
+                v_row = self.decay * s["v_row"] + (1 - self.decay) * g2.mean(-1)
+                v_col = self.decay * s["v_col"] + (1 - self.decay) * g2.mean(-2)
+                r = v_row / jnp.maximum(
+                    v_row.mean(-1, keepdims=True), self.eps)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(v_col)[..., None, :]
+                         + 1e-12)
+                new_s = {"v_row": v_row, "v_col": v_col}
+            else:
+                v = self.decay * s["v"] + (1 - self.decay) * g2
+                u = g / (jnp.sqrt(v) + 1e-12)
+                new_s = {"v": v}
+            # update clipping (RMS <= threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            pf = p.astype(jnp.float32)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * pf
+            return (pf - lr * u).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_f = tdef.unflatten([o[1] for o in out])
+        return new_p, {"f": new_f, "count": c}
+
+    def state_sharding(self, param_specs, abstract_params, mesh):
+        """Factored stats inherit the param spec with the reduced dim dropped."""
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        def leaf_spec(sharding, p):
+            shape = p.shape
+            parts = list(sharding.spec) + [None] * (len(shape) - len(sharding.spec))
+            if self._factored(p):
+                return {
+                    "v_row": NamedSharding(mesh, P(*parts[:-1])),
+                    "v_col": NamedSharding(mesh, P(*(parts[:-2] + parts[-1:]))),
+                }
+            return {"v": NamedSharding(mesh, P(*parts))}
+
+        f = jax.tree.map(leaf_spec, param_specs, abstract_params)
+        return {"f": f, "count": NamedSharding(mesh, P())}
+
+
+def make_optimizer(cfg):
+    from .adamw import AdamW
+    if cfg.optimizer == "adafactor":
+        return Adafactor()
+    return AdamW()

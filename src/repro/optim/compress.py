@@ -1,0 +1,77 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantizes gradients before the DP reduction wire (4×/2× traffic
+vs f32/bf16) and carries the quantization residual into the next step
+(error feedback — Seide et al. / 1-bit-SGD lineage — which restores
+convergence that naive quantization loses).
+
+Under pure pjit the all-reduce is XLA-inserted and can't be intercepted, so
+the Trainer applies this transform at the grad boundary (simulating the
+compressed wire exactly — same numerics the shard_map DP loop would see);
+the shard_map EP/DP paths can quantize around their explicit collectives
+directly. The quantizer is the same codec as the checkpoint path
+(kernels/ckpt_codec on TPU, core/codec semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant_dequant(x):
+    """Symmetric per-block int8 quantize→dequantize (jnp, jit-friendly)."""
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127)
+    y = (q * scale[:, None]).reshape(-1)[:n]
+    return y.reshape(shape)
+
+
+class GradCompression:
+    """Error-feedback int8 gradient compression."""
+
+    def __init__(self, enabled: bool = True, min_size: int = 4096):
+        self.enabled = enabled
+        self.min_size = min_size  # tiny leaves (norms, biases) stay exact
+
+    def init(self, params):
+        zeros = lambda p: (jnp.zeros(p.shape, jnp.float32)
+                           if p.size >= self.min_size else None)
+        return {"error": jax.tree.map(zeros, params)}
+
+    def apply(self, grads, state):
+        """Returns (compressed-equivalent grads, new state)."""
+        if not self.enabled:
+            return grads, state
+
+        def leaf(g, e):
+            if e is None:
+                return g, None
+            corrected = g.astype(jnp.float32) + e
+            g_hat = _quant_dequant(corrected)
+            return g_hat.astype(g.dtype), corrected - g_hat
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(state["error"])
+        out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+        new_g = tdef.unflatten([o[0] for o in out])
+        new_e = tdef.unflatten([o[1] for o in out])
+        return new_g, {"error": new_e}
+
+    @staticmethod
+    def wire_bytes(params) -> tuple:
+        """(compressed, raw-f32) bytes per DP reduction."""
+        comp = raw = 0
+        for p in jax.tree.leaves(params):
+            raw += p.size * 4
+            comp += p.size + (p.size // BLOCK + 1) * 4
+        return comp, raw

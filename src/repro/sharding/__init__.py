@@ -1,0 +1,5 @@
+from .partition import (MeshAxes, act_constrainer, batch_spec, cache_specs,
+                        mesh_axes, param_specs, spec_for_param)
+
+__all__ = ["MeshAxes", "act_constrainer", "batch_spec", "cache_specs",
+           "mesh_axes", "param_specs", "spec_for_param"]

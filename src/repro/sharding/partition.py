@@ -1,0 +1,279 @@
+"""Logical-axis sharding resolver: DP/FSDP/TP/EP over the assigned meshes.
+
+Parallelism layout (see DESIGN.md §6):
+  * batch (DP)      → ("pod", "data")   — pods are pure data-parallel replicas
+  * FSDP (ZeRO-3)   → "data"            — weight matrices shard their non-TP
+                                          dim over "data"; XLA all-gathers per
+                                          scanned layer
+  * TP              → "model"           — attention heads, FFN hidden, vocab
+  * EP              → "model"           — MoE expert dim
+  * SP (fallback)   → "model" on the sequence dim of attention activations
+                       when n_heads is not divisible by tp (gemma3 H=4,
+                       scout H=40, starcoder2 H=24)
+
+Every rule is divisibility-checked: a dim that does not divide the mesh axis
+falls back to replication instead of failing to lower — the same graceful-
+degradation philosophy the paper applies to its M×N portability problem.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSM
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    batch: tuple          # axes for the batch/DP dimension, e.g. ("pod","data")
+    fsdp: str | None      # axis for weight (ZeRO-3) sharding
+    model: str | None     # axis for TP/EP
+    batch_size: int
+    fsdp_size: int
+    tp: int
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    if "pod" in names:
+        batch = ("pod", "data")
+    elif "data" in names:
+        batch = ("data",)
+    else:
+        batch = ()
+    fsdp = "data" if "data" in names else None
+    model = "model" if "model" in names else None
+    bs = 1
+    for a in batch:
+        bs *= sizes[a]
+    return MeshAxes(batch, fsdp, model,
+                    batch_size=bs,
+                    fsdp_size=sizes.get("data", 1),
+                    tp=sizes.get("model", 1))
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _axis(ax: MeshAxes, which: str, dim: int):
+    """Return the mesh axis for a logical axis iff the dim divides it."""
+    if which == "model":
+        return ax.model if ax.model and _div(dim, ax.tp) else None
+    if which == "fsdp":
+        return ax.fsdp if ax.fsdp and _div(dim, ax.fsdp_size) else None
+    if which == "batch":
+        return ax.batch if ax.batch and _div(dim, ax.batch_size) else None
+    raise ValueError(which)
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings (by leaf path)
+# ---------------------------------------------------------------------------
+
+def spec_for_param(path: tuple, shape: tuple, ax: MeshAxes) -> P:
+    """path: tuple of str keys from tree_map_with_path."""
+    names = [getattr(p, "key", str(p)) for p in path]
+    leaf = names[-1]
+    in_rglru = "rglru" in names
+    in_ssm = "ssm" in names
+    in_moe = "moe" in names and "shared" not in names
+
+    def s(dims):  # helper: dims is list of logical axes per dim
+        parts = [(_axis(ax, d, shape[i]) if d else None)
+                 for i, d in enumerate(dims)]
+        return P(*parts)
+
+    nd = len(shape)
+    if leaf == "embed":
+        # vocab over TP only: sharding d_model over "data" here would force
+        # the LM-head contraction onto an fsdp-sharded dim (per-chunk f32
+        # logits all-reduces over "data" — observed 42 GB/device wire traffic)
+        return s(["model", None])
+    if leaf == "lm_head":
+        return s([None, "model"])
+    if leaf in ("q", "k", "v") and not (in_rglru or in_ssm):
+        return s([None, "fsdp", "model", None][:nd] if nd == 4
+                 else ["fsdp", "model", None])
+    if leaf == "o" and nd >= 3:
+        return s([None, "model", None, "fsdp"][:nd] if nd == 4
+                 else ["model", None, "fsdp"])
+    if leaf in ("wg", "wu", "wi"):
+        if in_rglru:  # rglru wg: (R, d, w)
+            return s([None, "fsdp", "model"][:nd])
+        if nd == 4:   # moe experts (R, E, d, f)
+            return s([None, "model", "fsdp", None])
+        return s([None, "fsdp", "model"][:nd] if nd == 3
+                 else ["fsdp", "model"])
+    if leaf == "wd":
+        if nd == 4:   # moe experts (R, E, f, d)
+            return s([None, "model", None, "fsdp"])
+        return s([None, "model", "fsdp"][:nd] if nd == 3
+                 else ["model", "fsdp"])
+    if leaf == "router":
+        return s([None, "fsdp", None][:nd])
+    if in_rglru:
+        if leaf == "wx":
+            return s([None, "fsdp", "model"][:nd])
+        if leaf == "wo":
+            return s([None, "model", "fsdp"][:nd])
+        if leaf in ("lam", "gate_a_w", "gate_a_b", "gate_x_w", "gate_x_b",
+                    "conv_b"):
+            return s([None, "model"][:nd])
+        if leaf == "conv_w":
+            return s([None, None, "model"][:nd])
+    if in_ssm:
+        if leaf == "in_proj":
+            return s([None, "fsdp", "model"][:nd])
+        if leaf == "out_proj":
+            return s([None, "model", "fsdp"][:nd])
+        if leaf == "conv_w":
+            return s([None, None, "model"][:nd])
+        if leaf in ("conv_b", "out_norm"):
+            return s([None, "model"][:nd])
+        if leaf in ("A_log", "D", "dt_bias"):
+            return s([None, "model"][:nd])
+    # norms, biases, pos_conv, everything small: replicated
+    return P()
+
+
+def param_specs(abstract_params, mesh: Mesh):
+    ax = mesh_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, spec_for_param(path, leaf.shape, ax)),
+        abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (installed into the model via set_constrainer)
+# ---------------------------------------------------------------------------
+
+def batch_axes_for(cfg, ax: MeshAxes, batch_dim: int):
+    """DP axes for a given global batch size. With cfg.dp_over_model the
+    "model" axis joins DP when the batch divides it (small-dense hillclimb:
+    replicated-attention waste becomes extra data parallelism)."""
+    if getattr(cfg, "dp_over_model", False) and ax.model:
+        full = ax.batch + (ax.model,)
+        if batch_dim % (ax.batch_size * ax.tp) == 0:
+            return full
+    return ax.batch
+
+
+def act_constrainer(cfg, mesh: Mesh):
+    ax = mesh_axes(mesh)
+    tp = ax.tp
+    heads_div = tp <= 1 or cfg.n_heads == 0 or cfg.n_heads % tp == 0
+    kv_div = tp <= 1 or cfg.n_kv_heads == 0 or cfg.n_kv_heads % tp == 0
+    batch = ax.batch or None
+    model = ax.model
+    if getattr(cfg, "dp_over_model", False) and model:
+        # batch takes the model axis too; nothing else shards over it
+        batch = ax.batch + (model,)
+        model = None
+        heads_div = True  # suppress the SP fallback specs below
+
+    specs = {}
+    if getattr(cfg, "seq_shard_resid", False) and model:
+        specs["resid"] = P(batch, model, None)
+    else:
+        specs["resid"] = P(batch, None, None)
+    if heads_div:
+        specs["attn_q"] = P(batch, None, model, None)
+        specs["attn_kv"] = P(batch, None, model if kv_div else None, None)
+        specs["attn_q_local"] = specs["attn_q"]
+        specs["attn_kv_local"] = specs["attn_kv"]
+    else:
+        if cfg.seq_shard_attn:
+            # global attention: shard the q sequence dim (SP); kv replicated
+            specs["attn_q"] = P(batch, model, None, None)
+        else:
+            specs["attn_q"] = P(batch, None, None, None)
+        specs["attn_kv"] = P(batch, None, None, None)
+        # local attention scans over q chunks — heads replicated fallback
+        specs["attn_q_local"] = P(batch, None, None, None)
+        specs["attn_kv_local"] = P(batch, None, None, None)
+    d_div = tp <= 1 or cfg.d_model % tp == 0
+    specs["moe_in"] = P(batch, None, model if d_div else None)
+
+    def constrain(x, name):
+        spec = specs.get(name)
+        if spec is None:
+            return x
+        if x.ndim != len(spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# batch & cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch_shapes: dict, mesh: Mesh, cfg=None):
+    """Shard every batch input on its leading (batch) dim when divisible."""
+    ax = mesh_axes(mesh)
+
+    def leaf(x):
+        if not x.ndim:
+            return NamedSharding(mesh, P())
+        b = x.shape[0]
+        axes = batch_axes_for(cfg, ax, b) if cfg is not None else ax.batch
+        size = _size(mesh, axes) if axes else 1
+        if not axes or b % size:
+            axes = _axis(ax, "batch", b)
+        return NamedSharding(mesh, P(axes, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(leaf, batch_shapes)
+
+
+def cache_specs(abstract_cache, mesh: Mesh, cfg):
+    """Decode caches: (R, B, L, K, hd) attn / (R, B, ...) states.
+
+    Batch shards over DP axes when divisible; otherwise the sequence dim of
+    attention caches shards over "model" (long-context, batch=1 decode) and
+    head/state dims shard over "model" when divisible.
+    """
+    ax = mesh_axes(mesh)
+
+    def leaf(path, x):
+        names = [getattr(p, "key", str(p)) for p in path]
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if names[-1] in ("k", "v") and x.ndim == 5:
+            R, B, L, K, hd = x.shape
+            b_ax = _axis(ax, "batch", B)
+            if b_ax is not None:
+                k_ax = _axis(ax, "model", K)
+                l_ax = _axis(ax, "model", L) if k_ax is None else None
+                return NamedSharding(mesh, P(None, b_ax, l_ax, k_ax, None))
+            # batch too small: shard the sequence dim over everything we can
+            l_axes = tuple(a for a in ((ax.fsdp,) + ((ax.model,) if ax.model else ()))
+                           if a) or None
+            if l_axes and L % _size(mesh, l_axes) == 0:
+                return NamedSharding(mesh, P(None, None, l_axes, None, None))
+            return NamedSharding(mesh, P())
+        # recurrent / conv states: (R, B, ...)
+        R, B = x.shape[0], x.shape[1]
+        b_ax = _axis(ax, "batch", B)
+        rest = [None] * (x.ndim - 2)
+        if x.ndim >= 3:
+            m_ax = _axis(ax, "model", x.shape[2])
+            if b_ax is not None or m_ax is not None:
+                rest[0] = m_ax
+        return NamedSharding(mesh, P(None, b_ax, *rest))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_cache)
+
+
+def _size(mesh, axes):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n

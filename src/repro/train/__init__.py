@@ -1,0 +1,3 @@
+from .steps import make_serve_fns, make_train_step
+
+__all__ = ["make_serve_fns", "make_train_step"]

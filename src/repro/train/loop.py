@@ -1,0 +1,186 @@
+"""Production training loop with first-class C/R (the paper's integration
+point): restore-on-start, periodic async checkpoints, preemption handling,
+drain-before-snapshot, coordinator-supervised writes, elastic restart.
+
+The Trainer owns the *lower half* (mesh, jitted step, pipeline objects) and
+treats the *upper half* (TrainState + DataState) as opaque checkpointable
+data — the split-process discipline as code structure.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..core.checkpoint import CheckpointManager
+from ..core.preempt import PreemptionGuard
+from ..core.split_state import (abstract_train_state, config_digest,
+                                init_train_state, lower_half_descriptor,
+                                state_shardings)
+from ..core.storage import TieredStore, default_store
+from ..data.pipeline import DataState, SyntheticPipeline
+from ..launch.mesh import make_host_mesh
+from ..models import Model
+from ..models.model import set_constrainer
+from ..optim import make_optimizer
+from ..sharding.partition import act_constrainer, batch_spec
+from .steps import make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class TrainerConfig:
+    workdir: str
+    batch: int = 8
+    seq_len: int = 128
+    ckpt_every: int = 20
+    async_ckpt: bool = True
+    retain: int = 3
+    n_writers: int = 4
+    codec: str = "zstd"
+    params_codec: str | None = None
+    replicas: int = 1
+    seed: int = 0
+    log_every: int = 10
+    grad_accum: int = 1
+    burst_buffer: bool = False      # /dev/shm tier (benchmarks turn this on)
+    lustre_bw: float | None = None  # None = unthrottled slow tier
+
+
+class Trainer:
+    def __init__(self, model_cfg, tcfg: TrainerConfig, *, mesh=None,
+                 store: TieredStore | None = None):
+        self.cfg = model_cfg
+        self.tcfg = tcfg
+        # ---- lower half bring-up (the "trivial MPI application") ----
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        set_constrainer(act_constrainer(model_cfg, self.mesh))
+        self.model = Model(model_cfg)
+        self.optimizer = make_optimizer(model_cfg)
+        self.pipeline = SyntheticPipeline(model_cfg, batch=tcfg.batch,
+                                          seq_len=tcfg.seq_len)
+        self._abstract = abstract_train_state(self.model, self.optimizer)
+        self._shardings = state_shardings(self._abstract, self.mesh,
+                                          self.optimizer)
+        self.step_fn = jax.jit(
+            make_train_step(self.model, self.optimizer,
+                            grad_accum=tcfg.grad_accum),
+            donate_argnums=(0,), out_shardings=(self._shardings, None))
+        store = store or default_store(tcfg.workdir,
+                                       burst_buffer=tcfg.burst_buffer,
+                                       lustre_bw=tcfg.lustre_bw)
+        self.manager = CheckpointManager(
+            store, n_writers=tcfg.n_writers, codec=tcfg.codec,
+            params_codec=tcfg.params_codec, replicas=tcfg.replicas,
+            retain=tcfg.retain)
+        # ---- upper half ----
+        self.state = None
+        self.data_state: DataState | None = None
+        self.py_step = 0
+        self.history: list = []
+        self.restored_from = None
+
+    # ------------------------------------------------------------------
+    def _extra(self) -> dict:
+        return {
+            "data_state": self.data_state.to_json(),
+            "arch": self.cfg.arch_id,
+            "config_digest": config_digest(self.cfg),
+            "lower_half": lower_half_descriptor(self.mesh, self.cfg).to_json(),
+            "py_step": self.py_step,
+        }
+
+    def init_or_restore(self):
+        latest = self.manager.latest_step()
+        if latest is None:
+            rng = jax.random.PRNGKey(self.tcfg.seed)
+            init = jax.jit(
+                lambda r: init_train_state(self.model, self.optimizer, r),
+                out_shardings=self._shardings)
+            self.state = init(rng)
+            self.data_state = self.pipeline.init_state(self.tcfg.seed)
+            self.py_step = 0
+            log.info("initialized fresh state (seed=%d)", self.tcfg.seed)
+        else:
+            self.state, extra = self.manager.restore(
+                self._abstract, self._shardings, step=latest)
+            self.data_state = DataState.from_json(extra["data_state"])
+            self.py_step = int(extra.get("py_step", latest))
+            self.restored_from = latest
+            log.info("restored step %d (upper half) onto mesh %s "
+                     "(lower half rebuilt)", latest,
+                     tuple(self.mesh.devices.shape))
+        return self
+
+    def save(self, *, blocking: bool = True):
+        return self.manager.save(self.state, self.py_step,
+                                 extra=self._extra(), blocking=blocking)
+
+    # ------------------------------------------------------------------
+    def fit(self, n_steps: int, *, guard: PreemptionGuard | None = None,
+            stop_after: int | None = None) -> dict:
+        """Run until `n_steps` total steps (absolute), a preemption signal,
+        or `stop_after` additional steps (tests). Returns a status report."""
+        assert self.state is not None, "call init_or_restore() first"
+        own_guard = guard is None
+        guard = guard or PreemptionGuard()
+        status = "completed"
+        steps_done = 0
+        if own_guard:
+            guard.__enter__()
+        try:
+            while self.py_step < n_steps:
+                if guard.should_preempt:
+                    self.manager.wait()
+                    rep = self.save(blocking=True)
+                    log.info("preempted at step %d; checkpoint %.3fs",
+                             self.py_step, rep["seconds"])
+                    status = "preempted"
+                    break
+                batch, next_ds = self.pipeline.next(self.data_state)
+                batch = jax.device_put(batch, batch_spec(batch, self.mesh))
+                t0 = time.monotonic()
+                self.state, metrics = self.step_fn(self.state, batch)
+                self.data_state = next_ds
+                self.py_step += 1
+                steps_done += 1
+                if self.py_step % self.tcfg.log_every == 0 or \
+                        self.py_step == n_steps:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m.update(step=self.py_step,
+                             step_s=time.monotonic() - t0)
+                    self.history.append(m)
+                    log.info("step %5d loss=%.4f (%.2fs)", self.py_step,
+                             m.get("loss", float("nan")), m["step_s"])
+                if self.tcfg.ckpt_every and \
+                        self.py_step % self.tcfg.ckpt_every == 0:
+                    self.save(blocking=not self.tcfg.async_ckpt)
+                if stop_after is not None and steps_done >= stop_after:
+                    status = "paused"
+                    break
+            self.manager.wait()
+            if status == "completed" and (
+                    not self.manager.latest_step()
+                    or self.manager.latest_step() < self.py_step):
+                self.save(blocking=True)
+        finally:
+            if own_guard:
+                guard.__exit__(None, None, None)
+        return {"status": status, "step": self.py_step,
+                "history": self.history,
+                "ckpt_metrics": dict(self.manager.coordinator.metrics)}
+
+    def params_digest(self) -> str:
+        """Bit-exactness probe: order-stable hash of all params bytes."""
+        import hashlib
+        h = hashlib.sha256()
+        from ..core.split_state import leaf_paths
+        for name, leaf in leaf_paths(self.state["params"]):
+            h.update(name.encode())
+            h.update(np.ascontiguousarray(jax.device_get(leaf)).tobytes())
+        return h.hexdigest()

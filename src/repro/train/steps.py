@@ -1,0 +1,94 @@
+"""Jittable train / serve step functions (the programs the dry-run lowers)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import lr_schedule
+
+
+def make_train_step(model, optimizer, *, lr_fn=None, grad_accum: int = 1,
+                    accum_dtype=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_accum > 1 splits the batch leading dim into microbatches and
+    accumulates grads under lax.scan — this divides the remat-saved
+    per-layer residual stack by `grad_accum` (the peak-memory whale for
+    1T-class models) and amortizes the DP all-reduce. `accum_dtype`
+    defaults to f32; "bfloat16" halves the accumulator for very large
+    models (trade documented in EXPERIMENTS §Perf).
+    """
+    lr_fn = lr_fn or lr_schedule
+
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            adt = jnp.dtype(accum_dtype) if accum_dtype else jnp.float32
+
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                        + x.shape[1:]), b)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            grads, (losses, metrics) = jax.lax.scan(body, zeros, micro(batch))
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+            loss = losses.mean()
+
+        lr = lr_fn(state["step"])
+        new_params, new_opt = optimizer.update(grads, state["opt"], params, lr)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+            "rng": state["rng"],
+        }
+        metrics = dict(metrics)
+        metrics["lr"] = lr
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_fns(model, *, greedy: bool = True):
+    """Returns (prefill_fn, decode_fn) for serving.
+
+    prefill_fn(params, tokens)        -> (next_token (B,), cache)
+    decode_fn(params, cache, token)   -> (next_token (B,), cache)
+    """
+
+    def sample(logits):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def prefill_fn(params, tokens, cache_len=0):
+        # cache_len: total decode capacity (prompt + generation)
+        logits, cache = model.prefill(params, tokens, cache_len=cache_len)
+        return sample(logits), cache
+
+    def decode_fn(params, cache, token):
+        logits, cache = model.decode_step(params, cache, token)
+        return sample(logits), cache
+
+    def encode_fn(params, features):
+        return model.encode(params, features)
+
+    return prefill_fn, decode_fn, encode_fn

@@ -1,0 +1,26 @@
+import os
+import sys
+from pathlib import Path
+
+# smoke tests and benches must see the real (single) CPU device — the
+# 512-device override belongs ONLY to repro.launch.dryrun.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def workdir(tmp_path):
+    return tmp_path / "ckpt"
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

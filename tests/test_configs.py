@@ -1,0 +1,90 @@
+"""Config registry: assigned hyperparameters, param counts vs published
+figures, stage machinery, applicability matrix."""
+import pytest
+
+from repro.configs import (ARCH_IDS, CONFIGS, SHAPES, applicable,
+                           build_stages, cells, get_config, param_counts,
+                           reduced)
+
+# published parameter counts (billions): total, active
+PUBLISHED = {
+    "kimi-k2-1t-a32b": (1040, 32.6),
+    "llama4-scout-17b-a16e": (109, 17),
+    "gemma3-1b": (1.0, 1.0),
+    "stablelm-1.6b": (1.6, 1.6),
+    "starcoder2-3b": (3.0, 3.0),
+    "gemma2-9b": (9.2, 9.2),
+    "hubert-xlarge": (1.0, 1.0),
+    "recurrentgemma-9b": (9.0, 9.0),
+    "mamba2-780m": (0.78, 0.78),
+    "chameleon-34b": (34, 34),
+}
+
+
+def test_all_archs_registered():
+    assert len(ARCH_IDS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_published(arch):
+    pc = param_counts(CONFIGS[arch])
+    tot, act = PUBLISHED[arch]
+    assert pc["n_total"] / 1e9 == pytest.approx(tot, rel=0.15), pc
+    assert pc["n_active"] / 1e9 == pytest.approx(act, rel=0.15), pc
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_stages_cover_all_layers(arch):
+    cfg = CONFIGS[arch]
+    stages = build_stages(cfg)
+    assert sum(len(s.kinds) * s.repeat for s in stages) == cfg.n_layers
+    # per-layer kinds reconstructed from stages must equal cfg.layer_kinds
+    kinds = []
+    for s in stages:
+        for _ in range(s.repeat):
+            kinds.extend(s.kinds)
+    assert tuple(kinds) == cfg.layer_kinds
+
+
+def test_cell_matrix():
+    cs = cells(CONFIGS)
+    assert len(cs) == 32
+    # encoder: no decode
+    assert ("hubert-xlarge", "decode_32k") not in cs
+    assert ("hubert-xlarge", "long_500k") not in cs
+    # long_500k only for sub-quadratic archs
+    long = {a for a, s in cs if s == "long_500k"}
+    assert long == {"gemma3-1b", "recurrentgemma-9b", "mamba2-780m"}
+
+
+def test_applicability_reasons():
+    ok, reason = applicable(CONFIGS["chameleon-34b"], SHAPES["long_500k"])
+    assert not ok and "full-attention" in reason
+    ok, reason = applicable(CONFIGS["hubert-xlarge"], SHAPES["decode_32k"])
+    assert not ok and "encoder" in reason
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_preserves_family(arch):
+    cfg = CONFIGS[arch]
+    r = reduced(cfg)
+    assert r.family == cfg.family
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.ssm is None) == (cfg.ssm is None)
+    assert r.pattern == cfg.pattern
+    assert r.d_model <= 64 and r.vocab_size <= 128
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("nope-7b")
+
+
+def test_presets_cover_all_archs_and_apply():
+    from dataclasses import replace
+    from repro.configs.presets import PRESETS, preset_overrides
+    assert set(PRESETS) == set(ARCH_IDS)
+    for arch in ARCH_IDS:
+        ov = preset_overrides(arch)
+        cfg = replace(CONFIGS[arch], **ov)   # every preset key is a real field
+        assert cfg.arch_id == arch

@@ -1,0 +1,108 @@
+"""Coordinator protocol (keepalive, stragglers, 2PC) and drain counters."""
+import threading
+import time
+
+import pytest
+
+from repro.core.coordinator import CheckpointCoordinator, RankState
+from repro.core.drain import DrainCounters
+
+
+def _run_ranks(coord, n, work=lambda r: None):
+    def rank(r):
+        try:
+            coord.rank_begin(r)
+            work(r)
+            coord.rank_prepared(r, nbytes=100, files=[f"f{r}"])
+        except Exception as e:  # noqa
+            coord.rank_failed(r, str(e))
+    ts = [threading.Thread(target=rank, args=(r,)) for r in range(n)]
+    for t in ts:
+        t.start()
+    return ts
+
+
+def test_commit_happy_path():
+    c = CheckpointCoordinator(4)
+    c.begin_round(1)
+    ts = _run_ranks(c, 4)
+    assert c.wait_all_prepared(timeout=5)
+    for t in ts:
+        t.join()
+    c.finish_round(True)
+    assert c.metrics["commits"] == 1 and c.metrics["aborts"] == 0
+
+
+def test_injected_failure_aborts():
+    c = CheckpointCoordinator(3)
+    c.inject_failure(2)
+    c.begin_round(1)
+    ts = _run_ranks(c, 3)
+    assert not c.wait_all_prepared(timeout=5)
+    for t in ts:
+        t.join()
+    assert "rank 2" in c.abort_reason()
+    c.finish_round(False)
+    assert c.metrics["aborts"] == 1
+
+
+def test_keepalive_timeout_detects_dead_rank():
+    c = CheckpointCoordinator(2, keepalive_s=0.2)
+    c.begin_round(1)
+
+    def rank0():
+        c.rank_begin(0)
+        c.rank_prepared(0, nbytes=1, files=[])
+
+    def rank1_dies():
+        c.rank_begin(1)
+        # never heartbeats, never acks — silent death
+    threading.Thread(target=rank0).start()
+    threading.Thread(target=rank1_dies).start()
+    assert not c.wait_all_prepared(timeout=5)
+    assert "keepalive" in c.abort_reason()
+    assert c.metrics["keepalive_timeouts"] == 1
+
+
+def test_straggler_flagged_but_commits():
+    c = CheckpointCoordinator(2, keepalive_s=1.0, straggler_factor=0.5)
+
+    def slow(r):
+        if r == 1:
+            for _ in range(8):
+                time.sleep(0.05)
+                c.heartbeat(1)   # alive, just slow
+    c.begin_round(1)
+    ts = _run_ranks(c, 2, work=slow)
+    assert c.wait_all_prepared(timeout=10)
+    for t in ts:
+        t.join()
+    assert c.metrics["stragglers_flagged"] >= 1
+
+
+def test_rank_node_mapping_present():
+    c = CheckpointCoordinator(3)
+    assert c.ranks[2].node == "nid00002"  # paper's rank-to-node debug aid
+
+
+def test_drain_counters_equality():
+    d = DrainCounters()
+    assert d.drained()
+    d.enqueue(100)
+    assert not d.drained()
+    assert not d.wait(timeout=0.05)
+    d.commit(100)
+    assert d.drained() and d.wait(timeout=0.05)
+    s = d.snapshot()
+    assert s["enqueued_bytes"] == s["committed_bytes"] == 100
+
+
+def test_drain_cross_thread():
+    d = DrainCounters()
+    d.enqueue(1000)
+
+    def worker():
+        time.sleep(0.1)
+        d.commit(1000)
+    threading.Thread(target=worker).start()
+    assert d.wait(timeout=5)

@@ -1,0 +1,57 @@
+"""Elastic (M×N) restore across device counts and mesh shapes.
+
+Runs in a SUBPROCESS with --xla_force_host_platform_device_count=8 so the
+main test process keeps its single-device view (mirrors the dry-run rule).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import sys, json, tempfile
+    sys.path.insert(0, {src!r})
+    import logging; logging.disable(logging.INFO)
+    from repro.configs import CONFIGS, reduced
+    from repro.train.loop import Trainer, TrainerConfig
+    from repro.launch.mesh import make_host_mesh
+
+    wd = tempfile.mkdtemp()
+    cfg = reduced(CONFIGS[{arch!r}])
+    def tc(**kw):
+        return TrainerConfig(workdir=wd, batch=4, seq_len=32, ckpt_every=2,
+                             log_every=100, seed=11, **kw)
+    meshA = make_host_mesh((2, 4), ("data", "model"))
+    tA = Trainer(cfg, tc(), mesh=meshA).init_or_restore()
+    tA.fit(2)
+    dA = tA.params_digest()
+    results = {{"saved": dA, "restores": {{}}}}
+    for shape in [(4, 2), (8, 1), (1, 1)]:
+        meshB = make_host_mesh(shape, ("data", "model"))
+        tB = Trainer(cfg, tc(), mesh=meshB).init_or_restore()
+        ok = tB.params_digest() == dA and tB.restored_from == 2
+        tB.fit(3, stop_after=1)   # restored state must be trainable
+        results["restores"][str(shape)] = ok
+    print("RESULT::" + json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma3-1b", "kimi-k2-1t-a32b"])
+def test_cross_mesh_restore(arch):
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(src=SRC, arch=arch)],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT::"))
+    res = json.loads(line[len("RESULT::"):])
+    assert all(res["restores"].values()), res

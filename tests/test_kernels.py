@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ckpt_codec import (dequantize_blocks, quantize_blocks,
+                                      quantize_reference)
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.rmsnorm import rmsnorm_fused, rmsnorm_reference
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,D", [
+    (1, 64, 64, 4, 4, 32),
+    (2, 128, 128, 4, 1, 16),    # MQA
+    (1, 96, 96, 8, 2, 64),      # GQA 4:1
+    (1, 60, 60, 2, 2, 16),      # non-multiple-of-block seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Sk, H, K, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, D), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    ref = attention_reference(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3),
+                              causal=True).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (16, 0.0, True), (0, 30.0, True), (24, 0.0, False), (0, 0.0, False),
+])
+def test_flash_attention_masks(window, softcap, causal):
+    B, S, H, K, D = 1, 80, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=16, block_k=16,
+                          interpret=True)
+    ref = attention_reference(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=causal,
+                              window=window,
+                              softcap=softcap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(16, 64), (37, 96), (3, 5, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = (jax.random.normal(KEY, shape[-1:]) * 0.1).astype(dtype)
+    out = rmsnorm_fused(x, s, block_rows=8, interpret=True)
+    ref = rmsnorm_reference(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("n", [256, 1000, 4096, 65537])
+def test_codec_kernel_matches_host_codec(n):
+    x = np.random.default_rng(n).standard_normal(n).astype(np.float32)
+    q, s = quantize_blocks(jnp.asarray(x), interpret=True)
+    qr, sr = quantize_reference(x)
+    np.testing.assert_array_equal(np.asarray(q)[:qr.size], qr)
+    np.testing.assert_allclose(np.asarray(s), sr, rtol=1e-7)
+    d = dequantize_blocks(q, s, n=n, interpret=True)
+    bound = np.abs(x).reshape(-1, 1)  # per-block bound below
+    err = np.abs(np.asarray(d) - x)
+    # quantization error bound: scale/2 per block
+    scales = np.repeat(sr, 256)[:n]
+    assert np.all(err <= scales * 0.5 + 1e-7)

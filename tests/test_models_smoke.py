@@ -1,0 +1,93 @@
+"""Per-arch reduced-config smoke tests (assignment requirement): one
+forward/train step on CPU, asserting output shapes and no NaNs; plus
+prefill↔decode consistency."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, CONFIGS, reduced
+from repro.models import Model
+from repro.optim import make_optimizer
+from repro.train.steps import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    if cfg.family == "encoder":
+        return {
+            "features": jax.random.normal(KEY, (B, S, cfg.d_model)),
+            "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+            "mask": jnp.ones((B, S), bool),
+        }
+    return {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(CONFIGS[arch])
+    model = Model(cfg)
+    params = model.init(KEY)
+    loss, metrics = jax.jit(model.loss)(params, _batch(cfg))
+    assert jnp.isfinite(loss), metrics
+    assert 1.0 < float(loss) < 20.0
+    # one full optimizer step
+    opt = make_optimizer(cfg)
+    step = make_train_step(model, opt)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32),
+             "rng": jax.random.key_data(KEY)}
+    new_state, m = jax.jit(step)(state, _batch(cfg))
+    assert int(new_state["step"]) == 1
+    assert jnp.isfinite(m["loss"]) and jnp.isfinite(m["grad_norm"])
+    assert all(bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+               for x in jax.tree.leaves(new_state["params"]))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if CONFIGS[a].family != "encoder"])
+def test_prefill_matches_decode(arch):
+    cfg = reduced(CONFIGS[arch])
+    if cfg.moe is not None:
+        # no-drop capacity so token dropping can't cause divergence
+        cfg = replace(cfg, moe=replace(cfg.moe,
+                                       capacity_factor=float(cfg.moe.n_experts)))
+    model = Model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits_pf, _ = jax.jit(model.prefill)(params, toks)
+    cache = model.init_cache(B, S)
+    dec = jax.jit(model.decode_step)
+    for t in range(S):
+        logits_dec, cache = dec(params, cache, toks[:, t])
+    assert jnp.max(jnp.abs(logits_pf - logits_dec)) < 2e-3, arch
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "recurrentgemma-9b",
+                                  "mamba2-780m"])
+def test_long_context_decode_state_is_bounded(arch):
+    """long_500k archs: decode state must not grow with absolute position."""
+    cfg = reduced(CONFIGS[arch])
+    model = Model(cfg)
+    c64 = model.init_cache(1, 64)
+    c128 = model.init_cache(1, 128)
+    n64 = sum(x.size for x in jax.tree.leaves(c64))
+    n128 = sum(x.size for x in jax.tree.leaves(c128))
+    if cfg.family in ("ssm",):
+        assert n64 == n128  # pure-SSM state is O(1)
+    g = cfg.global_attn_fraction
+    # state growth only from global-attention layers (≤ fraction of layers)
+    assert n128 <= n64 * 2.2
+
+
+def test_encoder_shapes():
+    cfg = reduced(CONFIGS["hubert-xlarge"])
+    model = Model(cfg)
+    params = model.init(KEY)
+    feats = jax.random.normal(KEY, (2, 24, cfg.d_model))
+    logits = jax.jit(model.encode)(params, feats)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))

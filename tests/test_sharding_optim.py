@@ -1,0 +1,101 @@
+"""Sharding resolver (divisibility fallbacks) + optimizer units +
+HLO analyzer units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import CONFIGS, reduced
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_host_mesh
+from repro.optim import AdamW, Adafactor, lr_schedule
+from repro.sharding.partition import MeshAxes, spec_for_param
+
+
+AX = MeshAxes(batch=("data",), fsdp="data", model="model",
+              batch_size=16, fsdp_size=16, tp=16)
+
+
+class _K:
+    def __init__(self, key):
+        self.key = key
+
+
+def _spec(path_names, shape):
+    return spec_for_param(tuple(_K(n) for n in path_names), shape, AX)
+
+
+def test_divisible_dims_shard():
+    assert _spec(("params", "embed"), (163840, 7168)) == P("model", None)
+    assert _spec(("params", "stage_0", "b0", "q"), (60, 7168, 64, 128)) == \
+        P(None, "data", "model", None)
+    # MoE experts: E over model, d over fsdp
+    assert _spec(("moe", "wg"), (60, 384, 7168, 2048)) == \
+        P(None, "model", "data", None)
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    # kv heads = 8 < tp 16 -> replicated head dim
+    assert _spec(("b0", "k"), (60, 7168, 8, 128)) == \
+        P(None, "data", None, None)
+    # hubert vocab 504 % 16 != 0 -> no vocab sharding
+    assert _spec(("params", "embed"), (504, 1280)) == P(None, None)
+    # gemma3 q heads = 4 -> replicated
+    assert _spec(("b0", "q"), (26, 1152, 4, 256)) == \
+        P(None, "data", None, None)
+
+
+def test_norms_replicated():
+    assert _spec(("norm_in", "scale"), (1152,)) == P()
+
+
+def test_adamw_matches_manual_sgd_like_reference():
+    opt = AdamW(b1=0.0, b2=0.0, eps=1.0, weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    grads = {"w": jnp.full((4,), 2.0)}
+    new_p, _ = opt.update(grads, state, params, lr=0.1)
+    # b1=b2=0, eps=1: step = g / (|g| + 1) = 2/3
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               1.0 - 0.1 * (2.0 / 3.0), rtol=1e-5)
+
+
+def test_adafactor_factored_state_shapes():
+    opt = Adafactor(min_dim_size_to_factor=4)
+    params = {"w": jnp.ones((8, 16)), "b": jnp.ones((8,))}
+    st = opt.init(params)
+    assert st["f"]["w"]["v_row"].shape == (8,)
+    assert st["f"]["w"]["v_col"].shape == (16,)
+    assert st["f"]["b"]["v"].shape == (8,)
+    grads = {"w": jnp.ones((8, 16)), "b": jnp.ones((8,))}
+    new_p, st2 = opt.update(grads, st, params, lr=0.01)
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(new_p))
+
+
+def test_lr_schedule_shape():
+    assert float(lr_schedule(0)) < float(lr_schedule(99))
+    assert float(lr_schedule(100)) >= float(lr_schedule(9000))
+
+
+def test_hlo_analyzer_trip_counts():
+    """A scanned dot must count length× the single-body flops."""
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.ones((32, 32))
+    compiled = jax.jit(f).lower(x).compile()
+    res = analyze(compiled.as_text(), total_devices=1)
+    one_dot = 2 * 32 * 32 * 32
+    assert res["flops"] == pytest.approx(7 * one_dot, rel=0.01), res["flops"]
+
+
+def test_hlo_analyzer_collectives_counted():
+    mesh = make_host_mesh()
+    n = mesh.devices.size
+    if n < 2:
+        pytest.skip("single device: no collectives generated")

@@ -1,0 +1,44 @@
+"""Storage tiers: throttling, capacity, tiered drain/evict/locate."""
+import time
+
+import pytest
+
+from repro.core.storage import Tier, TieredStore
+
+
+def test_throttle_enforces_bandwidth(tmp_path):
+    bw = 20e6  # 20 MB/s
+    tier = Tier("slow", tmp_path, bw_bytes_per_s=bw)
+    data = b"x" * int(10e6)  # 10 MB
+    t0 = time.monotonic()
+    tier.write_file("f.bin", data)
+    dt = time.monotonic() - t0
+    assert dt >= 0.25  # ≥ (10MB - 1s bucket) / 20MB/s × safety margin
+
+
+def test_unthrottled_is_fast(tmp_path):
+    tier = Tier("fast", tmp_path)
+    t0 = time.monotonic()
+    tier.write_file("f.bin", b"x" * int(10e6))
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_tiered_drain_and_evict(tmp_path):
+    fast = Tier("fast", tmp_path / "fast")
+    slow = Tier("slow", tmp_path / "slow")
+    store = TieredStore(fast, slow, drain_async=True)
+    (fast.root / "step_1").mkdir()
+    (fast.root / "step_1" / "a.bin").write_bytes(b"hello")
+    store.drain_step("step_1")
+    store.wait_drained()
+    assert (slow.root / "step_1" / "a.bin").read_bytes() == b"hello"
+    assert store.locate("step_1/a.bin").name == "fast"
+    store.evict_fast("step_1")
+    assert store.locate("step_1/a.bin").name == "slow"
+    assert store.locate("step_1/nope.bin") is None
+
+
+def test_capacity_accounting(tmp_path):
+    tier = Tier("t", tmp_path, capacity_bytes=1000)
+    tier.write_file("a", b"x" * 600)
+    assert tier.free_bytes() == 400

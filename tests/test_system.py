@@ -1,0 +1,45 @@
+"""End-to-end behaviour of the paper's system: serve-with-C/R and the
+AOT restart cache (startup-time lesson)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.launch import serve as serve_mod
+
+
+@pytest.mark.slow
+def test_serving_preempt_and_resume_token_exact(tmp_path):
+    """Preempt a serving job mid-generation; restored job must produce the
+    exact same remaining tokens (paper's preempt-queue use case applied to
+    inference)."""
+    wd = str(tmp_path / "serve")
+    full = serve_mod.run("gemma3-1b", n_requests=3, prompt_len=8, gen_len=12,
+                         workdir=str(tmp_path / "full"), ckpt_every=0,
+                         seed=13)
+    assert full["status"] == "completed"
+    pre = serve_mod.run("gemma3-1b", n_requests=3, prompt_len=8, gen_len=12,
+                        workdir=wd, ckpt_every=0, preempt_at=5, seed=13)
+    assert pre["status"] == "preempted" and pre["cursor"] == 5
+    resumed = serve_mod.run("gemma3-1b", n_requests=3, prompt_len=8,
+                            gen_len=12, workdir=wd, ckpt_every=0, seed=13)
+    assert resumed["status"] == "completed"
+    np.testing.assert_array_equal(resumed["tokens"], full["tokens"])
+
+
+def test_aot_cache_roundtrip(tmp_path):
+    """Static-linking analogue: second bring-up loads the serialized
+    executable instead of recompiling (falls back gracefully if the backend
+    can't serialize)."""
+    from repro.core.aot_cache import AotCache
+    cache = AotCache(tmp_path / "aot")
+    fn = jax.jit(lambda x: x * 2 + 1)
+    import jax.numpy as jnp
+    args = (jnp.ones((8, 8)),)
+    c1, src1 = cache.load_or_compile(fn, args, tag="t")
+    assert src1 == "compile"
+    if cache.stats["stores"]:
+        c2, src2 = cache.load_or_compile(fn, args, tag="t")
+        assert src2 == "cache"
+        np.testing.assert_array_equal(np.asarray(c2(*args)),
+                                      np.asarray(c1(*args)))

@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests for the paper's system claims:
+
+  * bit-exact resume (Gromacs claim);
+  * preemption → checkpoint → restart (preempt-queue use case);
+  * async checkpointing overlap + drain;
+  * data-pipeline state restores exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, reduced
+from repro.core.preempt import PreemptionGuard
+from repro.data.pipeline import DataState, SyntheticPipeline
+from repro.train.loop import Trainer, TrainerConfig
+
+CFG = reduced(CONFIGS["gemma3-1b"])
+
+
+def _tcfg(tmp_path, **kw):
+    kw.setdefault("batch", 4)
+    kw.setdefault("seq_len", 32)
+    kw.setdefault("ckpt_every", 4)
+    kw.setdefault("log_every", 100)
+    return TrainerConfig(workdir=str(tmp_path / "run"), **kw)
+
+
+@pytest.mark.slow
+def test_bit_exact_resume(tmp_path):
+    """train N straight == train N/2 + ckpt + kill + restore + N/2."""
+    tA = Trainer(CFG, _tcfg(tmp_path / "a", ckpt_every=100, seed=5))
+    tA.init_or_restore()
+    tA.fit(8)
+    dA = tA.params_digest()
+
+    tB = Trainer(CFG, _tcfg(tmp_path / "b", ckpt_every=4, async_ckpt=True,
+                            seed=5))
+    tB.init_or_restore()
+    tB.fit(8, stop_after=4)
+    del tB  # "node failure"
+    tB2 = Trainer(CFG, _tcfg(tmp_path / "b", ckpt_every=4, seed=5))
+    tB2.init_or_restore()
+    assert tB2.restored_from == 4
+    tB2.fit(8)
+    assert tB2.params_digest() == dA
+
+
+@pytest.mark.slow
+def test_preemption_checkpoint_and_resume(tmp_path):
+    t = Trainer(CFG, _tcfg(tmp_path, ckpt_every=100, seed=1))
+    t.init_or_restore()
+    with PreemptionGuard() as guard:
+        t.fit(6, guard=guard, stop_after=2)
+        guard.request()                    # SIGTERM analogue
+        rep = t.fit(6, guard=guard)
+    assert rep["status"] == "preempted"
+    assert t.manager.latest_step() == rep["step"]
+    t2 = Trainer(CFG, _tcfg(tmp_path, ckpt_every=100, seed=1))
+    t2.init_or_restore()
+    assert t2.restored_from == rep["step"]
+    out = t2.fit(6)
+    assert out["status"] == "completed" and out["step"] == 6
+
+
+@pytest.mark.slow
+def test_async_checkpoint_drains_and_is_valid(tmp_path):
+    t = Trainer(CFG, _tcfg(tmp_path, ckpt_every=2, async_ckpt=True, seed=2))
+    t.init_or_restore()
+    t.fit(6)
+    assert t.manager.counters.drained()    # sent == received (P4)
+    assert t.manager.latest_step() == 6
+    t2 = Trainer(CFG, _tcfg(tmp_path, seed=2))
+    t2.init_or_restore()
+    assert t2.params_digest() == t.params_digest()
+
+
+def test_pipeline_state_restores_exactly():
+    pipe = SyntheticPipeline(CFG, batch=4, seq_len=16)
+    s0 = pipe.init_state(seed=9)
+    batches = []
+    s = s0
+    for _ in range(5):
+        b, s = pipe.next(s)
+        batches.append(b)
+    # checkpoint the state after 3 batches (JSON roundtrip = manifest path),
+    # then replay: batch 3 must be identical
+    mid = _advance(pipe, s0, 3)
+    mid = DataState.from_json(mid.to_json())
+    b3, _ = pipe.next(mid)
+    np.testing.assert_array_equal(b3["tokens"], batches[3]["tokens"])
+    # counters monotone and conserved
+    assert sum(s.source_counts) == 5 * 4 * 16
+
+
+def _advance(pipe, state, n):
+    for _ in range(n):
+        _, state = pipe.next(state)
+    return state
+
+
+def test_trainer_restores_data_state(tmp_path):
+    t = Trainer(CFG, _tcfg(tmp_path, ckpt_every=3, seed=4))
+    t.init_or_restore()
+    t.fit(3)
+    counts = t.data_state.source_counts
+    t2 = Trainer(CFG, _tcfg(tmp_path, seed=4))
+    t2.init_or_restore()
+    assert t2.data_state.step == 3
+    assert t2.data_state.source_counts == counts
