@@ -1,17 +1,32 @@
-"""Paper Fig. 2 analogue: checkpoint time vs writer-rank count on the Burst
-Buffer vs the (bandwidth-throttled) Lustre/CSCRATCH tier.
+"""Paper Fig. 2 analogue + incremental-checkpoint dedup sweep.
 
-Gromacs/ADH in the paper scaled 4→64 ranks with growing aggregate memory;
-here aggregate state grows with rank count the same way. Expected shape
-(paper's finding): BB time stays low and flat-ish; Lustre time grows with
-aggregate size — "performance on the Burst Buffers is superior … and also
-scales better."
+Fig. 2: checkpoint time vs writer-rank count on the Burst Buffer vs the
+(bandwidth-throttled) Lustre/CSCRATCH tier. Gromacs/ADH in the paper scaled
+4→64 ranks with growing aggregate memory; here aggregate state grows with
+rank count the same way. Expected shape (paper's finding): BB time stays low
+and flat-ish; Lustre time grows with aggregate size — "performance on the
+Burst Buffers is superior … and also scales better."
+
+Dedup sweep (the paper's open item, "reducing the checkpoint overhead for
+large-scale applications"): a steady-state training cadence where <20% of
+leaves change between adjacent checkpoints. Full mode re-writes O(model)
+bytes every step; incremental mode (content-addressed chunk store) writes
+only the changed chunks — the sweep reports bytes written per step for both
+modes and the resulting reduction factor.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead                # Fig 2
+  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode incremental
+  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode both
 """
 from __future__ import annotations
 
+import argparse
 import tempfile
 import time
 from pathlib import Path
+
+import numpy as np
 
 from repro.core.checkpoint import CheckpointManager
 
@@ -20,6 +35,13 @@ from .common import (abstract, bb_store, cleanup, emit, scratch_store,
 
 RANKS = (4, 8, 16, 32, 64)
 BYTES_PER_RANK = 12 << 20  # aggregate grows with ranks (ADH-style)
+
+# dedup sweep defaults: 20 leaves, 2 change per step (10% churn < the 20%
+# steady-state bound from the acceptance criterion)
+SWEEP_LEAVES = 20
+SWEEP_LEAF_BYTES = 2 << 20
+SWEEP_STEPS = 4
+SWEEP_CHANGED_PER_STEP = 2
 
 
 def run():
@@ -46,5 +68,87 @@ def run():
     return rows
 
 
+def _sweep_state(rng):
+    side = max(int((SWEEP_LEAF_BYTES // 4) ** 0.5), 1)
+    import jax.numpy as jnp
+    return {"params": {
+        f"w{i:02d}": jnp.asarray(
+            rng.standard_normal((side, side), dtype=np.float32))
+        for i in range(SWEEP_LEAVES)}}
+
+
+def _mutate(state, step, rng):
+    """Touch SWEEP_CHANGED_PER_STEP leaves (round-robin) — the steady-state
+    '<20% of leaves changed' cadence."""
+    import jax.numpy as jnp
+    for k in range(SWEEP_CHANGED_PER_STEP):
+        i = (step * SWEEP_CHANGED_PER_STEP + k) % SWEEP_LEAVES
+        name = f"w{i:02d}"
+        arr = np.asarray(state["params"][name])
+        state["params"][name] = jnp.asarray(
+            arr + rng.standard_normal(arr.shape, dtype=np.float32) * 1e-3)
+    return state
+
+
+def dedup_sweep(mode: str):
+    """Steady-state bytes-written-per-step for one save mode. Returns the
+    list of per-step written byte counts (step 1 is the cold full write)."""
+    rng = np.random.default_rng(0)
+    state = _sweep_state(rng)
+    store = bb_store(f"dedup-{mode}")
+    mgr = CheckpointManager(store, n_writers=4, codec="raw", retain=2,
+                            mode=mode, chunk_size=1 << 20)
+    written = []
+    for step in range(1, SWEEP_STEPS + 1):
+        if step > 1:
+            state = _mutate(state, step, rng)
+        t0 = time.monotonic()
+        rep = mgr.save(state, step)
+        dt = time.monotonic() - t0
+        written.append(rep["written_bytes"])
+        emit(f"dedup_{mode}_step{step}", dt * 1e6,
+             f"written_mib={rep['written_bytes']/2**20:.2f};"
+             f"payload_mib={rep['payload_bytes']/2**20:.2f};"
+             + (f"dedup_ratio={rep.get('dedup_ratio', 1.0):.1f}x"
+                if mode == "incremental" else "mode=full"))
+    # sanity: the checkpoint must still restore bit-exact
+    restored, _ = mgr.restore(abstract(state))
+    for name, arr in state["params"].items():
+        np.testing.assert_array_equal(np.asarray(arr),
+                                      np.asarray(restored["params"][name]))
+    cleanup(store)
+    return written
+
+
+def run_dedup():
+    """Full-vs-incremental steady-state comparison; emits the reduction
+    factor for the steady-state steps (2..N)."""
+    full = dedup_sweep("full")
+    incr = dedup_sweep("incremental")
+    steady_full = sum(full[1:]) / max(len(full) - 1, 1)
+    steady_incr = sum(incr[1:]) / max(len(incr) - 1, 1)
+    reduction = steady_full / max(steady_incr, 1)
+    emit("dedup_steady_state", 0,
+         f"full_mib_per_step={steady_full/2**20:.2f};"
+         f"incr_mib_per_step={steady_incr/2**20:.2f};"
+         f"reduction={reduction:.1f}x")
+    return {"full": full, "incremental": incr, "reduction": reduction}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="fig2",
+                    choices=["fig2", "full", "incremental", "both"])
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.mode == "fig2":
+        run()
+    elif args.mode == "both":
+        run_dedup()
+    else:
+        dedup_sweep(args.mode)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -5,12 +5,13 @@ two-tier storage, buddy redundancy, codecs, preemption, AOT restart cache.
 See DESIGN.md for the paper↔module map (P1–P12).
 """
 from .atomic import CrashInjector, CrashPoint
+from .cas import ChunkStore
 from .checkpoint import CheckpointManager
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
-from .errors import (AbortedError, CkptError, CorruptShardError,
-                     MissingShardError, NamespaceError, NoCheckpointError,
-                     RegistryMismatchError, SpaceError)
+from .errors import (AbortedError, CASError, CkptError, CodecUnavailableError,
+                     CorruptShardError, MissingShardError, NamespaceError,
+                     NoCheckpointError, RegistryMismatchError, SpaceError)
 from .preempt import PreemptionGuard, PreemptQueue
 from .split_state import (abstract_train_state, config_digest,
                           init_train_state, leaf_paths,
@@ -18,8 +19,9 @@ from .split_state import (abstract_train_state, config_digest,
 from .storage import Tier, TieredStore, default_store
 
 __all__ = [
-    "AbortedError", "CheckpointCoordinator", "CheckpointManager",
-    "CkptError", "CorruptShardError", "CrashInjector", "CrashPoint",
+    "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
+    "ChunkStore", "CkptError", "CodecUnavailableError",
+    "CorruptShardError", "CrashInjector", "CrashPoint",
     "DrainCounters", "MissingShardError", "NamespaceError",
     "NoCheckpointError", "PreemptQueue", "PreemptionGuard",
     "RegistryMismatchError", "SpaceError", "Tier", "TieredStore",

@@ -1,0 +1,343 @@
+"""Content-addressed chunk store (CAS) — the incremental-checkpoint engine.
+
+The paper's key open item is "reducing the checkpoint overhead for
+large-scale applications": MANA-style transparent checkpointing pays the
+full-state write cost every round. Between adjacent training steps most
+leaves (embeddings, frozen layers, optimizer slots of unchanged params) are
+byte-identical, so steady-state checkpoints should cost O(changed chunks),
+not O(model).
+
+Design:
+
+  * encoded shard payloads are split into fixed-size chunks; each chunk is
+    stored once under its blake2b digest in ``_CAS/objects/<d2>/<digest>.obj``
+    (immutable, content-addressed — a re-write of an existing digest is a
+    dedup hit and costs nothing);
+  * objects land via write-tmp → fsync → rename, so a crash mid-write leaves
+    only ``.tmp-`` litter, never a torn object;
+  * ``_CAS/refs.json`` holds the published refcount table (digest → number of
+    committed shard references). It is a CACHE: the authoritative root set is
+    the chunk lists inside committed step manifests, so any crash that
+    staleness-skews refs.json is repaired by the next mark-and-sweep;
+  * refcounts are published atomically at COMMIT (by the coordinator's commit
+    phase) — an aborted round publishes nothing and its orphaned objects are
+    reclaimed by ``sweep``;
+  * mark-and-sweep GC: mark = union of chunk refs over every committed
+    manifest on every tier, sweep = delete unreferenced objects (and tmp
+    litter) from every tier, then republish refs.json from the mark set.
+
+Buddy redundancy mirrors the shard-file story: with ``replicas=2`` every
+object is written twice (``.obj`` + ``.obj.r1``) and reads fall back
+primary → replica × fast tier → slow tier.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import secrets
+import threading
+from collections import Counter
+
+from . import atomic
+from .atomic import NO_CRASH, CrashInjector
+from .errors import CASError, CorruptShardError, MissingShardError
+from .namespace import REPLICA_SUFFIX
+from .storage import TieredStore
+
+DEFAULT_CHUNK_SIZE = 1 << 20          # 1 MiB fixed-size chunks
+DIGEST_BYTES = 16                     # blake2b-128 — 32 hex chars
+CAS_DIR = "_CAS"
+OBJECTS_DIR = f"{CAS_DIR}/objects"
+REFS_FILE = f"{CAS_DIR}/refs.json"
+OBJ_SUFFIX = ".obj"
+
+
+def chunk_digest(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=DIGEST_BYTES).hexdigest()
+
+
+def split_payload(payload: bytes, chunk_size: int):
+    """Fixed-size chunking; the final chunk may be short. Empty payloads
+    produce no chunks (reassembly yields b'')."""
+    return [payload[i:i + chunk_size]
+            for i in range(0, len(payload), chunk_size)]
+
+
+def object_rel(digest: str, replica: int = 0) -> str:
+    rel = f"{OBJECTS_DIR}/{digest[:2]}/{digest}{OBJ_SUFFIX}"
+    return rel + REPLICA_SUFFIX if replica else rel
+
+
+def live_chunk_refs(manifests) -> Counter:
+    """Mark phase: refcounts implied by an iterable of manifest dicts —
+    one reference per (shard, chunk) occurrence."""
+    live: Counter = Counter()
+    for manifest in manifests:
+        for rec in manifest.get("leaves", {}).values():
+            for s in rec.get("shards", []):
+                live.update(s.get("chunks", []))
+    return live
+
+
+class ChunkStore:
+    """Refcounted, tier-aware object store on top of a TieredStore."""
+
+    def __init__(self, store: TieredStore, *,
+                 chunk_size: int = DEFAULT_CHUNK_SIZE, replicas: int = 1):
+        if chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
+        self.store = store
+        self.chunk_size = chunk_size
+        # buddy redundancy is 2-way, mirroring shard files (one primary +
+        # one .r1 copy); higher requests clamp rather than silently writing
+        # the same replica path twice
+        self.replicas = min(max(int(replicas), 1), 2)
+        self._lock = threading.Lock()
+        self._inflight: set = set()
+
+    # ------------------------------------------------------------------
+    # objects
+    # ------------------------------------------------------------------
+    def exists(self, digest: str) -> bool:
+        return self.store.locate(object_rel(digest)) is not None or \
+            self.store.locate(object_rel(digest, 1)) is not None
+
+    def put(self, digest: str, data: bytes,
+            crash: CrashInjector = NO_CRASH) -> int:
+        """Store one chunk under its digest. Returns bytes physically
+        written (0 on a dedup hit). Safe under concurrent rank writers:
+        the first thread to claim a digest writes it; racers dedup."""
+        rels = [object_rel(digest, r) for r in range(self.replicas)]
+        with self._lock:
+            if digest in self._inflight:
+                return 0        # a prepared-barrier peer is writing it
+            # any copy absent from the FAST tier gets written: brand-new
+            # objects, and re-promotion of chunks previously evicted to
+            # the slow tier that a new round re-references — a retained
+            # step must restore at burst-buffer speed
+            to_write = [rel for rel in rels
+                        if not (self.store.fast.root / rel).exists()]
+            if not to_write:
+                return 0
+            self._inflight.add(digest)
+        written = 0
+        try:
+            fast = self.store.fast
+            for rel in to_write:
+                # deliberately NOT Tier.write_file(atomic=True): the crash
+                # matrix needs an injection point between tmp write and
+                # rename, and the object fan-out dir wants an explicit
+                # directory fsync after the batch of renames
+                tmp = f"{rel}.tmp-{secrets.token_hex(4)}"
+                fast.write_file(tmp, data)
+                crash.maybe("cas_after_obj_tmp")
+                os.rename(fast.root / tmp, fast.root / rel)
+                written += len(data)
+            atomic.fsync_dir((fast.root / rels[0]).parent)
+        finally:
+            with self._lock:
+                self._inflight.discard(digest)
+        return written
+
+    def get(self, digest: str) -> bytes:
+        """Read + verify one chunk: primary → buddy replica, each fast
+        tier → slow tier. Any single copy failing to read (vanished
+        between exists() and read — e.g. a concurrent eviction — or EIO)
+        falls through to the next copy, like shard replicas do."""
+        last_err = None
+        for replica in range(max(self.replicas, 2)):
+            rel = object_rel(digest, replica)
+            for tier in self.store.tiers():
+                if not (tier.root / rel).exists():
+                    continue
+                try:
+                    data = tier.read_file(rel)
+                except OSError as e:
+                    last_err = e
+                    continue
+                if chunk_digest(data) == digest:
+                    return data
+                last_err = CorruptShardError(
+                    "chunk content does not match its digest",
+                    digest=digest, tier=tier.name, replica=replica)
+        if last_err is not None:
+            raise last_err
+        raise MissingShardError("chunk object missing on all tiers",
+                                digest=digest)
+
+    def put_payload(self, payload: bytes,
+                    crash: CrashInjector = NO_CRASH,
+                    on_chunk=None) -> tuple:
+        """Chunk + store an encoded shard payload.
+        Returns (digest_list, new_bytes_written). `on_chunk` is invoked
+        after every stored chunk — writer ranks use it to keep their
+        coordinator heartbeat alive through long fsync-bound sequences."""
+        digests, new = [], 0
+        for chunk in split_payload(payload, self.chunk_size):
+            d = chunk_digest(chunk)
+            new += self.put(d, chunk, crash)
+            digests.append(d)
+            if on_chunk is not None:
+                on_chunk()
+        return digests, new
+
+    def read_payload(self, digests, payload_bytes: int | None = None) -> bytes:
+        payload = b"".join(self.get(d) for d in digests)
+        if payload_bytes is not None and len(payload) != payload_bytes:
+            raise CorruptShardError("reassembled payload length mismatch",
+                                    expected=payload_bytes, got=len(payload))
+        return payload
+
+    # ------------------------------------------------------------------
+    # refcounts (published cache; manifests are the root set)
+    # ------------------------------------------------------------------
+    def load_refs(self) -> dict:
+        tier = self.store.locate(REFS_FILE)
+        if tier is None:
+            return {}
+        try:
+            return {k: int(v)
+                    for k, v in json.loads(tier.read_file(REFS_FILE)).items()}
+        except (ValueError, OSError):
+            return {}           # torn cache — rebuilt by the next sweep
+
+    def publish_refs(self, refs: dict, crash: CrashInjector = NO_CRASH):
+        body = json.dumps({k: v for k, v in sorted(refs.items()) if v > 0},
+                          separators=(",", ":")).encode()
+        atomic.atomic_write_bytes(self.store.fast.root / REFS_FILE, body,
+                                  crash)
+
+    def apply_refs(self, delta, crash: CrashInjector = NO_CRASH) -> dict:
+        """COMMIT-phase atomic refcount publication (called by the
+        coordinator once a round is durably committed)."""
+        with self._lock:
+            refs = Counter(self.load_refs())
+            refs.update(delta)
+            crash.maybe("before_refs_publish")
+            self.publish_refs(dict(refs), crash)
+            return dict(refs)
+
+    # ------------------------------------------------------------------
+    # GC + fsck
+    # ------------------------------------------------------------------
+    def _iter_objects(self, tier):
+        objdir = tier.root / OBJECTS_DIR
+        if not objdir.exists():
+            return
+        for p in sorted(objdir.rglob("*")):
+            if p.is_file():
+                yield p
+
+    def sweep(self, live: Counter | dict, crash: CrashInjector = NO_CRASH,
+              fast_live: Counter | dict | None = None) -> dict:
+        """Sweep phase: delete unreferenced objects and tmp litter from
+        every tier, then republish refs.json as exactly the mark set.
+
+        `fast_live` (refcounts implied by FAST-tier manifests only) enables
+        burst-buffer reclamation — the CAS analogue of ``evict_fast``: a
+        fast-tier copy whose only references come from slow-tier history is
+        evicted, but strictly only when the identical object file already
+        exists on the slow tier, so no live object ever loses its last
+        copy. Without it the fast tier would pin every chunk ever
+        referenced by any historical step."""
+        report = {"swept": 0, "swept_bytes": 0, "kept": 0, "kept_bytes": 0,
+                  "tmp_removed": 0, "evicted": 0, "evicted_bytes": 0}
+        seen_kept: set = set()
+        for tier in self.store.tiers():
+            # a crash mid refs.json publication leaves _CAS/refs.json.tmp-*
+            # at the CAS top level (outside objects/) — reclaim it here
+            cas_dir = tier.root / CAS_DIR
+            if cas_dir.exists():
+                for t in cas_dir.glob("*.tmp-*"):
+                    if t.is_file():
+                        tier.delete_file(str(t.relative_to(tier.root)))
+                        report["tmp_removed"] += 1
+            evictable_tier = (fast_live is not None
+                              and tier is self.store.fast
+                              and self.store.slow is not None)
+            for p in self._iter_objects(tier):
+                rel = str(p.relative_to(tier.root))
+                if ".tmp-" in p.name:
+                    tier.delete_file(rel)
+                    report["tmp_removed"] += 1
+                    continue
+                digest = p.name.split(OBJ_SUFFIX)[0]
+                if digest not in live:
+                    report["swept"] += 1
+                    report["swept_bytes"] += tier.delete_file(rel)
+                    crash.maybe("mid_gc_sweep")
+                    continue
+                if evictable_tier and digest not in fast_live \
+                        and self._slow_copy_intact(rel, digest):
+                    report["evicted"] += 1
+                    report["evicted_bytes"] += tier.delete_file(rel)
+                    continue
+                if digest not in seen_kept:
+                    report["kept"] += 1
+                    report["kept_bytes"] += p.stat().st_size
+                    seen_kept.add(digest)
+        crash.maybe("before_gc_refs_publish")
+        self.publish_refs(dict(live), crash)
+        return report
+
+    def digests_on_disk(self) -> set:
+        out: set = set()
+        for tier in self.store.tiers():
+            for p in self._iter_objects(tier):
+                if ".tmp-" not in p.name:
+                    out.add(p.name.split(OBJ_SUFFIX)[0])
+        return out
+
+    def _slow_copy_intact(self, rel: str, digest: str) -> bool:
+        """Eviction gate: never trust a slow-tier copy by existence alone —
+        drains are atomic now, but a copy from an older (non-atomic) writer
+        or a damaged disk must not cost the last good replica. Unthrottled
+        read: this is an integrity check, not user-visible IO."""
+        p = self.store.slow.root / rel
+        try:
+            return p.is_file() and chunk_digest(p.read_bytes()) == digest
+        except OSError:
+            return False
+
+    def fsck(self, live: Counter | dict) -> dict:
+        """CAS invariant check against a mark set:
+          orphans  — objects on disk not referenced by any committed manifest
+          missing  — referenced digests with no readable object anywhere
+          ref_drift — refs.json disagrees with the mark set
+        Clean ⇔ all three empty."""
+        on_disk = self.digests_on_disk()
+        live_set = {d for d, n in dict(live).items() if n > 0}
+        orphans = sorted(on_disk - live_set)
+        missing = []
+        for d in sorted(live_set):
+            try:
+                self.get(d)
+            except (MissingShardError, CorruptShardError):
+                missing.append(d)
+        refs = self.load_refs()
+        live_d = dict(live)
+        drift = {d: (refs.get(d, 0), live_d.get(d, 0))
+                 for d in set(refs) | live_set
+                 if refs.get(d, 0) != live_d.get(d, 0)}
+        return {"orphans": orphans, "missing": missing, "ref_drift": drift,
+                "objects": len(on_disk),
+                "ok": not (orphans or missing or drift)}
+
+    def stats(self) -> dict:
+        """Unique object count/bytes (primaries, fast tier preferred)."""
+        uniq = {}
+        for tier in self.store.tiers():
+            for p in self._iter_objects(tier):
+                if ".tmp-" in p.name or p.name.endswith(REPLICA_SUFFIX):
+                    continue
+                uniq.setdefault(p.name.split(OBJ_SUFFIX)[0], p.stat().st_size)
+        return {"objects": len(uniq), "bytes": sum(uniq.values())}
+
+    def raise_if_inconsistent(self, live) -> None:
+        rep = self.fsck(live)
+        if not rep["ok"]:
+            raise CASError("content-addressed store failed fsck",
+                           orphans=len(rep["orphans"]),
+                           missing=len(rep["missing"]),
+                           ref_drift=len(rep["ref_drift"]))

@@ -5,17 +5,33 @@ Save path (two-phase commit, coordinator-supervised, async-capable):
 
   drain → host snapshot → [rank writers: encode+crc+write shards] → barrier
         → manifest (single handle, P7) → atomic rename commit → LATEST
-        → background drain to the slow storage tier → GC old steps
+        → refcount publication (incremental mode) → mark-and-sweep GC
+        → background drain to the slow storage tier
+
+Two save modes (``mode=``):
+
+  full         every shard payload is written inline into the step directory
+               (the v2 behaviour — O(model) bytes per checkpoint);
+  incremental  encoded shard payloads are fixed-size-chunked into the
+               content-addressed store (core.cas); the manifest records
+               per-shard chunk digest lists, unchanged chunks dedup to zero
+               write cost, and the steady-state checkpoint is O(changed
+               chunks) — the paper's "reduce checkpoint overhead" open item.
+
+Manifest format v3 adds ``mode``/``chunk_size`` and chunked shard records;
+v2 manifests (inline shard files only) remain fully readable.
 
 Restore path (elastic, P2/P6):
 
   manifest → per-device index ranges from the *current* sharding
            → plan_reads over saved ranges → read (fast tier → slow tier →
-             buddy replica) → crc verify → decode → assemble →
-             jax.make_array_from_callback → registry validation
+             buddy replica; chunked shards resolve each chunk the same way)
+           → crc verify → decode → assemble →
+           → jax.make_array_from_callback → registry validation
 
 Nothing about the saving topology is required to match: different device
-count, mesh shape, or sharding restores correctly (tested 1↔4↔8-device).
+count, mesh shape, or sharding restores correctly (tested 1↔4↔8-device),
+in both full and incremental modes.
 """
 from __future__ import annotations
 
@@ -24,30 +40,33 @@ import shutil
 import threading
 import time
 import zlib
-from collections import OrderedDict
+from collections import Counter, OrderedDict
 from pathlib import Path
 
 import jax
 import msgpack
 import numpy as np
 
-from . import atomic, codec as codec_mod
+from . import atomic, cas, codec as codec_mod
 from .atomic import NO_CRASH, CrashInjector
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
 from .elastic import ShardRange, normalize_index, assemble, plan_reads
-from .errors import (AbortedError, CorruptShardError, MissingShardError,
-                     NoCheckpointError, warn)
+from .errors import (AbortedError, CkptError, CodecUnavailableError,
+                     CorruptShardError, MissingShardError, NoCheckpointError,
+                     warn)
 from .namespace import REPLICA_SUFFIX, UPPER_DIR, leaf_to_fname
 from .registry import build_registry, registry_json, validate_against
 from .split_state import leaf_paths
 from .storage import TieredStore
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
+READABLE_FORMATS = (2, 3)          # v2 = full-mode inline shards only
+MODES = ("full", "incremental")
 
 
 # ---------------------------------------------------------------------------
-# shard files
+# shard files (full mode / v2)
 # ---------------------------------------------------------------------------
 
 def _pack_shard(leaf: str, rng: ShardRange, arr: np.ndarray, codec: str):
@@ -84,14 +103,31 @@ def _unpack_shard(data: bytes):
 
 class CheckpointManager:
     def __init__(self, store: TieredStore, *, n_writers: int = 4,
-                 codec: str = "zstd", params_codec: str | None = None,
+                 codec: str | None = None, params_codec: str | None = None,
                  replicas: int = 1, retain: int = 3,
                  keepalive_s: float = 10.0, save_timeout_s: float = 600.0,
-                 max_retries: int = 1, async_drain_to_slow: bool = True):
+                 max_retries: int = 1, async_drain_to_slow: bool = True,
+                 mode: str = "full",
+                 chunk_size: int = cas.DEFAULT_CHUNK_SIZE):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.store = store
         self.n_writers = n_writers
-        self.codec = codec
-        self.params_codec = params_codec or codec   # int8 opt-in for params
+        self.mode = mode
+        # None → best codec the environment supports (zstd needs the
+        # optional `zstandard` package; raw always works)
+        self.codec = codec or codec_mod.default_codec()
+        self.params_codec = params_codec or self.codec  # int8 opt-in
+        for c in {self.codec, self.params_codec}:
+            if c not in codec_mod.CODECS:
+                raise ValueError(f"unknown codec {c!r}")
+            if not codec_mod.available(c):
+                # fail fast with the real cause — otherwise every writer
+                # rank dies on encode and the save aborts with an opaque
+                # "no surviving writer ranks"
+                raise CodecUnavailableError(
+                    "codec requires the optional `zstandard` package "
+                    "(pip install 'repro[compress]')", codec=c)
         self.replicas = replicas                    # 2 = buddy redundancy
         self.retain = retain
         self.save_timeout_s = save_timeout_s
@@ -101,12 +137,18 @@ class CheckpointManager:
         self.coordinator = CheckpointCoordinator(n_writers,
                                                  keepalive_s=keepalive_s)
         self.counters = DrainCounters()
+        # always constructed: a full-mode manager must still RESTORE
+        # checkpoints written incrementally (and vice versa)
+        self.chunks = cas.ChunkStore(store, chunk_size=chunk_size,
+                                     replicas=replicas)
         self._async_thread: threading.Thread | None = None
         self._async_err = None
         self._read_cache: OrderedDict = OrderedDict()
         self._read_cache_bytes = 0
+        self._manifest_refs_cache: dict = {}   # (tier, step) → Counter
         self.read_cache_limit = 1 << 30
         self.last_report: dict = {}
+        self.last_gc_report: dict = {}
 
     # ------------------------------------------------------------------
     # save
@@ -190,26 +232,35 @@ class CheckpointManager:
         atomic.mark_pending(stage, {"step": step, "t": time.time()})
         coord = self.coordinator
         rel_stage = stage.name
+        incremental = self.mode == "incremental"
 
         stats_lock = threading.Lock()
-        stats = {"files": 0, "payload_bytes": 0}
+        stats = {"files": 0, "payload_bytes": 0, "written_bytes": 0,
+                 "new_object_bytes": 0, "chunks": 0}
         manifest_shards = {}
+        shard_records: dict = {}    # item index → chunked manifest record
+        shard_order: dict = {}      # leaf name → [item indices]
         dead: set = set()
 
         def assign(alive: list):
             """Round-robin shard assignment over surviving ranks; the next
-            alive rank writes the buddy replica."""
+            alive rank writes the buddy replica (full mode — in incremental
+            mode chunk objects carry their own replica copies)."""
             per_rank = {r: [] for r in alive}
             shards = {}
+            order = {}
             for i, (name, rng, arr) in enumerate(items):
                 r = alive[i % len(alive)]
                 fname = f"{UPPER_DIR}/{leaf_to_fname(name)}/shard-{i:05d}.bin"
-                per_rank[r].append((name, rng, arr, fname, False))
+                per_rank[r].append((i, name, rng, arr, fname, False))
+                order.setdefault(name, []).append(i)
+                if incremental:
+                    continue
                 replicas = [fname]
                 if self.replicas > 1 and len(alive) > 1:
                     buddy = alive[(i + 1) % len(alive)]
                     rf = fname + REPLICA_SUFFIX
-                    per_rank[buddy].append((name, rng, arr, rf, True))
+                    per_rank[buddy].append((i, name, rng, arr, rf, True))
                     replicas.append(rf)
                 shards.setdefault(name, []).append({
                     "file": fname, "replicas": replicas,
@@ -217,26 +268,57 @@ class CheckpointManager:
                     "dtype": str(arr.dtype),
                     "codec": self._leaf_codec(name),
                 })
-            return per_rank, shards
+            return per_rank, shards, order
 
         def writer(rank: int, work: list):
             try:
                 coord.rank_begin(rank)
                 nbytes = 0
                 files = []
-                for name, rng, arr, fname, is_replica in work:
-                    data, header = _pack_shard(name, rng, arr,
-                                               self._leaf_codec(name))
-                    crash.maybe(f"rank{rank}_before_write")
-                    self.store.fast.write_file(f"{rel_stage}/{fname}", data)
-                    nbytes += len(data)
-                    files.append(fname)
-                    coord.heartbeat(rank)
-                    if not is_replica:
+                rank_chunks: Counter = Counter()
+                for i, name, rng, arr, fname, is_replica in work:
+                    codec_name = self._leaf_codec(name)
+                    if incremental:
+                        payload, meta = codec_mod.encode(arr, codec_name)
+                        crash.maybe(f"rank{rank}_before_write")
+                        digests, new_bytes = self.chunks.put_payload(
+                            payload, crash,
+                            on_chunk=lambda: coord.heartbeat(rank))
+                        crash.maybe(f"rank{rank}_after_chunk_write")
+                        rank_chunks.update(digests)
+                        nbytes += new_bytes
+                        rec = {
+                            "chunks": digests,
+                            "chunk_size": self.chunks.chunk_size,
+                            "start": list(rng.start), "stop": list(rng.stop),
+                            "dtype": str(arr.dtype), "codec": codec_name,
+                            "meta": meta,
+                            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+                            "payload_bytes": len(payload),
+                        }
                         with stats_lock:
+                            shard_records[i] = rec
                             stats["files"] += 1
-                            stats["payload_bytes"] += header["payload_bytes"]
-                coord.rank_prepared(rank, nbytes=nbytes, files=files)
+                            stats["payload_bytes"] += len(payload)
+                            stats["written_bytes"] += new_bytes
+                            stats["new_object_bytes"] += new_bytes
+                            stats["chunks"] += len(digests)
+                    else:
+                        data, header = _pack_shard(name, rng, arr, codec_name)
+                        crash.maybe(f"rank{rank}_before_write")
+                        self.store.fast.write_file(f"{rel_stage}/{fname}",
+                                                   data)
+                        nbytes += len(data)
+                        files.append(fname)
+                        with stats_lock:
+                            stats["written_bytes"] += len(data)
+                            if not is_replica:
+                                stats["files"] += 1
+                                stats["payload_bytes"] += \
+                                    header["payload_bytes"]
+                    coord.heartbeat(rank)
+                coord.rank_prepared(rank, nbytes=nbytes, files=files,
+                                    chunks=rank_chunks)
             except Exception as e:  # noqa
                 coord.rank_failed(rank, f"{type(e).__name__}: {e}")
 
@@ -247,8 +329,10 @@ class CheckpointManager:
             if not alive:
                 reason = "no surviving writer ranks"
                 break
-            stats["files"] = stats["payload_bytes"] = 0
-            per_rank, manifest_shards = assign(alive)
+            for k in stats:
+                stats[k] = 0
+            shard_records.clear()
+            per_rank, manifest_shards, shard_order = assign(alive)
             coord.begin_round(step, participants=alive)
             threads = [threading.Thread(target=writer, args=(r, per_rank[r]),
                                         daemon=True) for r in alive]
@@ -259,9 +343,9 @@ class CheckpointManager:
             newly_dead = set(coord.round.failed) if coord.round else set()
             for t in threads:
                 t.join()
-            coord.finish_round(ok)
             if ok:
                 break
+            coord.finish_round(False)
             dead |= newly_dead or set(alive)  # timeout w/o blame: give up
             if attempt < self.max_retries and newly_dead:
                 warn("CKPT_W_RETRY",
@@ -269,20 +353,34 @@ class CheckpointManager:
                      "to survivors and retrying",
                      dead=sorted(dead), step=step, reason=reason)
         if not ok:
+            # ABORT leaks nothing: no manifest, no LATEST move, and no
+            # refcounts published — chunk objects a dead rank managed to
+            # write are unreferenced orphans that the next sweep reclaims
             shutil.rmtree(stage, ignore_errors=True)
             self.counters.commit(total)
             raise AbortedError("checkpoint aborted", step=step, reason=reason)
 
         # phase 2: manifest = commit record (single handle, P7)
-        manifest = {
-            "format": FORMAT_VERSION,
-            "step": step,
-            "created": time.time(),
-            "leaves": {
+        if incremental:
+            leaves = {
+                name: {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                       "shards": [shard_records[i]
+                                  for i in shard_order.get(name, [])]}
+                for name, leaf in leaf_paths(state)
+            }
+        else:
+            leaves = {
                 name: {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
                        "shards": manifest_shards.get(name, [])}
                 for name, leaf in leaf_paths(state)
-            },
+            }
+        manifest = {
+            "format": FORMAT_VERSION,
+            "mode": self.mode,
+            "step": step,
+            "created": time.time(),
+            "chunk_size": self.chunks.chunk_size if incremental else None,
+            "leaves": leaves,
             "registry": registry_json(registry),
             "extra": extra,
         }
@@ -292,48 +390,196 @@ class CheckpointManager:
         atomic.clear_pending(stage)
         final = atomic.committed_dir(self.store.root, step)
         atomic.commit_dir(stage, final, crash)
+        crash.maybe("before_latest_write")
         atomic.write_latest(self.store.root, step, crash)
+        # COMMIT phase: the coordinator publishes the round's aggregated
+        # chunk refcounts atomically; the digests are captured first so the
+        # new objects can be drained to the slow tier below
+        round_digests = sorted(coord.round.chunk_refs) if coord.round else []
+        coord.finish_round(
+            True,
+            publish_refs=(
+                (lambda refs: self.chunks.apply_refs(refs, crash))
+                if incremental else None))
         self.counters.commit(total)
-        self._gc()
-        self.store.drain_step(final.name)
+        self.last_gc_report = self._gc_locked(crash=crash)
+        self.store.drain_step(
+            final.name,
+            extra_files=[cas.object_rel(d, r)
+                         for d in round_digests
+                         for r in range(self.chunks.replicas)])
         dt = time.monotonic() - t0
         report = {
-            "step": step, "bytes": total,
+            "step": step, "mode": self.mode, "bytes": total,
             "payload_bytes": stats["payload_bytes"],
+            "written_bytes": stats["written_bytes"],
             "files": stats["files"], "seconds": dt,
             "snapshot_s": snap_s, "drain_wait_s": wait_s,
             "throughput_gbps": total / dt / 1e9 if dt else 0.0,
             "compression_ratio": total / max(stats["payload_bytes"], 1),
         }
+        if incremental:
+            # dedup ratio compares logical payload to per-copy object
+            # bytes — new_object_bytes counts physical IO across replica
+            # copies, which would read as 0.5× dedup on a cold save with
+            # buddy redundancy
+            per_copy = stats["new_object_bytes"] / self.chunks.replicas
+            report.update(
+                chunks=stats["chunks"],
+                new_object_bytes=stats["new_object_bytes"],
+                dedup_ratio=stats["payload_bytes"] / max(per_copy, 1))
         self.last_report = report
         return report
 
-    def _gc(self):
+    # ------------------------------------------------------------------
+    # GC: step retirement + CAS mark-and-sweep
+    # ------------------------------------------------------------------
+    def _live_chunk_refs(self, tiers=None, errors: list | None = None) \
+            -> Counter:
+        """Mark phase: chunk refcounts implied by every committed manifest
+        on the given tiers (default: all — old steps may survive on the
+        slow tier after fast-tier retirement and their chunks stay live).
+        Committed manifests are immutable, so per-(tier, step) ref counters
+        are memoized: each save only parses the manifest it just wrote
+        instead of re-reading the whole run history.
+
+        An unreadable manifest does NOT silently contribute zero refs: the
+        same step's copy on another tier is still consulted (a step only
+        counts as seen once successfully parsed), and any step that stays
+        unreadable everywhere is appended to `errors` so a destructive
+        caller can fail safe instead of sweeping that step's chunks."""
+        full_scan = tiers is None
+        tiers = self.store.tiers() if full_scan else tiers
+        live: Counter = Counter()
+        seen_steps: set = set()
+        failed_steps: dict = {}
+        valid_keys: set = set()
+        for tier in tiers:
+            for s in atomic.list_committed_steps(tier.root):
+                key = (tier.name, s)
+                valid_keys.add(key)
+                if s in seen_steps:
+                    continue
+                refs = self._manifest_refs_cache.get(key)
+                if refs is None:
+                    mpath = atomic.committed_dir(tier.root, s) \
+                        / atomic.MANIFEST
+                    try:
+                        refs = cas.live_chunk_refs(
+                            [json.loads(mpath.read_text())])
+                    except (OSError, ValueError):
+                        failed_steps[s] = tier.name
+                        continue
+                    self._manifest_refs_cache[key] = refs
+                seen_steps.add(s)
+                live.update(refs)
+        if errors is not None:
+            errors.extend((t, s) for s, t in failed_steps.items()
+                          if s not in seen_steps)
+        if full_scan:                      # drop memo entries of retired steps
+            for key in list(self._manifest_refs_cache):
+                if key not in valid_keys:
+                    del self._manifest_refs_cache[key]
+        return live
+
+    def gc(self, *, crash: CrashInjector = NO_CRASH) -> dict:
+        """Retire fast-tier steps beyond `retain`, clear staging litter,
+        then mark-and-sweep the content-addressed store. Crash-safe: the
+        mark set derives only from committed manifests, so a crash at any
+        point here is repaired by the next gc() — committed checkpoints
+        never lose chunks. Serializes with an in-flight async save: a
+        round's fresh chunks are unreferenced until its manifest commits,
+        and sweeping mid-round would reap them."""
+        self.wait()
+        return self._gc_locked(crash=crash, force_sweep=True)
+
+    def _gc_locked(self, *, crash: CrashInjector = NO_CRASH,
+                   force_sweep: bool = False) -> dict:
+        """GC body — called directly by the save round itself (which IS
+        the async thread, so it must not self-join via wait()).
+
+        The destructive mark-and-sweep is O(total objects + history), so
+        the per-save path only runs it when retention actually dropped a
+        step (that's when objects become garbage in bulk); an explicit
+        gc() always sweeps, which is how aborted-round orphans are
+        reclaimed on demand."""
+        # a step being drained to the slow tier MUST land before retirement
+        # and marking — otherwise retiring its fast copy mid-copy would
+        # leave its manifest on no tier and sweep would reap its chunks
+        self.store.wait_drained()
         steps = atomic.list_committed_steps(self.store.root)
-        for s in steps[:-self.retain] if self.retain else []:
+        dropped = steps[:-self.retain] if self.retain else []
+        for s in dropped:
             shutil.rmtree(atomic.committed_dir(self.store.root, s),
                           ignore_errors=True)
         atomic.gc_staging(self.store.root)
+        no_sweep = {"swept": 0, "swept_bytes": 0, "kept": 0, "kept_bytes": 0,
+                    "tmp_removed": 0, "evicted": 0, "evicted_bytes": 0}
+        if not (dropped or force_sweep):
+            return {"steps_dropped": [],
+                    "cas": dict(no_sweep, skipped=True)}
+        errors: list = []
+        live = self._live_chunk_refs(errors=errors)
+        fast_errors: list = []
+        fast_live = (self._live_chunk_refs(tiers=[self.store.fast],
+                                           errors=fast_errors)
+                     if self.store.slow is not None else None)
+        if fast_errors:
+            # eviction's mark set is incomplete (a fast-tier manifest is
+            # unreadable even though the slow copy may be fine) — evicting
+            # on it would silently demote a retained step to slow-tier
+            # bandwidth, so skip eviction this round
+            warn("CKPT_W_GC", "unreadable fast-tier manifest(s); skipping "
+                 "burst-buffer eviction this round", steps=fast_errors[:8])
+            fast_live = None
+        crash.maybe("after_gc_mark")
+        if errors:
+            # fail safe: with any committed manifest unreadable the mark
+            # set is incomplete, and sweeping would permanently delete
+            # chunks a committed checkpoint still needs
+            warn("CKPT_W_GC", "unreadable committed manifest(s); skipping "
+                 "the CAS sweep (fail-safe) — repair or remove the damaged "
+                 "step(s) and rerun gc()", steps=errors[:8])
+            return {"steps_dropped": dropped,
+                    "cas": dict(no_sweep, skipped=True,
+                                unreadable_manifests=errors)}
+        report = {"steps_dropped": dropped,
+                  "cas": self.chunks.sweep(live, crash,
+                                           fast_live=fast_live)}
+        return report
+
+    # backward-compatible alias (pre-v3 internal name)
+    def _gc(self):
+        return self.gc()
 
     # ------------------------------------------------------------------
     # restore
     # ------------------------------------------------------------------
     def latest_step(self):
-        s = atomic.read_latest(self.store.root)
-        if s is not None:
-            return s
-        for tier in self.store.tiers():
-            steps = atomic.list_committed_steps(tier.root)
-            if steps:
-                return steps[-1]
-        return None
+        """Newest restorable step. A crash between the commit rename and
+        the LATEST write leaves LATEST one step behind the newest committed
+        dir; trusting the pointer alone would make a restarted trainer
+        re-save that step and die on FileExistsError forever, so the answer
+        is max(LATEST, newest committed step on any tier)."""
+        latest = atomic.read_latest(self.store.root)
+        committed = [s for tier in self.store.tiers()
+                     for s in atomic.list_committed_steps(tier.root)]
+        newest = max(committed, default=None)
+        if latest is None or (newest is not None and newest > latest):
+            return newest
+        return latest
 
     def load_manifest(self, step: int) -> dict:
         rel = f"{atomic.committed_dir(Path('.'), step).name}/{atomic.MANIFEST}"
         tier = self.store.locate(rel)
         if tier is None:
             raise NoCheckpointError("no manifest for step", step=step)
-        return json.loads(tier.read_file(rel))
+        manifest = json.loads(tier.read_file(rel))
+        fmt = int(manifest.get("format", 0))
+        if fmt not in READABLE_FORMATS:
+            raise CkptError("unsupported manifest format", format=fmt,
+                            readable=list(READABLE_FORMATS), step=step)
+        return manifest
 
     def restore(self, abstract_state, shardings=None, *, step: int | None = None,
                 validate: bool = True):
@@ -398,7 +644,11 @@ class CheckpointManager:
         return jax.make_array_from_callback(shape, sharding, cb)
 
     def _read_shard(self, step_dir: str, srec: dict) -> np.ndarray:
-        key = srec["file"]
+        if "chunks" in srec:
+            return self._read_chunked_shard(srec)
+        # step-scoped: shard file names repeat across steps, and a failed
+        # restore can leave the cache populated for a different step
+        key = f"{step_dir}/{srec['file']}"
         if key in self._read_cache:
             return self._read_cache[key][1]
         last_err = None
@@ -421,6 +671,25 @@ class CheckpointManager:
                 continue
         raise last_err if last_err else MissingShardError(
             "unreadable shard", file=srec["file"])
+
+    def _read_chunked_shard(self, srec: dict) -> np.ndarray:
+        """v3 incremental shard: reassemble the encoded payload chunk by
+        chunk (each resolved fast tier → slow tier → buddy replica), verify
+        the whole-payload crc, then decode."""
+        key = ("cas", tuple(srec["chunks"]), srec["codec"], srec["dtype"],
+               tuple(srec["start"]), tuple(srec["stop"]))
+        if key in self._read_cache:
+            return self._read_cache[key][1]
+        payload = self.chunks.read_payload(srec["chunks"],
+                                           srec.get("payload_bytes"))
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != srec["crc32"]:
+            raise CorruptShardError("chunked payload crc mismatch",
+                                    chunks=len(srec["chunks"]))
+        rng = ShardRange(tuple(srec["start"]), tuple(srec["stop"]))
+        arr = codec_mod.decode(payload, srec["codec"], rng.shape,
+                               srec["dtype"], srec.get("meta", {}))
+        self._cache_put(key, arr)
+        return arr
 
     def _cache_put(self, key, arr):
         self._read_cache[key] = (time.monotonic(), arr)

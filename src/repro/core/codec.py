@@ -5,33 +5,68 @@ checkpoint overhead for large-scale applications"): 4×/2× size reduction on
 f32/bf16 leaves with per-block scales. The device-side quantizer has a Pallas
 TPU kernel (repro.kernels.ckpt_codec) validated against the numpy encoder
 here; on the host path we quantize with numpy after device→host transfer.
+
+`zstandard` is an OPTIONAL dependency (the `compress` extra): raw and int8
+work without it (int8 then stores its quantized payload uncompressed, flagged
+in meta so decode stays self-describing); asking for codec="zstd" without the
+package raises CodecUnavailableError with the install hint.
 """
 from __future__ import annotations
 
+import threading
+
 import numpy as np
-import zstandard
+
+from .errors import CodecUnavailableError
+
+try:
+    import zstandard
+    HAVE_ZSTD = True
+except ModuleNotFoundError:           # optional dependency (compress extra)
+    zstandard = None
+    HAVE_ZSTD = False
 
 BLOCK = 256
+CODECS = ("raw", "zstd", "int8")
 
 # zstandard (de)compressor objects are NOT thread-safe; the checkpoint writer
 # runs N rank threads concurrently (observed: "Src size is incorrect" under
 # shared compressors — the paper's missing-locks failure class). Thread-local
 # instances instead of a lock keep ranks parallel.
-import threading
-
 _TL = threading.local()
 
 
-def _zc() -> zstandard.ZstdCompressor:
+def _require_zstd(op: str):
+    if not HAVE_ZSTD:
+        raise CodecUnavailableError(
+            "codec requires the optional `zstandard` package "
+            "(pip install 'repro[compress]')", op=op)
+
+
+def _zc() -> "zstandard.ZstdCompressor":
+    _require_zstd("compress")
     if not hasattr(_TL, "zc"):
         _TL.zc = zstandard.ZstdCompressor(level=3)
     return _TL.zc
 
 
-def _zd() -> zstandard.ZstdDecompressor:
+def _zd() -> "zstandard.ZstdDecompressor":
+    _require_zstd("decompress")
     if not hasattr(_TL, "zd"):
         _TL.zd = zstandard.ZstdDecompressor()
     return _TL.zd
+
+
+def available(codec: str) -> bool:
+    """True iff `codec` is usable in this environment."""
+    if codec == "zstd":
+        return HAVE_ZSTD
+    return codec in CODECS
+
+
+def default_codec() -> str:
+    """Best lossless codec the environment supports."""
+    return "zstd" if HAVE_ZSTD else "raw"
 
 
 def _as_u16(x: np.ndarray) -> np.ndarray:
@@ -46,9 +81,11 @@ def encode(arr: np.ndarray, codec: str) -> tuple:
         return _zc().compress(np.ascontiguousarray(arr).tobytes()), {}
     if codec == "int8":
         q, scales = quantize_int8(arr)
-        payload = _zc().compress(q.tobytes() + scales.tobytes())
-        return payload, {"q_bytes": q.nbytes, "s_bytes": scales.nbytes,
-                         "n": arr.size}
+        blob = q.tobytes() + scales.tobytes()
+        meta = {"q_bytes": q.nbytes, "s_bytes": scales.nbytes, "n": arr.size}
+        if HAVE_ZSTD:
+            return _zc().compress(blob), meta
+        return blob, dict(meta, z=0)   # uncompressed, self-describing
     raise ValueError(f"unknown codec {codec!r}")
 
 
@@ -60,7 +97,7 @@ def decode(payload: bytes, codec: str, shape, dtype, meta: dict) -> np.ndarray:
         raw = _zd().decompress(payload)
         return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
     if codec == "int8":
-        raw = _zd().decompress(payload)
+        raw = payload if not meta.get("z", 1) else _zd().decompress(payload)
         q = np.frombuffer(raw[:meta["q_bytes"]], np.int8)
         scales = np.frombuffer(raw[meta["q_bytes"]:], np.float32)
         return dequantize_int8(q, scales, meta["n"]).astype(

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import Counter
 from dataclasses import dataclass, field
 from enum import Enum
 
@@ -33,6 +34,7 @@ class RankInfo:
     last_heartbeat: float = field(default_factory=time.monotonic)
     bytes_written: int = 0
     files: list = field(default_factory=list)
+    chunks: Counter = field(default_factory=Counter)   # CAS digests referenced
     node: str = ""          # rank-to-node mapping (paper's debug instrumentation)
 
 
@@ -46,6 +48,11 @@ class Round:
         self.abort_reason = ""
         self.prepared = set()
         self.failed = set()
+        # CAS refcount delta accumulated from prepared ranks; published
+        # atomically iff the round COMMITs (abort publishes nothing, so an
+        # aborted round's chunk objects are orphans for the next GC sweep —
+        # never counted references).
+        self.chunk_refs: Counter = Counter()
 
     def done(self):
         return self.aborted or self.prepared >= self.participants
@@ -100,15 +107,21 @@ class CheckpointCoordinator:
         if fail:
             raise RuntimeError(f"injected failure on rank {rank}")
 
-    def rank_prepared(self, rank: int, *, nbytes: int, files: list):
+    def rank_prepared(self, rank: int, *, nbytes: int, files: list,
+                      chunks=None):
+        """`chunks`: digest→refcount Counter of every CAS chunk the rank's
+        shards reference this round (dedup hits included — refcounts track
+        references, not writes)."""
         with self._cv:
             ri = self.ranks[rank]
             ri.state = RankState.PREPARED
             ri.bytes_written = nbytes
             ri.files = files
+            ri.chunks = Counter(chunks or {})
             ri.last_heartbeat = time.monotonic()
             if self.round and not self.round.aborted:
                 self.round.prepared.add(rank)
+                self.round.chunk_refs.update(ri.chunks)
             self._cv.notify_all()
 
     def rank_failed(self, rank: int, reason: str):
@@ -156,7 +169,11 @@ class CheckpointCoordinator:
         self._stop_monitor()
         return ok
 
-    def finish_round(self, committed: bool):
+    def finish_round(self, committed: bool, publish_refs=None):
+        """COMMIT/ABORT. On COMMIT, `publish_refs` (if given) is invoked
+        under the coordinator lock with the round's aggregated chunk-ref
+        delta — the single atomic refcount publication point. On ABORT the
+        delta is dropped: an abort leaks no references."""
         with self._lock:
             r = self.round
             self.metrics["commits" if committed else "aborts"] += 1
@@ -164,8 +181,13 @@ class CheckpointCoordinator:
                 "step": r.step, "committed": committed,
                 "reason": r.abort_reason,
                 "bytes": sum(ri.bytes_written for ri in self.ranks.values()),
+                "chunk_refs": sum(r.chunk_refs.values()),
             })
             self.round = None
+            if committed and publish_refs is not None:
+                self.metrics["ref_publishes"] = \
+                    self.metrics.get("ref_publishes", 0) + 1
+                publish_refs(dict(r.chunk_refs))
 
     def abort_reason(self) -> str:
         with self._lock:

@@ -58,6 +58,19 @@ class NoCheckpointError(CkptError):
     code = "CKPT_E_NOCKPT"
 
 
+class CodecUnavailableError(CkptError):
+    """Requested codec needs an optional dependency that is not installed
+    (e.g. codec='zstd' without the `zstandard` package — declared under the
+    `compress` extra)."""
+    code = "CKPT_E_CODEC"
+
+
+class CASError(CkptError):
+    """Content-addressed store invariant violation (digest mismatch,
+    refcount drift, orphaned or missing chunk objects)."""
+    code = "CKPT_E_CAS"
+
+
 class StaleStateError(CkptError):
     """CHANGES_PENDING marker found — structure was mid-mutation (Lesson 3)."""
     code = "CKPT_E_PENDING"

@@ -11,6 +11,7 @@ instead of a mid-write failure.
 from __future__ import annotations
 
 import os
+import secrets
 import shutil
 import threading
 import time
@@ -67,17 +68,24 @@ class Tier:
         if deficit > 0:
             time.sleep(deficit / self.bw_bytes_per_s)
 
-    def write_file(self, rel: str, data: bytes):
+    def write_file(self, rel: str, data: bytes, *, atomic: bool = False):
+        """`atomic=True` writes through a tmp name + rename so a torn write
+        can never be mistaken for a complete file (drain copies use this —
+        readers trust slow-tier files by existence)."""
         path = self.root / rel
         path.parent.mkdir(parents=True, exist_ok=True)
+        dst = path.with_name(
+            path.name + f".tmp-{secrets.token_hex(4)}") if atomic else path
         chunk = 4 << 20
-        with open(path, "wb") as f:
+        with open(dst, "wb") as f:
             for i in range(0, len(data), chunk):
                 piece = data[i:i + chunk]
                 self._throttle(len(piece))
                 f.write(piece)
             f.flush()
             os.fsync(f.fileno())
+        if atomic:
+            os.rename(dst, path)
         self._used += len(data)
         return path
 
@@ -86,6 +94,17 @@ class Tier:
         data = path.read_bytes()
         self._throttle(len(data))
         return data
+
+    def delete_file(self, rel: str) -> int:
+        """Remove a file, returning the bytes freed (0 if absent)."""
+        path = self.root / rel
+        try:
+            nbytes = path.stat().st_size
+            path.unlink()
+        except FileNotFoundError:
+            return 0
+        self._used = max(self._used - nbytes, 0)
+        return nbytes
 
 
 class TieredStore:
@@ -108,18 +127,38 @@ class TieredStore:
     def tiers(self):
         return [t for t in (self.fast, self.slow) if t is not None]
 
-    def drain_step(self, step_dir_name: str):
-        """Copy a committed checkpoint dir fast→slow (throttled)."""
+    def drain_step(self, step_dir_name: str, extra_files=()):
+        """Copy a committed checkpoint dir fast→slow (throttled) on ONE
+        background thread, preceded by `extra_files` (CAS chunk objects
+        live outside step directories). All copies are atomic writes, so a
+        killed drain never leaves a torn file under a trusted name."""
         if self.slow is None:
             return
         src = self.fast.root / step_dir_name
+        rels = [r for r in extra_files if (self.fast.root / r).is_file()]
 
         def _copy():
             try:
+                # a drain killed mid-write leaves .tmp- litter in slow-tier
+                # step dirs that nothing else walks (gc_staging covers the
+                # fast root, the CAS sweep covers _CAS) — purge it here,
+                # off the save path; drains are serialized so no live tmp
+                # file can be hit
+                for t in self.slow.root.glob("step_*/**/*.tmp-*"):
+                    try:
+                        t.unlink()
+                    except OSError:
+                        pass
+                for rel in rels:
+                    f = self.fast.root / rel
+                    if f.is_file() and not (self.slow.root / rel).exists():
+                        self.slow.write_file(rel, f.read_bytes(),
+                                             atomic=True)
                 for p in sorted(src.rglob("*")):
                     if p.is_file():
                         rel = str(Path(step_dir_name) / p.relative_to(src))
-                        self.slow.write_file(rel, p.read_bytes())
+                        self.slow.write_file(rel, p.read_bytes(),
+                                             atomic=True)
             except Exception as e:  # noqa
                 self._drain_err = e
 

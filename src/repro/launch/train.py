@@ -23,9 +23,15 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--workdir", default="runs/train")
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--codec", default="zstd",
-                    choices=["raw", "zstd", "int8"])
+    ap.add_argument("--codec", default=None,
+                    choices=["raw", "zstd", "int8"],
+                    help="default: zstd if the zstandard package is "
+                         "installed, else raw")
     ap.add_argument("--params-codec", default=None)
+    ap.add_argument("--ckpt-mode", default="full",
+                    choices=["full", "incremental"],
+                    help="incremental = content-addressed dedup checkpoints")
+    ap.add_argument("--chunk-size", type=int, default=1 << 20)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--writers", type=int, default=4)
     ap.add_argument("--grad-accum", type=int, default=1)
@@ -53,7 +59,8 @@ def main(argv=None):
         workdir=f"{args.workdir}/{args.arch}", batch=args.batch,
         seq_len=args.seq_len, ckpt_every=args.ckpt_every,
         async_ckpt=not args.sync_ckpt, codec=args.codec,
-        params_codec=args.params_codec, replicas=args.replicas,
+        params_codec=args.params_codec, ckpt_mode=args.ckpt_mode,
+        chunk_size=args.chunk_size, replicas=args.replicas,
         n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed)
     trainer = Trainer(cfg, tcfg).init_or_restore()
     report = trainer.fit(args.steps)

@@ -42,8 +42,10 @@ class TrainerConfig:
     async_ckpt: bool = True
     retain: int = 3
     n_writers: int = 4
-    codec: str = "zstd"
+    codec: str | None = None        # None = best available (zstd, else raw)
     params_codec: str | None = None
+    ckpt_mode: str = "full"         # "incremental" = CAS dedup checkpoints
+    chunk_size: int = 1 << 20
     replicas: int = 1
     seed: int = 0
     log_every: int = 10
@@ -77,7 +79,8 @@ class Trainer:
         self.manager = CheckpointManager(
             store, n_writers=tcfg.n_writers, codec=tcfg.codec,
             params_codec=tcfg.params_codec, replicas=tcfg.replicas,
-            retain=tcfg.retain)
+            retain=tcfg.retain, mode=tcfg.ckpt_mode,
+            chunk_size=tcfg.chunk_size)
         # ---- upper half ----
         self.state = None
         self.data_state: DataState | None = None

@@ -9,18 +9,24 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import atomic
+from repro.core import atomic, cas
+from repro.core import codec as codec_mod
 from repro.core.atomic import CrashInjector, CrashPoint
 from repro.core.checkpoint import CheckpointManager
-from repro.core.errors import (AbortedError, CorruptShardError,
-                               MissingShardError, NamespaceError,
-                               NoCheckpointError, RegistryMismatchError,
-                               SpaceError)
+from repro.core.elastic import ShardRange, assemble, plan_reads
+from repro.core.errors import (AbortedError, CodecUnavailableError,
+                               CorruptShardError, MissingShardError,
+                               NamespaceError, NoCheckpointError,
+                               RegistryMismatchError, SpaceError)
 from repro.core.namespace import check_leaf_name
 from repro.core.registry import validate_against
 from repro.core.storage import Tier, TieredStore
 
 KEY = jax.random.PRNGKey(0)
+
+requires_zstd = pytest.mark.skipif(not codec_mod.HAVE_ZSTD,
+                                   reason="zstandard not installed "
+                                          "(compress extra)")
 
 
 def _store(tmp_path, **kw):
@@ -44,7 +50,8 @@ def _abstract(state):
                         state)
 
 
-@pytest.mark.parametrize("codec", ["raw", "zstd"])
+@pytest.mark.parametrize("codec", [
+    "raw", pytest.param("zstd", marks=requires_zstd)])
 def test_roundtrip_exact(tmp_path, codec):
     mgr = CheckpointManager(_store(tmp_path), codec=codec, n_writers=3)
     state = _state()
@@ -55,7 +62,9 @@ def test_roundtrip_exact(tmp_path, codec):
 
 
 def test_int8_params_codec_bounded_error(tmp_path):
-    mgr = CheckpointManager(_store(tmp_path), codec="zstd",
+    # codec=None resolves to the best available lossless codec, so this
+    # runs with or without the zstandard package (int8 adapts likewise)
+    mgr = CheckpointManager(_store(tmp_path), codec=None,
                             params_codec="int8")
     state = _state()
     mgr.save(state, 1)
@@ -213,6 +222,133 @@ def test_space_preflight(tmp_path):
     tier = Tier("tiny", tmp_path / "t", capacity_bytes=100)
     with pytest.raises(SpaceError):
         tier.preflight(1000)
+
+
+@pytest.mark.skipif(codec_mod.HAVE_ZSTD, reason="zstandard installed")
+def test_zstd_codec_unavailable_raises():
+    """Without the optional `zstandard` package, asking for the zstd codec
+    is a clear coded error, not an ImportError at module import."""
+    with pytest.raises(CodecUnavailableError):
+        codec_mod.encode(np.zeros(4, np.float32), "zstd")
+    assert codec_mod.default_codec() == "raw"
+    assert not codec_mod.available("zstd")
+
+
+def _rewrite_manifest_as_v2(root: Path, step: int):
+    """Strip every v3-only field so the on-disk checkpoint is exactly what
+    the v2 writer produced."""
+    mpath = root / f"step_{step:08d}" / atomic.MANIFEST
+    m = json.loads(mpath.read_text())
+    assert m["format"] == 3
+    m["format"] = 2
+    m.pop("mode", None)
+    m.pop("chunk_size", None)
+    mpath.write_text(json.dumps(m))
+
+
+def test_v2_manifest_restores_under_v3_reader(tmp_path):
+    """Backward compatibility: a checkpoint written by the v2 (full-mode)
+    writer — inline shard files, no mode/chunk_size keys — restores under
+    the v3 code path."""
+    mgr = CheckpointManager(_store(tmp_path), codec="raw", n_writers=3)
+    state = _state()
+    mgr.save(state, 4)
+    _rewrite_manifest_as_v2(mgr.store.root, 4)
+    mgr2 = CheckpointManager(_store(tmp_path))
+    assert mgr2.load_manifest(4)["format"] == 2
+    restored, _ = mgr2.restore(_abstract(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unsupported_manifest_format_rejected(tmp_path):
+    mgr = CheckpointManager(_store(tmp_path), codec="raw")
+    mgr.save(_state(), 1)
+    mpath = mgr.store.root / "step_00000001" / atomic.MANIFEST
+    m = json.loads(mpath.read_text())
+    m["format"] = 99
+    mpath.write_text(json.dumps(m))
+    from repro.core.errors import CkptError
+    with pytest.raises(CkptError):
+        CheckpointManager(_store(tmp_path)).load_manifest(1)
+
+
+def _split_rows(mgr, parts: int):
+    """Make the manager snapshot every ≥`parts`-row leaf as `parts` row
+    shards — an N-'device' data-parallel topology without N real devices."""
+    orig = mgr._snapshot
+
+    def snap(state):
+        items = []
+        for name, rng, arr in orig(state):
+            if arr.ndim and arr.shape[0] >= parts:
+                cuts = np.linspace(0, arr.shape[0], parts + 1, dtype=int)
+                for a, b in zip(cuts[:-1], cuts[1:]):
+                    start = (int(a),) + (0,) * (arr.ndim - 1)
+                    stop = (int(b),) + tuple(arr.shape[1:])
+                    items.append((name, ShardRange(start, stop),
+                                  np.ascontiguousarray(arr[a:b])))
+            else:
+                items.append((name, rng, arr))
+        return items
+
+    mgr._snapshot = snap
+    return mgr
+
+
+def test_incremental_restore_across_topology_change(tmp_path):
+    """Save incrementally on 8 'devices' (8 row-shards per large leaf),
+    then restore on a 4-'device' topology: plan_reads must cover each new
+    quarter-range from the saved chunked eighth-ranges."""
+    mgr = _split_rows(CheckpointManager(_store(tmp_path), codec="raw",
+                                        n_writers=4, mode="incremental",
+                                        chunk_size=256), parts=8)
+    state = _state()
+    mgr.save(state, 1)
+    manifest = mgr.load_manifest(1)
+    w_rec = manifest["leaves"]["params/w"]
+    assert len(w_rec["shards"]) == 8
+    assert all("chunks" in s for s in w_rec["shards"])
+
+    # full single-device restore (8 → 1)
+    mgr1 = CheckpointManager(_store(tmp_path))
+    restored, _ = mgr1.restore(_abstract(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # 8 → 4: each of the 4 'devices' asks for a quarter row-range and
+    # assembles it from the saved chunked eighths via plan_reads
+    w = np.asarray(state["params"]["w"])
+    available = [(ShardRange(tuple(s["start"]), tuple(s["stop"])), s)
+                 for s in w_rec["shards"]]
+    rows = w.shape[0]
+    cuts = np.linspace(0, rows, 5, dtype=int)
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        target = ShardRange((int(a), 0), (int(b), w.shape[1]))
+        picks = plan_reads(target, available)
+        pieces = [(rng, mgr1._read_shard("step_00000001", s))
+                  for rng, s in picks]
+        got = assemble(target, pieces, w.dtype)
+        np.testing.assert_array_equal(got, w[a:b])
+
+
+@pytest.mark.parametrize("mode", ["full", "incremental"])
+def test_buddy_replica_chunk_loss_recovery(tmp_path, mode):
+    """replicas=2 survives losing any one primary object/file."""
+    mgr = CheckpointManager(_store(tmp_path), codec="raw", replicas=2,
+                            n_writers=2, mode=mode, chunk_size=512)
+    state = _state()
+    mgr.save(state, 3)
+    if mode == "incremental":
+        prim = next(p for p in mgr.store.root.rglob("*.obj"))
+        prim.unlink()
+    else:
+        prim = next(p for p in mgr.store.root.rglob("shard-*.bin")
+                    if not p.name.endswith(".r1"))
+        prim.unlink()
+    restored, _ = mgr.restore(_abstract(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_manifest_is_single_handle(tmp_path):

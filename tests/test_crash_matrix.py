@@ -1,0 +1,172 @@
+"""Fault-injection crash matrix for the commit/GC protocol — every
+injection point × {full, incremental} mode.
+
+Invariants asserted after EVERY simulated crash (the paper's
+missing-locks / partial-write failure class):
+
+  1. every committed step restores bit-exact to the state saved at it;
+  2. the LATEST pointer names a committed, restorable step;
+  3. after one recovery GC, the content-addressed store passes fsck —
+     zero orphaned objects, zero missing (live) objects, refcounts equal
+     to what the committed manifests imply;
+  4. a subsequent save on the recovered store commits normally.
+
+Injection points that a mode never reaches (e.g. chunk-write points in
+full mode) simply let the save commit — the invariants must hold there
+too, so the matrix stays uniform at 13 points × 2 modes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import atomic
+from repro.core.atomic import CrashInjector, CrashPoint
+from repro.core.checkpoint import CheckpointManager
+from repro.core.errors import AbortedError
+from repro.core.storage import Tier, TieredStore
+
+KEY = jax.random.PRNGKey(3)
+
+# ≥ 8 injection points per mode (acceptance criterion): writer phase,
+# chunk-object writes, manifest write, commit rename, LATEST move,
+# refcount publication, and every GC phase (mark, sweep, refs republish)
+POINTS = [
+    "rank0_before_write",        # writer dies before its first write
+    "cas_after_obj_tmp",         # torn chunk-object write (tmp litter)
+    "rank0_after_chunk_write",   # writer dies with orphan chunks on disk
+    "before_manifest",           # all shards durable, no commit record
+    "after_tmp_write",           # manifest tmp written, not yet renamed
+    "after_rename",              # manifest renamed, parent dir not fsynced
+    "before_commit_rename",      # staging dir fully written, not promoted
+    "after_commit_rename",       # committed, LATEST still points back
+    "before_latest_write",       # committed, LATEST update never started
+    "before_refs_publish",       # committed, refcount publication lost
+    "after_gc_mark",             # GC died between mark and sweep
+    "mid_gc_sweep",              # GC died mid-sweep (partial deletion)
+    "before_gc_refs_publish",    # swept, refs.json republish lost
+]
+
+
+def _store(tmp_path):
+    return TieredStore(Tier("fast", tmp_path / "fast"))
+
+
+def _state(seed: int):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (32, 16)),
+                   "frozen": jax.random.normal(KEY, (64, 8))},
+        "opt": {"m": jnp.arange(512, dtype=jnp.float32).reshape(32, 16)},
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+def _abstract(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def _assert_restores(mgr, step, expect):
+    restored, _ = mgr.restore(_abstract(expect), step=step)
+    for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mode", ["full", "incremental"])
+@pytest.mark.parametrize("point", POINTS)
+def test_crash_matrix(tmp_path, mode, point):
+    def mk(**kw):
+        # generous keepalive: CI boxes stall on fsync under suite-wide IO
+        # pressure, and a spurious keepalive abort is not what this matrix
+        # is probing. retain=1 so the second save actually drops a step —
+        # the per-save path only runs the destructive sweep on retirement,
+        # and the GC injection points must fire inside a real sweep.
+        return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
+                                 mode=mode, chunk_size=512, retain=1,
+                                 max_retries=0, keepalive_s=60.0, **kw)
+
+    states = {1: _state(1), 2: _state(2)}
+    mk().save(states[1], 1)
+    try:
+        mk().save(states[2], 2, crash=CrashInjector(point))
+        crashed = False
+    except (CrashPoint, AbortedError):
+        crashed = True
+
+    # --- recovery: fresh manager = fresh process after the crash ---
+    mgr = mk()
+    gc_report = mgr.gc()                 # staging litter + mark-and-sweep
+    committed = atomic.list_committed_steps(mgr.store.root)
+    assert committed, "no committed checkpoint survived the crash"
+    assert committed[0] >= 1 and committed[-1] <= 2
+
+    # invariant 2: latest_step() names the NEWEST committed step even when
+    # the crash landed between the commit rename and the LATEST write — a
+    # trainer trusting a stale pointer would re-save the committed step and
+    # crash-loop on FileExistsError forever
+    latest = mgr.latest_step()
+    assert latest == committed[-1]
+
+    # invariant 1: every committed step restores bit-exact
+    for s in committed:
+        _assert_restores(mgr, s, states[s])
+
+    # invariant 3: zero leaked/missing CAS objects after GC
+    live = mgr._live_chunk_refs()
+    fsck = mgr.chunks.fsck(live)
+    assert fsck["ok"], (point, mode, fsck)
+    if mode == "full" and not crashed:
+        # full-mode commits keep the CAS empty — nothing to leak
+        assert fsck["objects"] == 0
+
+    # invariant 4: the recovered store accepts the next checkpoint — the
+    # step a restarted trainer would actually reach (latest + 1)
+    nxt = latest + 1
+    states[nxt] = _state(nxt)
+    rep = mgr.save(states[nxt], nxt)
+    assert rep["step"] == nxt
+    _assert_restores(mgr, nxt, states[nxt])
+    live = mgr._live_chunk_refs()
+    assert mgr.chunks.fsck(live)["ok"]
+
+
+@pytest.mark.parametrize("mode", ["full", "incremental"])
+def test_repeated_crashes_then_recovery(tmp_path, mode):
+    """Crash at a DIFFERENT point on every consecutive round — the store
+    must stay consistent through an arbitrary crash history, not just one
+    isolated fault."""
+    def mk():
+        return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
+                                 mode=mode, chunk_size=512, retain=2,
+                                 max_retries=0, keepalive_s=60.0)
+
+    state = _state(0)
+    mk().save(state, 1)
+    good = {1: state}
+    step = 2
+    for point in ["rank0_after_chunk_write", "before_manifest",
+                  "before_latest_write", "mid_gc_sweep"]:
+        nxt = _state(step)
+        try:
+            mk().save(nxt, step, crash=CrashInjector(point))
+            good[step] = nxt
+        except (CrashPoint, AbortedError):
+            pass
+        mgr = mk()
+        committed = atomic.list_committed_steps(mgr.store.root)
+        # a crash may or may not have committed; either way the newest
+        # committed step must restore and fsck must come back clean
+        assert committed
+        newest = committed[-1]
+        if newest in good:
+            _assert_restores(mgr, newest, good[newest])
+        mgr.gc()
+        assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+        step += 1
+    # final full recovery round
+    mgr = mk()
+    final = _state(99)
+    mgr.save(final, step)
+    _assert_restores(mgr, step, final)
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]

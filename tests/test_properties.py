@@ -1,10 +1,17 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
-from repro.core.codec import decode, dequantize_int8, encode, quantize_int8
-from repro.core.elastic import ShardRange, assemble, normalize_index, overlap
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.codec import (HAVE_ZSTD, decode, dequantize_int8,  # noqa: E402
+                              encode, quantize_int8)
+from repro.core.elastic import (ShardRange, assemble,  # noqa: E402
+                                normalize_index, overlap)
+
+CODECS = ["raw", "int8"] + (["zstd"] if HAVE_ZSTD else [])
 
 
 # ---------------------------------------------------------------------------
@@ -22,7 +29,7 @@ def test_int8_roundtrip_error_bound(xs):
     assert np.all(np.abs(y - x) <= scales * 0.5 + 1e-6)
 
 
-@given(st.sampled_from(["raw", "zstd", "int8"]),
+@given(st.sampled_from(CODECS),
        st.integers(1, 500), st.sampled_from(["float32", "int32"]))
 @settings(max_examples=40, deadline=None)
 def test_codec_roundtrip(codec, n, dtype):
