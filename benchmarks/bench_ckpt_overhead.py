@@ -1,4 +1,5 @@
-"""Paper Fig. 2 analogue + incremental-checkpoint dedup sweep.
+"""Paper Fig. 2 analogue + incremental-checkpoint dedup and IO-pipeline
+sweeps.
 
 Fig. 2: checkpoint time vs writer-rank count on the Burst Buffer vs the
 (bandwidth-throttled) Lustre/CSCRATCH tier. Gromacs/ADH in the paper scaled
@@ -11,13 +12,31 @@ Dedup sweep (the paper's open item, "reducing the checkpoint overhead for
 large-scale applications"): a steady-state training cadence where <20% of
 leaves change between adjacent checkpoints. Full mode re-writes O(model)
 bytes every step; incremental mode (content-addressed chunk store) writes
-only the changed chunks — the sweep reports bytes written per step for both
-modes and the resulting reduction factor.
+only the changed chunks — the sweep reports bytes written AND save/restore
+wall-clock per step for both modes.
+
+IO sweep (``--mode io-sweep``): save + restore wall-clock of the pipelined
+chunk engine (``--io-threads N``) against the serial baseline
+(``io_threads=1`` = the PR-1 chunk-at-a-time path with a directory fsync
+per object). Runs on a REAL (unthrottled) disk store so fsync costs are
+physical, with a single writer rank so the sweep isolates the per-rank
+chunk pipeline — in production each host runs one writer agent and the
+chunk pool is where its parallelism lives.
+
+CDC churn (``--mode cdc-churn``): a shifted-payload churn model — each
+step inserts a few bytes near the front of a large byte-blob leaf, the
+worst case for fixed-size chunking (every boundary moves) and the case
+content-defined chunking exists for. Reports steady-state bytes written
+under both schemes at equal average chunk size.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead                # Fig 2
-  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode incremental
   PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode both
+  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode io-sweep \
+      --io-threads 8
+  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode cdc-churn
+  (--chunking cdc applies the content-defined chunker to the dedup sweeps;
+   --tiny shrinks every workload for CI smoke runs)
 """
 from __future__ import annotations
 
@@ -30,8 +49,8 @@ import numpy as np
 
 from repro.core.checkpoint import CheckpointManager
 
-from .common import (abstract, bb_store, cleanup, emit, scratch_store,
-                     synth_state)
+from .common import (abstract, bb_store, cleanup, emit, io_sweep_compare,
+                     scratch_store, synth_state)
 
 RANKS = (4, 8, 16, 32, 64)
 BYTES_PER_RANK = 12 << 20  # aggregate grows with ranks (ADH-style)
@@ -43,12 +62,15 @@ SWEEP_LEAF_BYTES = 2 << 20
 SWEEP_STEPS = 4
 SWEEP_CHANGED_PER_STEP = 2
 
+IO_SWEEP_BYTES = 192 << 20       # pipelined-engine workload (disk store)
+CHURN_BLOB_BYTES = 48 << 20      # cdc-churn byte-blob leaf
 
-def run():
+
+def run(tiny=False):
     rows = []
     tmp = Path(tempfile.mkdtemp())
-    for ranks in RANKS:
-        agg = ranks * BYTES_PER_RANK
+    for ranks in RANKS[:2] if tiny else RANKS:
+        agg = ranks * BYTES_PER_RANK // (8 if tiny else 1)
         state = synth_state(agg, shards=ranks)
         times = {}
         for tier_name, store in (("bb", bb_store(f"fig2-{ranks}")),
@@ -68,8 +90,9 @@ def run():
     return rows
 
 
-def _sweep_state(rng):
-    side = max(int((SWEEP_LEAF_BYTES // 4) ** 0.5), 1)
+def _sweep_state(rng, tiny=False):
+    leaf_bytes = SWEEP_LEAF_BYTES // (8 if tiny else 1)
+    side = max(int((leaf_bytes // 4) ** 0.5), 1)
     import jax.numpy as jnp
     return {"params": {
         f"w{i:02d}": jnp.asarray(
@@ -90,14 +113,15 @@ def _mutate(state, step, rng):
     return state
 
 
-def dedup_sweep(mode: str):
+def dedup_sweep(mode: str, *, chunking="fixed", io_threads=4, tiny=False):
     """Steady-state bytes-written-per-step for one save mode. Returns the
     list of per-step written byte counts (step 1 is the cold full write)."""
     rng = np.random.default_rng(0)
-    state = _sweep_state(rng)
-    store = bb_store(f"dedup-{mode}")
+    state = _sweep_state(rng, tiny)
+    store = bb_store(f"dedup-{mode}-{chunking}")
     mgr = CheckpointManager(store, n_writers=4, codec="raw", retain=2,
-                            mode=mode, chunk_size=1 << 20)
+                            mode=mode, chunk_size=1 << 20,
+                            chunking=chunking, io_threads=io_threads)
     written = []
     for step in range(1, SWEEP_STEPS + 1):
         if step > 1:
@@ -106,13 +130,19 @@ def dedup_sweep(mode: str):
         rep = mgr.save(state, step)
         dt = time.monotonic() - t0
         written.append(rep["written_bytes"])
-        emit(f"dedup_{mode}_step{step}", dt * 1e6,
+        emit(f"dedup_{mode}_{chunking}_step{step}", dt * 1e6,
+             f"save_s={dt:.3f};"
              f"written_mib={rep['written_bytes']/2**20:.2f};"
              f"payload_mib={rep['payload_bytes']/2**20:.2f};"
              + (f"dedup_ratio={rep.get('dedup_ratio', 1.0):.1f}x"
                 if mode == "incremental" else "mode=full"))
-    # sanity: the checkpoint must still restore bit-exact
+    # sanity: the checkpoint must still restore bit-exact — and report the
+    # restore wall-clock alongside the write-side numbers
+    t0 = time.monotonic()
     restored, _ = mgr.restore(abstract(state))
+    restore_s = time.monotonic() - t0
+    emit(f"dedup_{mode}_{chunking}_restore", restore_s * 1e6,
+         f"restore_s={restore_s:.3f}")
     for name, arr in state["params"].items():
         np.testing.assert_array_equal(np.asarray(arr),
                                       np.asarray(restored["params"][name]))
@@ -120,33 +150,109 @@ def dedup_sweep(mode: str):
     return written
 
 
-def run_dedup():
+def run_dedup(chunking="fixed", io_threads=4, tiny=False):
     """Full-vs-incremental steady-state comparison; emits the reduction
     factor for the steady-state steps (2..N)."""
-    full = dedup_sweep("full")
-    incr = dedup_sweep("incremental")
+    full = dedup_sweep("full", io_threads=io_threads, tiny=tiny)
+    incr = dedup_sweep("incremental", chunking=chunking,
+                       io_threads=io_threads, tiny=tiny)
     steady_full = sum(full[1:]) / max(len(full) - 1, 1)
     steady_incr = sum(incr[1:]) / max(len(incr) - 1, 1)
     reduction = steady_full / max(steady_incr, 1)
     emit("dedup_steady_state", 0,
+         f"chunking={chunking};"
          f"full_mib_per_step={steady_full/2**20:.2f};"
          f"incr_mib_per_step={steady_incr/2**20:.2f};"
          f"reduction={reduction:.1f}x")
     return {"full": full, "incremental": incr, "reduction": reduction}
 
 
+# ---------------------------------------------------------------------------
+# IO-pipeline sweep: pipelined engine vs the serial baseline
+# ---------------------------------------------------------------------------
+
+def io_sweep(io_threads=8, chunking="fixed", tiny=False, reps=5):
+    # 512 KiB chunks: the save-side sweep exercises the per-object
+    # fsync/rename tax the pipelined engine batches away (the restore-side
+    # sweep in bench_restart uses 1 MiB chunks, the read-optimal size)
+    return io_sweep_compare("io_sweep", agg=IO_SWEEP_BYTES, shards=24,
+                            seed=1, io_threads=io_threads,
+                            chunking=chunking, tiny=tiny, reps=reps,
+                            chunk_size=512 << 10, primary="save")
+
+
+# ---------------------------------------------------------------------------
+# CDC churn: shifted payloads, fixed vs content-defined at equal avg size
+# ---------------------------------------------------------------------------
+
+def cdc_churn(tiny=False, steps=4):
+    import jax.numpy as jnp
+    blob_bytes = CHURN_BLOB_BYTES // (16 if tiny else 1)
+    rng = np.random.default_rng(3)
+    base = bytearray(rng.bytes(blob_bytes))
+    results = {}
+    for chunking in ("fixed", "cdc"):
+        store = bb_store(f"churn-{chunking}")
+        # 256 KiB average: enough chunks per blob that "only chunks
+        # overlapping the edit" is visible even in --tiny mode
+        mgr = CheckpointManager(store, n_writers=2, codec="raw", retain=2,
+                                mode="incremental", chunk_size=256 << 10,
+                                chunking=chunking, keepalive_s=120.0)
+        buf = bytes(base)
+        written = []
+        for step in range(1, steps + 1):
+            if step > 1:
+                # shifted churn: insert a few bytes near the front, keep
+                # the leaf shape constant — every fixed-size boundary after
+                # the edit moves
+                pos = int(rng.integers(0, blob_bytes // 16))
+                buf = (buf[:pos] + rng.bytes(24) + buf[pos:])[:blob_bytes]
+            state = {"blob": jnp.asarray(np.frombuffer(buf, np.uint8))}
+            t0 = time.monotonic()
+            rep = mgr.save(state, step)
+            dt = time.monotonic() - t0
+            written.append(rep["written_bytes"])
+            emit(f"cdc_churn_{chunking}_step{step}", dt * 1e6,
+                 f"save_s={dt:.3f};"
+                 f"written_mib={rep['written_bytes']/2**20:.2f}")
+        restored, _ = mgr.restore(abstract(state))
+        np.testing.assert_array_equal(np.asarray(restored["blob"]),
+                                      np.frombuffer(buf, np.uint8))
+        results[chunking] = sum(written[1:]) / max(len(written) - 1, 1)
+        cleanup(store)
+    advantage = results["fixed"] / max(results["cdc"], 1)
+    emit("cdc_churn_steady_state", 0,
+         f"fixed_mib_per_step={results['fixed']/2**20:.2f};"
+         f"cdc_mib_per_step={results['cdc']/2**20:.2f};"
+         f"cdc_advantage={advantage:.1f}x")
+    return {"results": results, "advantage": advantage}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="fig2",
-                    choices=["fig2", "full", "incremental", "both"])
+                    choices=["fig2", "full", "incremental", "both",
+                             "io-sweep", "cdc-churn"])
+    ap.add_argument("--chunking", default="fixed",
+                    choices=["fixed", "cdc"])
+    ap.add_argument("--io-threads", type=int, default=8)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: shrink every workload")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.mode == "fig2":
-        run()
+        run(tiny=args.tiny)
     elif args.mode == "both":
-        run_dedup()
+        run_dedup(chunking=args.chunking, io_threads=args.io_threads,
+                  tiny=args.tiny)
+    elif args.mode == "io-sweep":
+        io_sweep(io_threads=args.io_threads, chunking=args.chunking,
+                 tiny=args.tiny)
+    elif args.mode == "cdc-churn":
+        cdc_churn(tiny=args.tiny)
     else:
-        dedup_sweep(args.mode)
+        dedup_sweep(args.mode, chunking=args.chunking,
+                    io_threads=args.io_threads, tiny=args.tiny)
     return 0
 
 

@@ -1,24 +1,35 @@
 """Paper HPCG paragraph analogue: checkpoint AND restart times on both
 tiers at fixed large-ish state. The paper reports >20× BB speedup for
 checkpointing and ~2.5× for restart (restart is read-bound + reconstruction
-— less tier-sensitive), at 512 ranks / 5.8 TB aggregate."""
+— less tier-sensitive), at 512 ranks / 5.8 TB aggregate.
+
+``--mode io-sweep`` measures the RESTART side of the pipelined chunk
+engine: one incremental checkpoint on a real (unthrottled) disk store,
+restored by the serial baseline (``io_threads=1`` — the PR-1
+chunk-at-a-time, digest-re-hash-every-chunk path) and by the pipelined
+engine (``--io-threads N``: leaf-level fan-out, chunk prefetch, payload
+crc32 as the end-to-end integrity gate). Save wall-clock for both engines
+is reported alongside, writing to separate stores.
+"""
 from __future__ import annotations
 
+import argparse
 import tempfile
 import time
 from pathlib import Path
 
 from repro.core.checkpoint import CheckpointManager
 
-from .common import (abstract, bb_store, cleanup, emit, scratch_store,
-                     synth_state)
+from .common import (abstract, bb_store, cleanup, emit, io_sweep_compare,
+                     scratch_store, synth_state)
 
 AGG = 256 << 20  # scaled-down 5.8 TB stand-in
 
 
-def run():
+def run(tiny=False):
     tmp = Path(tempfile.mkdtemp())
-    state = synth_state(AGG, shards=32)
+    agg = AGG // (16 if tiny else 1)
+    state = synth_state(agg, shards=32)
     out = {}
     for tier_name, store in (("bb", bb_store("hpcg")),
                              ("scratch", scratch_store("hpcg", tmp))):
@@ -34,7 +45,7 @@ def run():
     ck_speed = out["scratch"][0] / max(out["bb"][0], 1e-9)
     rs_speed = out["scratch"][1] / max(out["bb"][1], 1e-9)
     emit("hpcg_ckpt_restart", out["bb"][0] * 1e6,
-         f"agg_gib={AGG/2**30:.2f};bb_ckpt_s={out['bb'][0]:.3f};"
+         f"agg_gib={agg/2**30:.2f};bb_ckpt_s={out['bb'][0]:.3f};"
          f"scratch_ckpt_s={out['scratch'][0]:.3f};"
          f"bb_restart_s={out['bb'][1]:.3f};"
          f"scratch_restart_s={out['scratch'][1]:.3f};"
@@ -42,5 +53,32 @@ def run():
     return out
 
 
+def io_sweep(io_threads=8, chunking="fixed", tiny=False, reps=5):
+    # same 192 MiB / 24-shard workload as bench_ckpt_overhead's io-sweep,
+    # at the read-optimal 1 MiB chunk size (the save sweep uses 512 KiB,
+    # which stresses the write-side per-object fsync tax instead)
+    return io_sweep_compare("restart_io_sweep", agg=192 << 20, shards=24,
+                            seed=1, io_threads=io_threads,
+                            chunking=chunking, tiny=tiny, reps=reps,
+                            retain=1, primary="restore")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="tiers", choices=["tiers", "io-sweep"])
+    ap.add_argument("--chunking", default="fixed",
+                    choices=["fixed", "cdc"])
+    ap.add_argument("--io-threads", type=int, default=8)
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.mode == "io-sweep":
+        io_sweep(io_threads=args.io_threads, chunking=args.chunking,
+                 tiny=args.tiny)
+    else:
+        run(tiny=args.tiny)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

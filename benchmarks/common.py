@@ -56,3 +56,73 @@ def cleanup(store: TieredStore):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def io_sweep_compare(prefix: str, *, agg: int, shards: int, seed: int,
+                     io_threads: int = 8, chunking: str = "fixed",
+                     tiny: bool = False, reps: int = 5, retain: int = 2,
+                     chunk_size: int = 1 << 20,
+                     primary: str = "save") -> dict:
+    """Serial chunk-IO baseline (``io_threads=1``, the pre-pipeline
+    engine) vs the pipelined engine, on a REAL unthrottled disk store so
+    fsync costs are physical, with a single writer rank so the sweep
+    isolates the per-rank chunk pipeline.
+
+    Protocol: an untimed warmup pair, then ``reps`` interleaved
+    serial/pipelined rep pairs; the headline speedup is the MEDIAN OF
+    PER-REP PAIRED RATIOS — serial and pipelined run seconds apart within
+    a rep, so each ratio is consistent w.r.t. the backing filesystem's
+    latency phase, where a ratio of unpaired medians is not."""
+    import statistics
+    import time
+
+    from repro.core.checkpoint import CheckpointManager
+    from repro.core.storage import Tier, TieredStore
+
+    if io_threads <= 1:
+        raise SystemExit("io-sweep compares the pipelined engine against "
+                         "the io_threads=1 serial baseline; pass "
+                         "--io-threads > 1")
+    agg = agg // (16 if tiny else 1)
+    reps = 1 if tiny else reps
+    state = synth_state(agg, shards=shards, seed=seed)
+    samples: dict = {1: [], io_threads: []}
+    for rep in range(-1 if not tiny else 0, reps):
+        for threads in (1, io_threads):
+            tmp = Path(tempfile.mkdtemp())
+            store = TieredStore(Tier("disk", tmp / f"io{threads}"))
+            mgr = CheckpointManager(store, n_writers=1, codec="raw",
+                                    retain=retain, mode="incremental",
+                                    chunk_size=chunk_size, chunking=chunking,
+                                    io_threads=threads, keepalive_s=120.0)
+            t0 = time.monotonic()
+            mgr.save(state, 1)
+            save_s = time.monotonic() - t0
+            t0 = time.monotonic()
+            restored, _ = mgr.restore(abstract(state))
+            restore_s = time.monotonic() - t0
+            np.testing.assert_array_equal(
+                np.asarray(state["params"]["w0"]),
+                np.asarray(restored["params"]["w0"]))
+            if rep >= 0:                    # rep -1 = untimed warmup
+                samples[threads].append((save_s, restore_s))
+            mgr.close()
+            shutil.rmtree(tmp, ignore_errors=True)
+    for threads, ss in samples.items():
+        med = {"save": statistics.median(s for s, _ in ss),
+               "restore": statistics.median(r for _, r in ss)}
+        emit(f"{prefix}_threads{threads}", med[primary] * 1e6,
+             f"agg_mib={agg/2**20:.0f};chunking={chunking};reps={reps};"
+             f"save_s={med['save']:.3f};restore_s={med['restore']:.3f}")
+    save_speedup = statistics.median(
+        s1 / max(s8, 1e-9) for (s1, _), (s8, _)
+        in zip(samples[1], samples[io_threads]))
+    restore_speedup = statistics.median(
+        r1 / max(r8, 1e-9) for (_, r1), (_, r8)
+        in zip(samples[1], samples[io_threads]))
+    emit(f"{prefix}_speedup", 0,
+         f"io_threads={io_threads};chunking={chunking};"
+         f"save_speedup={save_speedup:.2f}x;"
+         f"restore_speedup={restore_speedup:.2f}x")
+    return {"save_speedup": save_speedup,
+            "restore_speedup": restore_speedup}

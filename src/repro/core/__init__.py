@@ -6,7 +6,9 @@ See DESIGN.md for the paper↔module map (P1–P12).
 """
 from .atomic import CrashInjector, CrashPoint
 from .cas import ChunkStore
+from .cdc import GearChunker
 from .checkpoint import CheckpointManager
+from .chunk_exec import ChunkIOExecutor
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
 from .errors import (AbortedError, CASError, CkptError, CodecUnavailableError,
@@ -20,9 +22,9 @@ from .storage import Tier, TieredStore, default_store
 
 __all__ = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
-    "ChunkStore", "CkptError", "CodecUnavailableError",
+    "ChunkIOExecutor", "ChunkStore", "CkptError", "CodecUnavailableError",
     "CorruptShardError", "CrashInjector", "CrashPoint",
-    "DrainCounters", "MissingShardError", "NamespaceError",
+    "DrainCounters", "GearChunker", "MissingShardError", "NamespaceError",
     "NoCheckpointError", "PreemptQueue", "PreemptionGuard",
     "RegistryMismatchError", "SpaceError", "Tier", "TieredStore",
     "abstract_train_state", "config_digest", "default_store",

@@ -18,14 +18,25 @@ Two save modes (``mode=``):
                write cost, and the steady-state checkpoint is O(changed
                chunks) — the paper's "reduce checkpoint overhead" open item.
 
-Manifest format v3 adds ``mode``/``chunk_size`` and chunked shard records;
-v2 manifests (inline shard files only) remain fully readable.
+Incremental chunking comes in two schemes (``chunking=``): ``fixed``
+(fixed-size split) and ``cdc`` (FastCDC-style content-defined chunking,
+``core.cdc``) — CDC keeps deduping when a payload shifts by a few bytes,
+where fixed-size boundaries all move. The chunk data path is pipelined
+across a bounded IO pool (``io_threads=``, ``core.chunk_exec``): writer
+ranks hash+write chunks concurrently with one directory fsync per batch,
+and restore prefetches chunks ahead of reassembly.
+
+Manifest format v4 records the chunking scheme per shard record (and
+manifest-wide); v3 (``mode``/``chunk_size``, chunked records) and v2
+(inline shard files only) remain fully readable — mixed-history restores
+and GC work across all three.
 
 Restore path (elastic, P2/P6):
 
   manifest → per-device index ranges from the *current* sharding
-           → plan_reads over saved ranges → read (fast tier → slow tier →
-             buddy replica; chunked shards resolve each chunk the same way)
+           → plan_reads over saved ranges → leaf-level fan-out across the
+             restore pool → read (fast tier → slow tier → buddy replica;
+             chunked shards prefetch chunks the same way)
            → crc verify → decode → assemble →
            → jax.make_array_from_callback → registry validation
 
@@ -47,8 +58,9 @@ import jax
 import msgpack
 import numpy as np
 
-from . import atomic, cas, codec as codec_mod
+from . import atomic, cas, cdc, codec as codec_mod
 from .atomic import NO_CRASH, CrashInjector
+from .chunk_exec import DEFAULT_IO_THREADS, ChunkIOExecutor, cpu_cap
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
 from .elastic import ShardRange, normalize_index, assemble, plan_reads
@@ -60,9 +72,12 @@ from .registry import build_registry, registry_json, validate_against
 from .split_state import leaf_paths
 from .storage import TieredStore
 
-FORMAT_VERSION = 3
-READABLE_FORMATS = (2, 3)          # v2 = full-mode inline shards only
+FORMAT_VERSION = 4
+# v2 = full-mode inline shards only; v3 = chunked records, implicitly
+# fixed-size chunking (no per-record scheme field)
+READABLE_FORMATS = (2, 3, 4)
 MODES = ("full", "incremental")
+CHUNKINGS = ("fixed", "cdc")
 
 
 # ---------------------------------------------------------------------------
@@ -108,12 +123,23 @@ class CheckpointManager:
                  keepalive_s: float = 10.0, save_timeout_s: float = 600.0,
                  max_retries: int = 1, async_drain_to_slow: bool = True,
                  mode: str = "full",
-                 chunk_size: int = cas.DEFAULT_CHUNK_SIZE):
+                 chunk_size: int = cas.DEFAULT_CHUNK_SIZE,
+                 chunking: str = "fixed",
+                 io_threads: int = DEFAULT_IO_THREADS):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if chunking not in CHUNKINGS:
+            raise ValueError(f"chunking must be one of {CHUNKINGS}, "
+                             f"got {chunking!r}")
         self.store = store
         self.n_writers = n_writers
         self.mode = mode
+        self.chunking = chunking
+        # chunking="cdc": chunk_size becomes the content-defined AVERAGE
+        # (min/avg/max = size/4, size, size*4 — FastCDC normalization);
+        # the chunker is stateless and shared by every writer rank
+        self._chunker = (cdc.GearChunker(chunk_size).chunk
+                         if chunking == "cdc" else None)
         # None → best codec the environment supports (zstd needs the
         # optional `zstandard` package; raw always works)
         self.codec = codec or codec_mod.default_codec()
@@ -140,15 +166,34 @@ class CheckpointManager:
         # always constructed: a full-mode manager must still RESTORE
         # checkpoints written incrementally (and vice versa)
         self.chunks = cas.ChunkStore(store, chunk_size=chunk_size,
-                                     replicas=replicas)
+                                     replicas=replicas,
+                                     io_threads=io_threads)
+        # background drains reuse the chunk pool so fast-tier reads overlap
+        # throttled slow-tier writes (first manager on a store wins)
+        if getattr(store, "io_executor", None) is None:
+            store.io_executor = self.chunks.executor
+        # leaf-level restore fan-out runs on its OWN pool: leaf tasks block
+        # on chunk-prefetch futures, so sharing the chunk pool could
+        # deadlock with every worker parked on a nested wait. Capped at
+        # the core count — the leaf work (crc, join, decode, assemble) is
+        # CPU/bandwidth bound, where extra threads only contend
+        self._restore_exec = ChunkIOExecutor(
+            min(io_threads, cpu_cap()) if io_threads > 1 else io_threads)
         self._async_thread: threading.Thread | None = None
         self._async_err = None
         self._read_cache: OrderedDict = OrderedDict()
         self._read_cache_bytes = 0
+        self._read_cache_lock = threading.Lock()
         self._manifest_refs_cache: dict = {}   # (tier, step) → Counter
         self.read_cache_limit = 1 << 30
         self.last_report: dict = {}
         self.last_gc_report: dict = {}
+
+    def close(self):
+        """Drain async work and tear down the IO pools (idempotent)."""
+        self.wait()
+        self.chunks.close()
+        self._restore_exec.shutdown(wait=False)
 
     # ------------------------------------------------------------------
     # save
@@ -201,8 +246,11 @@ class CheckpointManager:
             raise e
 
     def _snapshot(self, state) -> list:
-        """Device → host copy; one entry per unique logical shard range."""
-        items = []
+        """Device → host copy; one entry per unique logical shard range.
+        The pipelined engine fans the per-shard host copies out over the
+        (save-time idle) restore pool; the serial engine keeps the
+        original inline copies."""
+        pending = []
         for name, leaf in leaf_paths(state):
             if hasattr(leaf, "addressable_shards"):
                 seen = set()
@@ -213,12 +261,15 @@ class CheckpointManager:
                     if key in seen:
                         continue           # replicated copy — save once
                     seen.add(key)
-                    items.append((name, rng, np.asarray(sh.data)))
+                    pending.append((name, rng, sh.data))
             else:
                 arr = np.asarray(leaf)
                 rng = ShardRange((0,) * arr.ndim, arr.shape)
-                items.append((name, rng, arr))
-        return items
+                pending.append((name, rng, arr))
+        hosts = self._restore_exec.map_ordered(
+            np.asarray, [data for _, _, data in pending])
+        return [(name, rng, arr)
+                for (name, rng, _), arr in zip(pending, hosts)]
 
     def _leaf_codec(self, leaf_name: str) -> str:
         if leaf_name.startswith("params/"):
@@ -276,24 +327,45 @@ class CheckpointManager:
                 nbytes = 0
                 files = []
                 rank_chunks: Counter = Counter()
+                rank_dirs: set = set()     # fan-out dirs pending fsync
                 for i, name, rng, arr, fname, is_replica in work:
                     codec_name = self._leaf_codec(name)
                     if incremental:
-                        payload, meta = codec_mod.encode(arr, codec_name)
+                        pipelined = not self.chunks.executor.serial
+                        if pipelined and codec_name == "raw":
+                            # zero-copy feed: the chunk pipeline consumes a
+                            # uint8 VIEW of the host array — no tobytes()
+                            # copy, and chunk slices stay views all the way
+                            # into hash/crc/write
+                            payload = np.ascontiguousarray(arr) \
+                                .reshape(-1).view(np.uint8)
+                            meta = {}
+                        else:
+                            payload, meta = codec_mod.encode(arr, codec_name)
                         crash.maybe(f"rank{rank}_before_write")
-                        digests, new_bytes = self.chunks.put_payload(
-                            payload, crash,
-                            on_chunk=lambda: coord.heartbeat(rank))
+                        if pipelined:
+                            digests, new_bytes, crc = self.chunks.put_payload(
+                                payload, crash,
+                                on_chunk=lambda: coord.heartbeat(rank),
+                                chunker=self._chunker, want_crc=True,
+                                dirs_out=rank_dirs)
+                        else:
+                            digests, new_bytes = self.chunks.put_payload(
+                                payload, crash,
+                                on_chunk=lambda: coord.heartbeat(rank),
+                                chunker=self._chunker)
+                            crc = zlib.crc32(payload) & 0xFFFFFFFF
                         crash.maybe(f"rank{rank}_after_chunk_write")
                         rank_chunks.update(digests)
                         nbytes += new_bytes
                         rec = {
                             "chunks": digests,
                             "chunk_size": self.chunks.chunk_size,
+                            "chunking": self.chunking,
                             "start": list(rng.start), "stop": list(rng.stop),
                             "dtype": str(arr.dtype), "codec": codec_name,
                             "meta": meta,
-                            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+                            "crc32": crc,
                             "payload_bytes": len(payload),
                         }
                         with stats_lock:
@@ -316,6 +388,12 @@ class CheckpointManager:
                                 stats["files"] += 1
                                 stats["payload_bytes"] += \
                                     header["payload_bytes"]
+                    coord.heartbeat(rank)
+                if rank_dirs:
+                    # one durability barrier per rank, fanned over the
+                    # chunk pool — PREPARED may only be acked once every
+                    # object this rank wrote is findable after a crash
+                    self.chunks.fsync_dirs(rank_dirs, crash)
                     coord.heartbeat(rank)
                 coord.rank_prepared(rank, nbytes=nbytes, files=files,
                                     chunks=rank_chunks)
@@ -380,6 +458,7 @@ class CheckpointManager:
             "step": step,
             "created": time.time(),
             "chunk_size": self.chunks.chunk_size if incremental else None,
+            "chunking": self.chunking if incremental else None,
             "leaves": leaves,
             "registry": registry_json(registry),
             "extra": extra,
@@ -548,10 +627,6 @@ class CheckpointManager:
                                            fast_live=fast_live)}
         return report
 
-    # backward-compatible alias (pre-v3 internal name)
-    def _gc(self):
-        return self.gc()
-
     # ------------------------------------------------------------------
     # restore
     # ------------------------------------------------------------------
@@ -585,7 +660,13 @@ class CheckpointManager:
                 validate: bool = True):
         """Restore onto the CURRENT topology. `abstract_state`: pytree of
         ShapeDtypeStruct (or arrays — shapes/dtypes used); `shardings`:
-        matching tree of Shardings or None for single-device."""
+        matching tree of Shardings or None for single-device.
+
+        Two phases: (1) every leaf's host-side data (read → chunk
+        prefetch → crc → decode → assemble) is fetched with leaf-level
+        fan-out across the restore pool; (2) device arrays are built on
+        the calling thread — JAX array construction never runs on pool
+        workers."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise NoCheckpointError("no committed checkpoint found",
@@ -598,48 +679,107 @@ class CheckpointManager:
         shard_flat = (treedef.flatten_up_to(shardings)
                       if shardings is not None else [None] * len(flat))
         names = [n for n, _ in leaf_paths(abstract_state)]
-        out = []
+        jobs = []
         for name, sds, sharding in zip(names, flat, shard_flat):
             rec = leaves.get(name)
             if rec is None:
                 raise MissingShardError("leaf missing from checkpoint",
                                         leaf=name, step=step)
-            out.append(self._restore_leaf(step_dir, name, rec, sds, sharding))
+            # canonical numpy target dtype, resolved on the main thread
+            np_dtype = np.asarray(jax.numpy.zeros((), sds.dtype)).dtype
+            jobs.append((name, rec, sds, sharding, np_dtype))
+
+        def host(job):
+            name, rec, sds, sharding, np_dtype = job
+            fetch = self._leaf_fetcher(step_dir, name, rec, np_dtype)
+            shape = tuple(sds.shape)
+            return {(rng.start, rng.stop): fetch(rng)
+                    for rng in self._leaf_ranges(shape, sharding)}
+
+        prefetched = self._restore_exec.map_ordered(host, jobs)
+        out = [self._leaf_to_device(step_dir, job, pre)
+               for job, pre in zip(jobs, prefetched)]
         state = jax.tree_util.tree_unflatten(treedef, out)
         if validate:
             validate_against(state, leaves)
-        self._read_cache.clear()
-        self._read_cache_bytes = 0
+        with self._read_cache_lock:
+            self._read_cache.clear()
+            self._read_cache_bytes = 0
         return state, manifest.get("extra", {})
 
-    def _restore_leaf(self, step_dir, name, rec, sds, sharding):
-        shape = tuple(sds.shape)
-        dtype = sds.dtype
+    def _leaf_fetcher(self, step_dir, name, rec, np_dtype):
+        """Host-side range fetch for one leaf: plan reads over the saved
+        shard ranges, read/decode each, assemble the target range. Pure
+        numpy + IO — safe on restore pool workers.
+
+        Pipelined engine only: when a single saved shard covers the target
+        range EXACTLY (the common same-topology restore), its decoded
+        array is returned as-is — no assemble copy, no coverage mask. The
+        serial engine keeps the original always-assemble path (it is the
+        benchmark baseline)."""
         available = [(ShardRange(tuple(s["start"]), tuple(s["stop"])), s)
                      for s in rec["shards"]]
+        exact_ok = not self._restore_exec.serial
 
         def fetch(target: ShardRange) -> np.ndarray:
             picks = plan_reads(target, available)
+            if exact_ok and len(picks) == 1 and \
+                    picks[0][0].start == target.start and \
+                    picks[0][0].stop == target.stop:
+                arr = self._read_shard(step_dir, picks[0][1])
+                if arr.dtype == np_dtype and arr.shape == target.shape:
+                    return arr
+                # dtype/shape drift: fall through to the casting assemble
             pieces = [(rng, self._read_shard(step_dir, s))
                       for rng, s in picks]
             try:
-                return assemble(target, pieces, np.asarray(
-                    jax.numpy.zeros((), dtype)).dtype)
+                return assemble(target, pieces, np_dtype)
             except LookupError as e:
                 raise MissingShardError(str(e), leaf=name) from None
 
-        if sharding is None:
-            full = fetch(ShardRange((0,) * len(shape), shape))
-            return jax.numpy.asarray(full, dtype=dtype)
+        return fetch
 
-        cache = {}
+    @staticmethod
+    def _leaf_ranges(shape, sharding):
+        """Index ranges THIS PROCESS needs from one leaf — what the
+        host-fetch phase prefetches. Only addressable devices count: on a
+        multi-host restore each host must read O(its shards), not
+        O(global model). An un-enumerable sharding yields no prefetch
+        ranges; the device callback then fetches lazily."""
+        if sharding is None:
+            return [ShardRange((0,) * len(shape), shape)]
+        try:
+            idx_map = sharding.addressable_devices_indices_map(shape)
+        except Exception:  # noqa — exotic sharding: fall back to lazy cb
+            return []
+        seen, out = set(), []
+        for idx in idx_map.values():
+            if idx is None:
+                continue
+            rng = normalize_index(idx, shape)
+            key = (rng.start, rng.stop)
+            if key not in seen:
+                seen.add(key)
+                out.append(rng)
+        return out
+
+    def _leaf_to_device(self, step_dir, job, prefetched):
+        """Phase 2 (main thread): device array from prefetched host data,
+        with a lazy fetch fallback for ranges the prefetch missed."""
+        name, rec, sds, sharding, np_dtype = job
+        shape = tuple(sds.shape)
+        dtype = sds.dtype
+        if sharding is None:
+            full = prefetched[((0,) * len(shape), shape)]
+            return jax.numpy.asarray(full, dtype=dtype)
+        fetch = self._leaf_fetcher(step_dir, name, rec, np_dtype)
 
         def cb(index):
             rng = normalize_index(index, shape)
             key = (rng.start, rng.stop)
-            if key not in cache:
-                cache[key] = fetch(rng)
-            return cache[key]
+            if key not in prefetched:
+                prefetched[key] = fetch(rng)
+            return prefetched[key]
 
         return jax.make_array_from_callback(shape, sharding, cb)
 
@@ -649,8 +789,9 @@ class CheckpointManager:
         # step-scoped: shard file names repeat across steps, and a failed
         # restore can leave the cache populated for a different step
         key = f"{step_dir}/{srec['file']}"
-        if key in self._read_cache:
-            return self._read_cache[key][1]
+        cached = self._cache_get(key)
+        if cached is not None:
+            return cached
         last_err = None
         for fname in srec.get("replicas", [srec["file"]]):
             rel = f"{step_dir}/{fname}"
@@ -673,28 +814,46 @@ class CheckpointManager:
             "unreadable shard", file=srec["file"])
 
     def _read_chunked_shard(self, srec: dict) -> np.ndarray:
-        """v3 incremental shard: reassemble the encoded payload chunk by
-        chunk (each resolved fast tier → slow tier → buddy replica), verify
-        the whole-payload crc, then decode."""
+        """v3/v4 incremental shard: reassemble the encoded payload via the
+        prefetch pipeline (each chunk resolved fast tier → slow tier →
+        buddy replica, the whole-payload crc as the end-to-end integrity
+        gate), then decode."""
         key = ("cas", tuple(srec["chunks"]), srec["codec"], srec["dtype"],
                tuple(srec["start"]), tuple(srec["stop"]))
-        if key in self._read_cache:
-            return self._read_cache[key][1]
+        cached = self._cache_get(key)
+        if cached is not None:
+            return cached
         payload = self.chunks.read_payload(srec["chunks"],
-                                           srec.get("payload_bytes"))
-        if (zlib.crc32(payload) & 0xFFFFFFFF) != srec["crc32"]:
-            raise CorruptShardError("chunked payload crc mismatch",
-                                    chunks=len(srec["chunks"]))
+                                           srec.get("payload_bytes"),
+                                           crc32=srec["crc32"])
         rng = ShardRange(tuple(srec["start"]), tuple(srec["stop"]))
         arr = codec_mod.decode(payload, srec["codec"], rng.shape,
                                srec["dtype"], srec.get("meta", {}))
         self._cache_put(key, arr)
         return arr
 
+    # ------------------------------------------------------------------
+    # read cache: LRU, byte-budgeted, safe under concurrent leaf fan-out
+    # ------------------------------------------------------------------
+    def _cache_get(self, key):
+        with self._read_cache_lock:
+            ent = self._read_cache.get(key)
+            if ent is None:
+                return None
+            self._read_cache.move_to_end(key)     # recency, not insertion
+            return ent[1]
+
     def _cache_put(self, key, arr):
-        self._read_cache[key] = (time.monotonic(), arr)
-        self._read_cache_bytes += arr.nbytes
-        while self._read_cache_bytes > self.read_cache_limit \
-                and len(self._read_cache) > 1:
-            _, (_, old) = self._read_cache.popitem(last=False)
-            self._read_cache_bytes -= old.nbytes
+        with self._read_cache_lock:
+            old = self._read_cache.pop(key, None)
+            if old is not None:
+                # re-insert (e.g. concurrent fills of the same shard) must
+                # not double-count: a leaked byte total would eventually
+                # exceed the limit forever and thrash the cache to one entry
+                self._read_cache_bytes -= old[1].nbytes
+            self._read_cache[key] = (time.monotonic(), arr)
+            self._read_cache_bytes += arr.nbytes
+            while self._read_cache_bytes > self.read_cache_limit \
+                    and len(self._read_cache) > 1:
+                _, (_, evicted) = self._read_cache.popitem(last=False)
+                self._read_cache_bytes -= evicted.nbytes

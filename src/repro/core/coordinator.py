@@ -60,14 +60,21 @@ class Round:
 
 class CheckpointCoordinator:
     def __init__(self, n_ranks: int, *, keepalive_s: float = 10.0,
-                 straggler_factor: float = 3.0, node_fmt: str = "nid{:05d}"):
+                 straggler_factor: float = 3.0, node_fmt: str = "nid{:05d}",
+                 clock=time.monotonic):
         self.n_ranks = n_ranks
         self.keepalive_s = keepalive_s
         self.straggler_factor = straggler_factor
+        # injectable monotonic clock: every keepalive/straggler decision
+        # reads THIS, so timing tests advance a fake clock instead of
+        # sleeping real wall-clock (which flakes on slow CI hosts)
+        self._clock = clock
         self._lock = threading.Lock()          # paper: no unlocked shared state
         self._cv = threading.Condition(self._lock)
         self.ranks = {r: RankInfo(r, node=node_fmt.format(r))
                       for r in range(n_ranks)}
+        for ri in self.ranks.values():
+            ri.last_heartbeat = self._clock()
         self.round: Round | None = None
         self.history: list = []
         self.metrics = {"rounds": 0, "commits": 0, "aborts": 0,
@@ -94,14 +101,14 @@ class CheckpointCoordinator:
     # ------------------------------------------------------------------
     def heartbeat(self, rank: int):
         with self._lock:
-            self.ranks[rank].last_heartbeat = time.monotonic()
+            self.ranks[rank].last_heartbeat = self._clock()
 
     def rank_begin(self, rank: int):
         with self._lock:
             delay = self._inject_delay.get(rank, 0.0)
             fail = rank in self._inject_fail
             self.ranks[rank].state = RankState.PREPARING
-            self.ranks[rank].last_heartbeat = time.monotonic()
+            self.ranks[rank].last_heartbeat = self._clock()
         if delay:
             time.sleep(delay)
         if fail:
@@ -118,7 +125,7 @@ class CheckpointCoordinator:
             ri.bytes_written = nbytes
             ri.files = files
             ri.chunks = Counter(chunks or {})
-            ri.last_heartbeat = time.monotonic()
+            ri.last_heartbeat = self._clock()
             if self.round and not self.round.aborted:
                 self.round.prepared.add(rank)
                 self.round.chunk_refs.update(ri.chunks)
@@ -147,7 +154,7 @@ class CheckpointCoordinator:
             self.round = Round(step, participants)
             for ri in self.ranks.values():
                 ri.state = RankState.IDLE
-                ri.last_heartbeat = time.monotonic()
+                ri.last_heartbeat = self._clock()
             self.metrics["rounds"] += 1
         self._start_monitor()
         return self.round
@@ -215,11 +222,12 @@ class CheckpointCoordinator:
             self._monitor = None
 
     def _watch(self):
-        t0 = time.monotonic()
-        prepared_durations = []
+        t0 = self._clock()
         while not self._stop.is_set():
+            # the poll cadence is real time (the monitor must keep waking),
+            # but every timeout decision reads the injectable clock
             time.sleep(min(self.keepalive_s / 20, 0.05))
-            now = time.monotonic()
+            now = self._clock()
             with self._cv:
                 if self.round is None or self.round.done():
                     return

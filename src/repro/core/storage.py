@@ -86,7 +86,8 @@ class Tier:
             os.fsync(f.fileno())
         if atomic:
             os.rename(dst, path)
-        self._used += len(data)
+        with self._lock:
+            self._used += len(data)
         return path
 
     def read_file(self, rel: str) -> bytes:
@@ -103,7 +104,8 @@ class Tier:
             path.unlink()
         except FileNotFoundError:
             return 0
-        self._used = max(self._used - nbytes, 0)
+        with self._lock:
+            self._used = max(self._used - nbytes, 0)
         return nbytes
 
 
@@ -113,10 +115,14 @@ class TieredStore:
     """
 
     def __init__(self, fast: Tier, slow: Tier | None = None,
-                 drain_async: bool = True):
+                 drain_async: bool = True, io_executor=None):
         self.fast = fast
         self.slow = slow
         self.drain_async = drain_async
+        # optional ChunkIOExecutor: drain copies fan out over it so the
+        # read side (fast tier) overlaps the throttled write side (slow
+        # tier). CheckpointManager shares its chunk pool here.
+        self.io_executor = io_executor
         self._drainer: threading.Thread | None = None
         self._drain_err = None
 
@@ -137,6 +143,15 @@ class TieredStore:
         src = self.fast.root / step_dir_name
         rels = [r for r in extra_files if (self.fast.root / r).is_file()]
 
+        def _copy_extra(rel):
+            f = self.fast.root / rel
+            if f.is_file() and not (self.slow.root / rel).exists():
+                self.slow.write_file(rel, f.read_bytes(), atomic=True)
+
+        def _copy_step(p):
+            rel = str(Path(step_dir_name) / p.relative_to(src))
+            self.slow.write_file(rel, p.read_bytes(), atomic=True)
+
         def _copy():
             try:
                 # a drain killed mid-write leaves .tmp- litter in slow-tier
@@ -149,16 +164,20 @@ class TieredStore:
                         t.unlink()
                     except OSError:
                         pass
-                for rel in rels:
-                    f = self.fast.root / rel
-                    if f.is_file() and not (self.slow.root / rel).exists():
-                        self.slow.write_file(rel, f.read_bytes(),
-                                             atomic=True)
-                for p in sorted(src.rglob("*")):
-                    if p.is_file():
-                        rel = str(Path(step_dir_name) / p.relative_to(src))
-                        self.slow.write_file(rel, p.read_bytes(),
-                                             atomic=True)
+                step_files = [p for p in sorted(src.rglob("*"))
+                              if p.is_file()]
+                ex = self.io_executor
+                if ex is not None and not ex.serial:
+                    # two batches with a barrier between them: CAS objects
+                    # must be fully landed before the step dir (and its
+                    # manifest) can reference them on the slow tier
+                    ex.map_ordered(_copy_extra, rels)
+                    ex.map_ordered(_copy_step, step_files)
+                else:
+                    for rel in rels:
+                        _copy_extra(rel)
+                    for p in step_files:
+                        _copy_step(p)
             except Exception as e:  # noqa
                 self._drain_err = e
 

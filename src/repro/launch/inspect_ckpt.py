@@ -41,7 +41,8 @@ def _chunk_store(root: Path) -> cas.ChunkStore:
     return cas.ChunkStore(TieredStore(Tier("inspect", root)))
 
 
-def _cas_report(root: Path, manifests: list, deep: bool = False) -> dict:
+def _cas_report(root: Path, manifests: list, deep: bool = False,
+                covered=frozenset()) -> dict:
     """Chunk-level stats for one storage root. The inspector sees a single
     tier, but the store may span several (burst buffer + scratch keep
     manifests with different retention), so the published ``refs.json`` —
@@ -50,17 +51,23 @@ def _cas_report(root: Path, manifests: list, deep: bool = False) -> dict:
     reference it, and refcount drift is only flagged when refs UNDERCOUNT
     what this root's manifests require (overcounts are other tiers' steps).
 
-    ``deep`` (--verify) reads + re-hashes every live object; the default
+    ``deep`` (--verify) reads + re-hashes live objects; the default
     status listing checks existence only, so plain inspect stays a
-    metadata operation."""
+    metadata operation. ``covered`` digests — the ones the inspected
+    step's own shard records reference — are skipped by the deep pass
+    (existence check only): the per-shard crc/decode verification reads
+    and digest-checks every one of them anyway, and reading them twice
+    doubled verify IO."""
     store = _chunk_store(root)
     live = cas.live_chunk_refs(manifests)
     refs = store.load_refs()
     published = {d for d, n in refs.items() if n > 0}
     on_disk = store.digests_on_disk()
     missing = []
+    deep_reads = 0
     for d in sorted(set(live)):
-        if deep:
+        if deep and d not in covered:
+            deep_reads += 1
             try:
                 store.get(d)
             except Exception:  # noqa — unreadable on this root, any cause
@@ -78,16 +85,19 @@ def _cas_report(root: Path, manifests: list, deep: bool = False) -> dict:
         "orphans": len(orphans),
         "missing": len(missing),
         "ref_drift": len(drift),
+        "deep_reads": deep_reads,
         "ok": not (orphans or missing or drift),
     }
 
 
 def _step_dedup(root: Path, manifest: dict) -> dict | None:
     """Per-step dedup ratio: logical payload bytes of the step's chunked
-    shards ÷ unique chunk object bytes they reference."""
+    shards ÷ unique chunk object bytes they reference. Also counts shard
+    records per chunking scheme (v4; v3 records are implicitly fixed)."""
     digests: set = set()
     payload = 0
     n_chunked = 0
+    schemes: defaultdict = defaultdict(int)
     for rec in manifest["leaves"].values():
         for s in rec["shards"]:
             if "chunks" not in s:
@@ -95,6 +105,7 @@ def _step_dedup(root: Path, manifest: dict) -> dict | None:
             n_chunked += 1
             payload += s.get("payload_bytes", 0)
             digests.update(s["chunks"])
+            schemes[s.get("chunking", "fixed")] += 1
     if not n_chunked:
         return None
     uniq = 0
@@ -106,6 +117,7 @@ def _step_dedup(root: Path, manifest: dict) -> dict | None:
             uniq += p.stat().st_size
     return {"chunked_shards": n_chunked, "chunks": len(digests),
             "payload_bytes": payload, "unique_chunk_bytes": uniq,
+            "chunking": dict(schemes),
             "dedup_ratio": payload / max(uniq, 1)}
 
 
@@ -155,7 +167,9 @@ def inspect(root: Path, step=None, verify=False, out=print):
     dedup = _step_dedup(root, manifest)
     if dedup is not None:
         report["dedup"] = dedup
-        out(f"    chunked: {dedup['chunked_shards']} shard(s), "
+        schemes = "+".join(f"{v}×{k}" for k, v in
+                           sorted(dedup["chunking"].items()))
+        out(f"    chunked: {dedup['chunked_shards']} shard(s) [{schemes}], "
             f"{dedup['chunks']} unique chunk(s), dedup ratio "
             f"{dedup['dedup_ratio']:.2f}x "
             f"({dedup['payload_bytes']/2**20:.2f} MiB logical / "
@@ -174,7 +188,14 @@ def inspect(root: Path, step=None, verify=False, out=print):
                 if verify:
                     report["problems"].append(
                         f"step {s}: unreadable manifest")
-        report["cas"] = _cas_report(root, all_manifests, deep=verify)
+        # the per-shard verify pass below reads + digest-checks every chunk
+        # the inspected step references — the deep CAS pass only needs to
+        # read the digests OTHER retained steps pin (halves verify IO)
+        covered = {d for rec in manifest["leaves"].values()
+                   for s in rec["shards"] if "chunks" in s
+                   for d in s["chunks"]} if verify else frozenset()
+        report["cas"] = _cas_report(root, all_manifests, deep=verify,
+                                    covered=covered)
         c = report["cas"]
         out(f"    CAS: {c['objects']} object(s) "
             f"{c['object_bytes']/2**20:.2f} MiB, "

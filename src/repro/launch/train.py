@@ -32,6 +32,11 @@ def main(argv=None):
                     choices=["full", "incremental"],
                     help="incremental = content-addressed dedup checkpoints")
     ap.add_argument("--chunk-size", type=int, default=1 << 20)
+    ap.add_argument("--chunking", default="fixed", choices=["fixed", "cdc"],
+                    help="cdc = content-defined chunking (dedup survives "
+                         "byte-shifted payloads)")
+    ap.add_argument("--io-threads", type=int, default=4,
+                    help="chunk-IO pipeline width (1 = serial engine)")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--writers", type=int, default=4)
     ap.add_argument("--grad-accum", type=int, default=1)
@@ -60,7 +65,8 @@ def main(argv=None):
         seq_len=args.seq_len, ckpt_every=args.ckpt_every,
         async_ckpt=not args.sync_ckpt, codec=args.codec,
         params_codec=args.params_codec, ckpt_mode=args.ckpt_mode,
-        chunk_size=args.chunk_size, replicas=args.replicas,
+        chunk_size=args.chunk_size, chunking=args.chunking,
+        io_threads=args.io_threads, replicas=args.replicas,
         n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed)
     trainer = Trainer(cfg, tcfg).init_or_restore()
     report = trainer.fit(args.steps)

@@ -46,6 +46,8 @@ class TrainerConfig:
     params_codec: str | None = None
     ckpt_mode: str = "full"         # "incremental" = CAS dedup checkpoints
     chunk_size: int = 1 << 20
+    chunking: str = "fixed"         # "cdc" = content-defined (shift-tolerant)
+    io_threads: int = 4             # chunk-IO pipeline width (1 = serial)
     replicas: int = 1
     seed: int = 0
     log_every: int = 10
@@ -80,7 +82,8 @@ class Trainer:
             store, n_writers=tcfg.n_writers, codec=tcfg.codec,
             params_codec=tcfg.params_codec, replicas=tcfg.replicas,
             retain=tcfg.retain, mode=tcfg.ckpt_mode,
-            chunk_size=tcfg.chunk_size)
+            chunk_size=tcfg.chunk_size, chunking=tcfg.chunking,
+            io_threads=tcfg.io_threads)
         # ---- upper half ----
         self.state = None
         self.data_state: DataState | None = None

@@ -235,21 +235,36 @@ def test_zstd_codec_unavailable_raises():
 
 
 def _rewrite_manifest_as_v2(root: Path, step: int):
-    """Strip every v3-only field so the on-disk checkpoint is exactly what
+    """Strip every post-v2 field so the on-disk checkpoint is exactly what
     the v2 writer produced."""
     mpath = root / f"step_{step:08d}" / atomic.MANIFEST
     m = json.loads(mpath.read_text())
-    assert m["format"] == 3
+    assert m["format"] == 4
     m["format"] = 2
     m.pop("mode", None)
     m.pop("chunk_size", None)
+    m.pop("chunking", None)
     mpath.write_text(json.dumps(m))
 
 
-def test_v2_manifest_restores_under_v3_reader(tmp_path):
+def _rewrite_manifest_as_v3(root: Path, step: int):
+    """Strip the v4-only chunking-scheme fields — exactly what the v3
+    (PR-1 incremental) writer produced."""
+    mpath = root / f"step_{step:08d}" / atomic.MANIFEST
+    m = json.loads(mpath.read_text())
+    assert m["format"] == 4
+    m["format"] = 3
+    m.pop("chunking", None)
+    for rec in m["leaves"].values():
+        for s in rec["shards"]:
+            s.pop("chunking", None)
+    mpath.write_text(json.dumps(m))
+
+
+def test_v2_manifest_restores_under_v4_reader(tmp_path):
     """Backward compatibility: a checkpoint written by the v2 (full-mode)
     writer — inline shard files, no mode/chunk_size keys — restores under
-    the v3 code path."""
+    the v4 code path."""
     mgr = CheckpointManager(_store(tmp_path), codec="raw", n_writers=3)
     state = _state()
     mgr.save(state, 4)
@@ -259,6 +274,107 @@ def test_v2_manifest_restores_under_v3_reader(tmp_path):
     restored, _ = mgr2.restore(_abstract(state))
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_v3_chunked_manifest_restores_and_gcs_under_v4_reader(tmp_path):
+    """A v3 incremental checkpoint (chunked records without a chunking
+    scheme field) must stay bit-exact restorable AND keep participating in
+    the CAS mark set — mixed-history GC must not sweep its chunks."""
+    mgr = CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
+                            mode="incremental", chunk_size=512,
+                            keepalive_s=60.0)
+    state = _state()
+    mgr.save(state, 1)
+    _rewrite_manifest_as_v3(mgr.store.root, 1)
+    mgr2 = CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
+                             mode="incremental", chunk_size=512,
+                             keepalive_s=60.0)
+    assert mgr2.load_manifest(1)["format"] == 3
+    restored, _ = mgr2.restore(_abstract(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a later v4 save + gc marks the v3 step's chunks as live
+    state2 = _state()
+    state2["params"]["w"] = state2["params"]["w"] + 2.0
+    mgr2.save(state2, 2)
+    mgr2.gc()
+    assert mgr2.chunks.fsck(mgr2._live_chunk_refs())["ok"]
+    restored, _ = mgr2.restore(_abstract(state), step=1)
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.asarray(restored["params"]["w"]))
+
+
+def test_mixed_chunking_history_restores_and_gcs(tmp_path):
+    """fixed- and cdc-chunked steps interleaved in one store: both restore
+    bit-exact, GC keeps both alive, and a fresh save still commits."""
+    def mk(chunking):
+        return CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
+                                 mode="incremental", chunk_size=512,
+                                 chunking=chunking, retain=4,
+                                 keepalive_s=60.0)
+
+    s1, s2 = _state(), _state()
+    s2["params"]["w"] = s2["params"]["w"] + 1.0
+    mk("fixed").save(s1, 1)
+    mk("cdc").save(s2, 2)
+    mgr = mk("fixed")
+    for step, expect in ((1, s1), (2, s2)):
+        restored, _ = mgr.restore(_abstract(expect), step=step)
+        for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mgr.gc()
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    m1, m2 = mgr.load_manifest(1), mgr.load_manifest(2)
+    assert m1["chunking"] == "fixed" and m2["chunking"] == "cdc"
+    s3 = _state()
+    mgr.save(s3, 3)
+    restored, _ = mgr.restore(_abstract(s3), step=3)
+    np.testing.assert_array_equal(np.asarray(s3["params"]["w"]),
+                                  np.asarray(restored["params"]["w"]))
+
+
+def test_parallel_restore_matches_serial(tmp_path):
+    """Leaf fan-out + chunk prefetch must be bit-identical to the serial
+    engine, in both save modes."""
+    for mode in ("full", "incremental"):
+        root = tmp_path / mode
+        state = _state()
+        CheckpointManager(TieredStore(Tier("fast", root)), codec="raw",
+                          n_writers=3, mode=mode, chunk_size=512,
+                          keepalive_s=60.0).save(state, 1)
+        serial, _ = CheckpointManager(
+            TieredStore(Tier("fast", root)), io_threads=1).restore(
+            _abstract(state))
+        parallel, _ = CheckpointManager(
+            TieredStore(Tier("fast", root)), io_threads=8).restore(
+            _abstract(state))
+        for a, b in zip(jax.tree.leaves(serial), jax.tree.leaves(parallel)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_read_cache_accounting_and_lru(tmp_path):
+    """Regression: (1) re-inserting a cached key must not double-count its
+    bytes (the leaked total eventually exceeded the limit forever and
+    thrashed the cache to one entry); (2) a cache hit must refresh recency
+    so eviction is LRU, not FIFO."""
+    mgr = CheckpointManager(_store(tmp_path), codec="raw")
+    a = np.zeros(100, np.uint8)
+    mgr.read_cache_limit = 350          # fits three 100-byte entries
+    mgr._cache_put("a", a)
+    mgr._cache_put("a", a)              # re-insert: no double count
+    assert mgr._read_cache_bytes == 100
+    mgr._cache_put("b", np.zeros(100, np.uint8))
+    mgr._cache_put("c", np.zeros(100, np.uint8))
+    assert mgr._cache_get("a") is not None      # touch: "a" becomes MRU
+    mgr._cache_put("d", np.zeros(100, np.uint8))  # 400 > 350 → evict LRU
+    assert "b" not in mgr._read_cache           # LRU was "b", not "a"
+    assert "a" in mgr._read_cache
+    assert mgr._read_cache_bytes == 300
+    # steady state under churn: never collapses below the byte budget
+    for i in range(20):
+        mgr._cache_put(f"k{i}", np.zeros(100, np.uint8))
+    assert len(mgr._read_cache) == 3
+    assert mgr._read_cache_bytes == 300
 
 
 def test_unsupported_manifest_format_rejected(tmp_path):

@@ -1,4 +1,10 @@
-"""Coordinator protocol (keepalive, stragglers, 2PC) and drain counters."""
+"""Coordinator protocol (keepalive, stragglers, 2PC) and drain counters.
+
+Timing tests use an INJECTED monotonic clock: the keepalive/straggler
+decisions read fake time the test advances explicitly, so a slow or
+IO-stalled CI host can never turn a liveness threshold into a flake. Real
+wall-clock only bounds how long we poll for the (now deterministic)
+outcome."""
 import threading
 import time
 
@@ -6,6 +12,33 @@ import pytest
 
 from repro.core.coordinator import CheckpointCoordinator, RankState
 from repro.core.drain import DrainCounters
+
+
+class FakeClock:
+    """Thread-safe manually-advanced monotonic clock."""
+
+    def __init__(self):
+        self._t = 0.0
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float):
+        with self._lock:
+            self._t += dt
+
+
+def _poll(predicate, timeout=10.0):
+    """Wait (real time) for a condition the fake clock already made
+    inevitable; generous deadline, tiny poll interval."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.01)
+    return predicate()
 
 
 def _run_ranks(coord, n, work=lambda r: None):
@@ -47,37 +80,57 @@ def test_injected_failure_aborts():
 
 
 def test_keepalive_timeout_detects_dead_rank():
-    c = CheckpointCoordinator(2, keepalive_s=0.2)
+    clk = FakeClock()
+    c = CheckpointCoordinator(2, keepalive_s=5.0, clock=clk)
     c.begin_round(1)
-
-    def rank0():
-        c.rank_begin(0)
-        c.rank_prepared(0, nbytes=1, files=[])
-
-    def rank1_dies():
-        c.rank_begin(1)
-        # never heartbeats, never acks — silent death
-    threading.Thread(target=rank0).start()
-    threading.Thread(target=rank1_dies).start()
-    assert not c.wait_all_prepared(timeout=5)
+    c.rank_begin(0)
+    c.rank_prepared(0, nbytes=1, files=[])
+    c.rank_begin(1)              # never heartbeats, never acks — silent death
+    clk.advance(5.1)             # past the keepalive with zero real sleeping
+    assert not c.wait_all_prepared(timeout=30)
     assert "keepalive" in c.abort_reason()
     assert c.metrics["keepalive_timeouts"] == 1
 
 
-def test_straggler_flagged_but_commits():
-    c = CheckpointCoordinator(2, keepalive_s=1.0, straggler_factor=0.5)
-
-    def slow(r):
-        if r == 1:
-            for _ in range(8):
-                time.sleep(0.05)
-                c.heartbeat(1)   # alive, just slow
+def test_heartbeats_keep_slow_rank_alive_past_keepalive():
+    """The inverse guarantee: a rank that takes many keepalive periods but
+    keeps heartbeating must NOT be declared dead."""
+    clk = FakeClock()
+    c = CheckpointCoordinator(1, keepalive_s=5.0, clock=clk)
     c.begin_round(1)
-    ts = _run_ranks(c, 2, work=slow)
-    assert c.wait_all_prepared(timeout=10)
-    for t in ts:
-        t.join()
+    c.rank_begin(0)
+    for _ in range(10):          # 40 fake seconds of slow-but-alive work
+        clk.advance(4.0)
+        c.heartbeat(0)
+        time.sleep(0.02)         # let the monitor observe each interval
+    c.rank_prepared(0, nbytes=1, files=[])
+    assert c.wait_all_prepared(timeout=30)
+    assert c.metrics["keepalive_timeouts"] == 0
+    c.finish_round(True)
+
+
+def test_straggler_flagged_but_commits():
+    clk = FakeClock()
+    c = CheckpointCoordinator(2, keepalive_s=10.0, straggler_factor=2.0,
+                              clock=clk)
+    c.begin_round(1)
+    c.rank_begin(0)
+    c.rank_begin(1)
+    c.rank_prepared(0, nbytes=1, files=[])
+    # rank 1 lags far past the straggler threshold (factor × keepalive/10
+    # = 2 fake seconds) while staying comfortably inside the keepalive
+    flagged = False
+    for _ in range(200):
+        clk.advance(3.0)
+        c.heartbeat(1)           # alive, just slow
+        if _poll(lambda: c.metrics["stragglers_flagged"] >= 1, timeout=0.05):
+            flagged = True
+            break
+    assert flagged
+    c.rank_prepared(1, nbytes=1, files=[])
+    assert c.wait_all_prepared(timeout=30)
     assert c.metrics["stragglers_flagged"] >= 1
+    assert c.metrics["keepalive_timeouts"] == 0
 
 
 def test_rank_node_mapping_present():

@@ -13,7 +13,12 @@ missing-locks / partial-write failure class):
 
 Injection points that a mode never reaches (e.g. chunk-write points in
 full mode) simply let the save commit — the invariants must hold there
-too, so the matrix stays uniform at 13 points × 2 modes.
+too, so the matrix stays uniform: 16 points × {full, incremental-fixed,
+incremental-cdc}. The three newest points live INSIDE the pipelined chunk
+executor: a crash mid-batch (other chunks still in flight on pool
+threads), a crash after every rename but before the batched directory
+fsync, and a crash on the concurrent-dedup path where a racer returns
+while another thread owns the digest.
 """
 import jax
 import jax.numpy as jnp
@@ -29,11 +34,15 @@ from repro.core.storage import Tier, TieredStore
 KEY = jax.random.PRNGKey(3)
 
 # ≥ 8 injection points per mode (acceptance criterion): writer phase,
-# chunk-object writes, manifest write, commit rename, LATEST move,
-# refcount publication, and every GC phase (mark, sweep, refs republish)
+# chunk-object writes (serial AND pipelined executor), manifest write,
+# commit rename, LATEST move, refcount publication, and every GC phase
+# (mark, sweep, refs republish)
 POINTS = [
     "rank0_before_write",        # writer dies before its first write
     "cas_after_obj_tmp",         # torn chunk-object write (tmp litter)
+    "cas_mid_batch",             # executor: crash with chunks in flight
+    "cas_before_batch_fsync",    # executor: renamed, batch fsync lost
+    "cas_dedup_race",            # executor: crash on concurrent dedup hit
     "rank0_after_chunk_write",   # writer dies with orphan chunks on disk
     "before_manifest",           # all shards durable, no commit record
     "after_tmp_write",           # manifest tmp written, not yet renamed
@@ -46,6 +55,11 @@ POINTS = [
     "mid_gc_sweep",              # GC died mid-sweep (partial deletion)
     "before_gc_refs_publish",    # swept, refs.json republish lost
 ]
+
+# every (save-mode, chunking-scheme) combination the engine supports; the
+# pipelined executor (io_threads default > 1) runs in all of them
+MODE_AXES = [("full", "fixed"), ("incremental", "fixed"),
+             ("incremental", "cdc")]
 
 
 def _store(tmp_path):
@@ -73,9 +87,9 @@ def _assert_restores(mgr, step, expect):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@pytest.mark.parametrize("mode", ["full", "incremental"])
+@pytest.mark.parametrize("mode,chunking", MODE_AXES)
 @pytest.mark.parametrize("point", POINTS)
-def test_crash_matrix(tmp_path, mode, point):
+def test_crash_matrix(tmp_path, mode, chunking, point):
     def mk(**kw):
         # generous keepalive: CI boxes stall on fsync under suite-wide IO
         # pressure, and a spurious keepalive abort is not what this matrix
@@ -83,7 +97,8 @@ def test_crash_matrix(tmp_path, mode, point):
         # the per-save path only runs the destructive sweep on retirement,
         # and the GC injection points must fire inside a real sweep.
         return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
-                                 mode=mode, chunk_size=512, retain=1,
+                                 mode=mode, chunk_size=512,
+                                 chunking=chunking, retain=1,
                                  max_retries=0, keepalive_s=60.0, **kw)
 
     states = {1: _state(1), 2: _state(2)}
@@ -131,21 +146,23 @@ def test_crash_matrix(tmp_path, mode, point):
     assert mgr.chunks.fsck(live)["ok"]
 
 
-@pytest.mark.parametrize("mode", ["full", "incremental"])
-def test_repeated_crashes_then_recovery(tmp_path, mode):
+@pytest.mark.parametrize("mode,chunking", MODE_AXES)
+def test_repeated_crashes_then_recovery(tmp_path, mode, chunking):
     """Crash at a DIFFERENT point on every consecutive round — the store
     must stay consistent through an arbitrary crash history, not just one
     isolated fault."""
     def mk():
         return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
-                                 mode=mode, chunk_size=512, retain=2,
+                                 mode=mode, chunk_size=512,
+                                 chunking=chunking, retain=2,
                                  max_retries=0, keepalive_s=60.0)
 
     state = _state(0)
     mk().save(state, 1)
     good = {1: state}
     step = 2
-    for point in ["rank0_after_chunk_write", "before_manifest",
+    for point in ["cas_mid_batch", "cas_before_batch_fsync",
+                  "rank0_after_chunk_write", "before_manifest",
                   "before_latest_write", "mid_gc_sweep"]:
         nxt = _state(step)
         try:

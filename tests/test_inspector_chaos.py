@@ -74,6 +74,38 @@ def test_inspector_reports_chunked_checkpoint_and_dedup(tmp_path):
     assert rep["cas"]["references"] == 2 * rep["cas"]["objects"]
 
 
+def test_verify_deep_pass_skips_step_covered_digests(tmp_path):
+    """--verify used to read every chunk the inspected step references
+    TWICE (deep CAS pass + per-shard crc/decode pass). The deep pass must
+    now only read digests the inspected step does NOT cover — for a
+    single-step store that is zero deep reads; with history it is exactly
+    the other steps' private digests."""
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2,
+                            mode="incremental", codec="raw", chunk_size=512)
+    state = _state()
+    mgr.save(state, 1)
+    rep = inspect(mgr.store.root, verify=True, out=lambda *a: None)
+    assert rep["ok"]
+    assert rep["cas"]["deep_reads"] == 0        # per-shard pass covers all
+    # second step with different content: inspecting step 2 deep-reads
+    # only step 1's now-unshared digests
+    state2 = _state()
+    state2["params"]["w"] = state2["params"]["w"] + 1.0
+    mgr.save(state2, 2)
+    rep = inspect(mgr.store.root, step=2, verify=True, out=lambda *a: None)
+    assert rep["ok"]
+    assert 0 < rep["cas"]["deep_reads"] < rep["cas"]["objects"]
+    # a corrupt chunk of the INSPECTED step is still caught (per-shard pass)
+    m = mgr.load_manifest(2)
+    from repro.core import cas as cas_mod
+    digests = {d for rec in m["leaves"].values() for s in rec["shards"]
+               for d in s.get("chunks", [])}
+    victim = mgr.store.root / cas_mod.object_rel(sorted(digests)[0])
+    victim.write_bytes(b"\xff" * victim.stat().st_size)
+    rep = inspect(mgr.store.root, step=2, verify=True, out=lambda *a: None)
+    assert not rep["ok"] and rep["shards_bad"] >= 1
+
+
 def test_inspector_flags_missing_chunk_and_orphans(tmp_path):
     mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2,
                             mode="incremental", codec="raw", chunk_size=512)
