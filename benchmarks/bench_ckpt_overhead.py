@@ -35,8 +35,16 @@ Usage:
   PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode io-sweep \
       --io-threads 8
   PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode cdc-churn
+  PYTHONPATH=src python -m benchmarks.bench_ckpt_overhead --mode overlap \
+      --io-threads 8
   (--chunking cdc applies the content-defined chunker to the dedup sweeps;
    --tiny shrinks every workload for CI smoke runs)
+
+Overlap mode (``--mode overlap``): per-checkpoint TRAIN-THREAD blocking
+time (drain + device→host snapshot + residual wait) against the
+end-to-end persist wall-clock of ``save(blocking=False)`` — the paper's
+blocking-window metric. Every mode also appends its headline numbers to
+the machine-readable ``BENCH_ckpt.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -49,8 +57,8 @@ import numpy as np
 
 from repro.core.checkpoint import CheckpointManager
 
-from .common import (abstract, bb_store, cleanup, emit, io_sweep_compare,
-                     scratch_store, synth_state)
+from .common import (abstract, bb_store, bench_record, cleanup, emit,
+                     io_sweep_compare, scratch_store, synth_state)
 
 RANKS = (4, 8, 16, 32, 64)
 BYTES_PER_RANK = 12 << 20  # aggregate grows with ranks (ADH-style)
@@ -64,6 +72,7 @@ SWEEP_CHANGED_PER_STEP = 2
 
 IO_SWEEP_BYTES = 192 << 20       # pipelined-engine workload (disk store)
 CHURN_BLOB_BYTES = 48 << 20      # cdc-churn byte-blob leaf
+OVERLAP_BYTES = 96 << 20         # overlapped-save workload (disk store)
 
 
 def run(tiny=False):
@@ -164,6 +173,12 @@ def run_dedup(chunking="fixed", io_threads=4, tiny=False):
          f"full_mib_per_step={steady_full/2**20:.2f};"
          f"incr_mib_per_step={steady_incr/2**20:.2f};"
          f"reduction={reduction:.1f}x")
+    bench_record(f"dedup_{chunking}", {
+        "tiny": tiny, "io_threads": io_threads,
+        "full_mib_per_step": round(steady_full / 2**20, 3),
+        "incr_mib_per_step": round(steady_incr / 2**20, 3),
+        "dedup_reduction": round(reduction, 2),
+    })
     return {"full": full, "incremental": incr, "reduction": reduction}
 
 
@@ -179,6 +194,91 @@ def io_sweep(io_threads=8, chunking="fixed", tiny=False, reps=5):
                             seed=1, io_threads=io_threads,
                             chunking=chunking, tiny=tiny, reps=reps,
                             chunk_size=512 << 10, primary="save")
+
+
+# ---------------------------------------------------------------------------
+# overlapped (async) save: train-thread blocking time vs end-to-end persist
+# ---------------------------------------------------------------------------
+
+def overlap_bench(io_threads=8, tiny=False, reps=5):
+    """How much of a checkpoint does the TRAINING THREAD actually pay?
+
+    Per rep: one ``save(blocking=False)`` (the thread blocks only for
+    drain + snapshot), then simulated training compute until the persist
+    stage finishes, then ``wait()``. Reported per checkpoint:
+
+      blocking_s   save() call duration + residual wait() stall — the
+                   training-visible cost;
+      persist_s    save-entry → COMMIT end-to-end (the persist stage's
+                   wall-clock);
+      overlap_frac 1 − blocking/persist — the fraction hidden behind
+                   compute.
+
+    A fresh random state per rep defeats dedup, so every round writes the
+    full payload (the worst, honest case). Runs on a REAL disk store so
+    fsync costs are physical. A sync-save rep pair anchors the numbers."""
+    import shutil
+    import tempfile
+
+    import statistics
+
+    from repro.core.storage import Tier, TieredStore
+
+    agg = OVERLAP_BYTES // (16 if tiny else 1)
+    reps = 1 if tiny else reps
+    rows = []
+    sync_s = []
+    tmp = Path(tempfile.mkdtemp())
+    store = TieredStore(Tier("disk", tmp / "overlap"))
+    mgr = CheckpointManager(store, n_writers=1, codec="raw", retain=2,
+                            mode="incremental", chunk_size=1 << 20,
+                            io_threads=io_threads, keepalive_s=120.0)
+    step = 0
+    for rep in range(-1, reps):               # rep -1 = untimed warmup
+        step += 1
+        state = synth_state(agg, shards=12, seed=100 + step)
+        rep_async = mgr.save(state, step, blocking=False)
+        blocking = rep_async["blocking_s"]
+        # simulated training steps overlapping the background persist —
+        # short sleeps, like XLA compute that has released the GIL
+        while mgr._persist.active:
+            time.sleep(0.005)
+        tw = time.monotonic()
+        mgr.wait()
+        blocking += time.monotonic() - tw     # residual stall, ~0
+        persist = mgr.last_report["seconds"]
+        # sync anchor on the same workload
+        step += 1
+        t0 = time.monotonic()
+        mgr.save(synth_state(agg, shards=12, seed=200 + step), step)
+        sync = time.monotonic() - t0
+        if rep >= 0:
+            rows.append((blocking, persist))
+            sync_s.append(sync)
+            emit(f"overlap_rep{rep}", blocking * 1e6,
+                 f"blocking_s={blocking:.3f};persist_s={persist:.3f};"
+                 f"sync_save_s={sync:.3f};"
+                 f"blocking_frac={blocking / max(persist, 1e-9):.2f}")
+    mgr.close()
+    shutil.rmtree(tmp, ignore_errors=True)
+    med_block = statistics.median(b for b, _ in rows)
+    med_persist = statistics.median(p for _, p in rows)
+    frac = statistics.median(b / max(p, 1e-9) for b, p in rows)
+    emit("overlap_summary", med_block * 1e6,
+         f"agg_mib={agg / 2**20:.0f};io_threads={io_threads};"
+         f"blocking_s={med_block:.3f};persist_s={med_persist:.3f};"
+         f"sync_save_s={statistics.median(sync_s):.3f};"
+         f"blocking_frac={frac:.2f}")
+    bench_record("overlap", {
+        "agg_mib": agg / 2**20, "io_threads": io_threads, "reps": reps,
+        "tiny": tiny,
+        "blocking_s": round(med_block, 4),
+        "persist_s": round(med_persist, 4),
+        "sync_save_s": round(statistics.median(sync_s), 4),
+        "blocking_frac": round(frac, 4),
+    })
+    return {"blocking_s": med_block, "persist_s": med_persist,
+            "blocking_frac": frac}
 
 
 # ---------------------------------------------------------------------------
@@ -232,7 +332,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="fig2",
                     choices=["fig2", "full", "incremental", "both",
-                             "io-sweep", "cdc-churn"])
+                             "io-sweep", "cdc-churn", "overlap"])
     ap.add_argument("--chunking", default="fixed",
                     choices=["fixed", "cdc"])
     ap.add_argument("--io-threads", type=int, default=8)
@@ -250,6 +350,8 @@ def main(argv=None):
                  tiny=args.tiny)
     elif args.mode == "cdc-churn":
         cdc_churn(tiny=args.tiny)
+    elif args.mode == "overlap":
+        overlap_bench(io_threads=args.io_threads, tiny=args.tiny)
     else:
         dedup_sweep(args.mode, chunking=args.chunking,
                     io_threads=args.io_threads, tiny=args.tiny)

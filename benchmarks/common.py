@@ -1,12 +1,15 @@
 """Shared benchmark helpers: tiered stores mirroring the paper's Cori setup
-(Burst Buffer = /dev/shm, CSCRATCH/Lustre = throttled disk) and synthetic
-states of controlled aggregate size."""
+(Burst Buffer = /dev/shm, CSCRATCH/Lustre = throttled disk), synthetic
+states of controlled aggregate size, and the machine-readable perf record
+(``BENCH_ckpt.json``) that tracks the checkpoint-path trajectory per PR."""
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import sys
 import tempfile
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -56,6 +59,23 @@ def cleanup(store: TieredStore):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_ckpt.json"
+
+
+def bench_record(section: str, data: dict):
+    """Merge one benchmark section into ``BENCH_ckpt.json`` at the repo
+    root — the machine-readable perf trajectory (save/restore wall-clock,
+    blocking vs overlapped time, dedup ratios) CI uploads as an artifact
+    so per-PR regressions are diffable, not anecdotal."""
+    try:
+        doc = json.loads(BENCH_JSON.read_text())
+    except (OSError, ValueError):
+        doc = {}
+    doc[section] = dict(data, recorded_at=time.strftime(
+        "%Y-%m-%dT%H:%M:%S", time.gmtime()))
+    BENCH_JSON.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
 
 
 def io_sweep_compare(prefix: str, *, agg: int, shards: int, seed: int,
@@ -124,5 +144,17 @@ def io_sweep_compare(prefix: str, *, agg: int, shards: int, seed: int,
          f"io_threads={io_threads};chunking={chunking};"
          f"save_speedup={save_speedup:.2f}x;"
          f"restore_speedup={restore_speedup:.2f}x")
+    bench_record(f"{prefix}_{chunking}", {
+        "agg_mib": agg / 2**20, "io_threads": io_threads, "reps": reps,
+        "tiny": tiny,
+        "serial_save_s": statistics.median(s for s, _ in samples[1]),
+        "serial_restore_s": statistics.median(r for _, r in samples[1]),
+        "pipelined_save_s": statistics.median(
+            s for s, _ in samples[io_threads]),
+        "pipelined_restore_s": statistics.median(
+            r for _, r in samples[io_threads]),
+        "save_speedup": round(save_speedup, 3),
+        "restore_speedup": round(restore_speedup, 3),
+    })
     return {"save_speedup": save_speedup,
             "restore_speedup": restore_speedup}

@@ -15,6 +15,8 @@ from .errors import (AbortedError, CASError, CkptError, CodecUnavailableError,
                      CorruptShardError, MissingShardError, NamespaceError,
                      NoCheckpointError, RegistryMismatchError, SpaceError)
 from .preempt import PreemptionGuard, PreemptQueue
+from .restore_path import ReadCache, RestorePlan, RestoreSession
+from .save_path import PersistStage, SavePlan, SaveSession
 from .split_state import (abstract_train_state, config_digest,
                           init_train_state, leaf_paths,
                           lower_half_descriptor, state_shardings)
@@ -25,8 +27,9 @@ __all__ = [
     "ChunkIOExecutor", "ChunkStore", "CkptError", "CodecUnavailableError",
     "CorruptShardError", "CrashInjector", "CrashPoint",
     "DrainCounters", "GearChunker", "MissingShardError", "NamespaceError",
-    "NoCheckpointError", "PreemptQueue", "PreemptionGuard",
-    "RegistryMismatchError", "SpaceError", "Tier", "TieredStore",
+    "NoCheckpointError", "PersistStage", "PreemptQueue", "PreemptionGuard",
+    "ReadCache", "RegistryMismatchError", "RestorePlan", "RestoreSession",
+    "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
     "abstract_train_state", "config_digest", "default_store",
     "init_train_state", "leaf_paths", "lower_half_descriptor",
     "quiesce_device_state", "state_shardings",

@@ -171,6 +171,14 @@ class ChunkStore:
                 self._inflight.discard(digest)
         return written
 
+    def store_chunk(self, digest: str, data, crash: CrashInjector = NO_CRASH,
+                    dirs: set | None = None, dirs_lock=None) -> int:
+        """Streaming-writer entry point (``save_path.SaveSession``): store
+        one chunk, deferring the fan-out directory fsync into ``dirs`` for
+        the caller's rank-level batch barrier. Returns bytes physically
+        written (0 on a dedup hit)."""
+        return self._put_one(digest, data, crash, dirs, dirs_lock)
+
     def get(self, digest: str, verify: bool = True) -> bytes:
         """Read one chunk: primary → buddy replica, each fast tier → slow
         tier. Any single copy failing to read (vanished between exists()
@@ -242,10 +250,15 @@ class ChunkStore:
         set — a writer rank batching many payloads calls ``fsync_dirs``
         ONCE before acking PREPARED, which is all the durability the
         commit protocol needs (the manifest is written after every rank
-        acks; un-fsynced orphans from a crash before that are swept)."""
-        chunks = (chunker(payload) if chunker is not None
-                  else split_payload(payload, self.chunk_size))
+        acks; un-fsynced orphans from a crash before that are swept).
+
+        The pipelined branch is ``save_path.SaveSession`` limited to one
+        payload — ONE implementation of the windowed hash→write pipeline
+        (crc folding, dir batching, mid-batch crash point, error-joins-all)
+        serves both this call and the rank-wide streaming writer."""
         if self._exec.serial:
+            chunks = (chunker(payload) if chunker is not None
+                      else split_payload(payload, self.chunk_size))
             digests, new, crc = [], 0, 0
             for chunk in chunks:
                 d = chunk_digest(chunk)
@@ -259,39 +272,19 @@ class ChunkStore:
                 return digests, new, crc & 0xFFFFFFFF
             return digests, new
 
-        dirs: set = set()
-        dirs_lock = threading.Lock()
-        consumed = 0
-        crc = 0
-
-        def _store(chunk):
-            d = chunk_digest(chunk)
-            # the chunk rides along so the consumer can fold it into the
-            # running payload crc in order
-            return d, self._put_one(d, chunk, crash, dirs, dirs_lock), chunk
-
-        def _on_result(res):
-            nonlocal consumed, crc
-            consumed += 1
-            if want_crc:
-                crc = zlib.crc32(res[2], crc)
-            if consumed == 1 and len(chunks) > 1:
-                # first chunk durably renamed while the rest of the batch
-                # is still in flight — the mid-batch crash point
-                crash.maybe("cas_mid_batch")
-            if on_chunk is not None:
-                on_chunk()
-
-        results = self._exec.map_ordered(_store, chunks,
-                                         on_result=_on_result)
+        from .save_path import SaveSession      # deferred: cas ← save_path
+        session = SaveSession(self, crash=crash, on_chunk=on_chunk,
+                              chunker=chunker,
+                              dirs=dirs_out if dirs_out is not None
+                              else set())
+        ticket = session.submit_payload(payload)
         if dirs_out is not None:
-            dirs_out |= dirs
+            session.flush()                     # caller owns the fsync batch
         else:
-            self.fsync_dirs(dirs, crash)
-        digests = [d for d, _, _ in results]
-        new = sum(n for _, n, _ in results)
+            session.barrier(crash)
+        digests, new, crc = session.result(ticket)
         if want_crc:
-            return digests, new, crc & 0xFFFFFFFF
+            return digests, new, crc
         return digests, new
 
     def fsync_dirs(self, dirs, crash: CrashInjector = NO_CRASH):
@@ -350,6 +343,55 @@ class ChunkStore:
                 lambda d: self.get(d, verify=True), digests, window=window))
             _check(payload, strict=True)
         return payload
+
+    def read_payload_fixed(self, digests, payload_bytes: int,
+                           chunk_size: int, crc32: int) -> bytes | bytearray:
+        """Direct-placement reassembly for FIXED chunking (the read-side
+        analogue of the write path's zero-copy feed): every chunk's offset
+        is known ahead (``i * chunk_size``), so the pipelined engine
+        ``readinto``s each chunk straight into a preallocated payload
+        buffer — no per-chunk bytes objects, no join copy. The
+        whole-payload crc32 stays the integrity gate; any short/missing/
+        corrupt object drops that chunk (or the whole payload, on crc
+        mismatch) back to the fully-verified ``read_payload`` path, which
+        pinpoints damage and heals via replicas/tiers.
+
+        The serial engine keeps the original join path untouched."""
+        digests = list(digests)
+        if self._exec.serial or payload_bytes is None or crc32 is None \
+                or chunk_size <= 0:
+            return self.read_payload(digests, payload_bytes, crc32=crc32)
+        if payload_bytes > max(len(digests), 1) * chunk_size or (
+                digests and payload_bytes <= (len(digests) - 1) * chunk_size):
+            # digest list and claimed length disagree — let the verified
+            # path produce the precise corruption error
+            return self.read_payload(digests, payload_bytes, crc32=crc32)
+        buf = bytearray(payload_bytes)
+        mv = memoryview(buf)
+        fast = self.store.fast
+
+        def _fill(i: int):
+            lo = i * chunk_size
+            hi = min(lo + chunk_size, payload_bytes)
+            dest = mv[lo:hi]
+            try:
+                if fast.read_into(object_rel(digests[i]), dest):
+                    return
+            except OSError:
+                pass           # evicted/missing primary: verified fallback
+            data = self.get(digests[i], verify=True)
+            if len(data) != len(dest):
+                raise CorruptShardError(
+                    "fixed-chunking object length mismatch",
+                    digest=digests[i], expected=len(dest), got=len(data))
+            dest[:] = data
+
+        window = 2 * min(self._exec.threads, cpu_cap())
+        self._exec.map_ordered(_fill, range(len(digests)), window=window)
+        if (zlib.crc32(buf) & 0xFFFFFFFF) != crc32:
+            # end-to-end gate failed: re-read fully verified, per chunk
+            return self.read_payload(digests, payload_bytes, crc32=crc32)
+        return buf
 
     @property
     def executor(self) -> ChunkIOExecutor:

@@ -1,74 +1,65 @@
 """Topology-agnostic checkpoint save/restore — MANA's split-process C/R as a
-JAX subsystem.
+JAX subsystem. This module is ORCHESTRATION ONLY: planning and IO live in
+the staged pipeline engines (``core.save_path`` / ``core.restore_path``).
 
-Save path (two-phase commit, coordinator-supervised, async-capable):
+Save pipeline (two-phase commit, coordinator-supervised):
 
-  drain → host snapshot → [rank writers: encode+crc+write shards] → barrier
-        → manifest (single handle, P7) → atomic rename commit → LATEST
-        → refcount publication (incremental mode) → mark-and-sweep GC
-        → background drain to the slow storage tier
+  stage 0  snapshot   drain → device→host copy (the only part the training
+                      thread ever blocks on);
+  stage 1  write      ``save_path.write_shards``: SavePlan assignment +
+                      per-rank writer threads feeding a rank-wide
+                      SaveSession queue (chunks flow across shard
+                      boundaries with no per-shard drain bubble), one
+                      batched durability fsync per rank, retrying 2PC
+                      phase 1;
+  stage 2  commit     manifest (single handle, P7) → atomic rename →
+                      LATEST → refcount publication (incremental mode);
+  stage 3  maintain   retention GC + CAS mark-and-sweep, then background
+                      drain to the slow storage tier.
 
-Two save modes (``mode=``):
+With ``blocking=False`` stages 1–3 run on the ``PersistStage`` thread and
+overlap subsequent training steps; a preemption signal can request a
+fast-flush (skip stage-3 maintenance, never the commit or the drain) so
+the round lands and the process exits promptly.
 
-  full         every shard payload is written inline into the step directory
-               (the v2 behaviour — O(model) bytes per checkpoint);
-  incremental  encoded shard payloads are fixed-size-chunked into the
-               content-addressed store (core.cas); the manifest records
-               per-shard chunk digest lists, unchanged chunks dedup to zero
-               write cost, and the steady-state checkpoint is O(changed
-               chunks) — the paper's "reduce checkpoint overhead" open item.
+Save modes (``mode=``): ``full`` writes every shard inline (v2 layout);
+``incremental`` chunks encoded payloads into the content-addressed store
+(``core.cas``) — unchanged chunks dedup to zero write cost. Chunking
+schemes (``chunking=``): ``fixed`` or ``cdc`` (FastCDC-style,
+``core.cdc``). Manifest format v4; v3/v2 stay fully readable, including
+mixed histories.
 
-Incremental chunking comes in two schemes (``chunking=``): ``fixed``
-(fixed-size split) and ``cdc`` (FastCDC-style content-defined chunking,
-``core.cdc``) — CDC keeps deduping when a payload shifts by a few bytes,
-where fixed-size boundaries all move. The chunk data path is pipelined
-across a bounded IO pool (``io_threads=``, ``core.chunk_exec``): writer
-ranks hash+write chunks concurrently with one directory fsync per batch,
-and restore prefetches chunks ahead of reassembly.
-
-Manifest format v4 records the chunking scheme per shard record (and
-manifest-wide); v3 (``mode``/``chunk_size``, chunked records) and v2
-(inline shard files only) remain fully readable — mixed-history restores
-and GC work across all three.
-
-Restore path (elastic, P2/P6):
-
-  manifest → per-device index ranges from the *current* sharding
-           → plan_reads over saved ranges → leaf-level fan-out across the
-             restore pool → read (fast tier → slow tier → buddy replica;
-             chunked shards prefetch chunks the same way)
-           → crc verify → decode → assemble →
-           → jax.make_array_from_callback → registry validation
-
-Nothing about the saving topology is required to match: different device
-count, mesh shape, or sharding restores correctly (tested 1↔4↔8-device),
-in both full and incremental modes.
+Restore pipeline (elastic, P2/P6): manifest → RestorePlan (per-leaf jobs
+against the CURRENT sharding, ``elastic.plan_reads``) → RestoreSession
+prefetch (leaf fan-out, chunk prefetch, fixed-chunking direct placement
+into preallocated buffers, crc gate) → device arrays built on the calling
+thread → registry validation. Nothing about the saving topology is
+required to match (tested 1↔4↔8-device, both modes).
 """
 from __future__ import annotations
 
 import json
 import shutil
-import threading
 import time
-import zlib
-from collections import Counter, OrderedDict
+from collections import Counter
 from pathlib import Path
 
 import jax
-import msgpack
 import numpy as np
 
-from . import atomic, cas, cdc, codec as codec_mod
+from . import atomic, cas, cdc
+from . import codec as codec_mod
+from . import save_path
 from .atomic import NO_CRASH, CrashInjector
 from .chunk_exec import DEFAULT_IO_THREADS, ChunkIOExecutor, cpu_cap
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
-from .elastic import ShardRange, normalize_index, assemble, plan_reads
 from .errors import (AbortedError, CkptError, CodecUnavailableError,
-                     CorruptShardError, MissingShardError, NoCheckpointError,
-                     warn)
-from .namespace import REPLICA_SUFFIX, UPPER_DIR, leaf_to_fname
+                     NoCheckpointError)
 from .registry import build_registry, registry_json, validate_against
+from .restore_path import (ReadCache, RestorePlan, RestoreSession,
+                           unpack_shard)
+from .save_path import PersistStage, pack_shard, write_shards
 from .split_state import leaf_paths
 from .storage import TieredStore
 
@@ -79,42 +70,11 @@ READABLE_FORMATS = (2, 3, 4)
 MODES = ("full", "incremental")
 CHUNKINGS = ("fixed", "cdc")
 
+# inspector/test compatibility: the shard codecs live with their pipeline
+# stages now, but these names have external users
+_pack_shard = pack_shard
+_unpack_shard = unpack_shard
 
-# ---------------------------------------------------------------------------
-# shard files (full mode / v2)
-# ---------------------------------------------------------------------------
-
-def _pack_shard(leaf: str, rng: ShardRange, arr: np.ndarray, codec: str):
-    payload, meta = codec_mod.encode(arr, codec)
-    header = {
-        "leaf": leaf,
-        "global_dtype": str(arr.dtype),
-        "start": list(rng.start),
-        "stop": list(rng.stop),
-        "codec": codec,
-        "meta": meta,
-        "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
-        "payload_bytes": len(payload),
-    }
-    hb = msgpack.packb(header)
-    return len(hb).to_bytes(4, "little") + hb + payload, header
-
-
-def _unpack_shard(data: bytes):
-    hlen = int.from_bytes(data[:4], "little")
-    header = msgpack.unpackb(data[4:4 + hlen])
-    payload = data[4 + hlen:4 + hlen + header["payload_bytes"]]
-    if (zlib.crc32(payload) & 0xFFFFFFFF) != header["crc32"]:
-        raise CorruptShardError("payload crc mismatch", leaf=header["leaf"])
-    rng = ShardRange(tuple(header["start"]), tuple(header["stop"]))
-    arr = codec_mod.decode(payload, header["codec"], rng.shape,
-                           header["global_dtype"], header["meta"])
-    return rng, arr
-
-
-# ---------------------------------------------------------------------------
-# manager
-# ---------------------------------------------------------------------------
 
 class CheckpointManager:
     def __init__(self, store: TieredStore, *, n_writers: int = 4,
@@ -179,30 +139,30 @@ class CheckpointManager:
         # CPU/bandwidth bound, where extra threads only contend
         self._restore_exec = ChunkIOExecutor(
             min(io_threads, cpu_cap()) if io_threads > 1 else io_threads)
-        self._async_thread: threading.Thread | None = None
-        self._async_err = None
-        self._read_cache: OrderedDict = OrderedDict()
-        self._read_cache_bytes = 0
-        self._read_cache_lock = threading.Lock()
+        self._persist = PersistStage()
+        self._cache = ReadCache()
+        self._restore = RestoreSession(store, self.chunks,
+                                       self._restore_exec, self._cache)
         self._manifest_refs_cache: dict = {}   # (tier, step) → Counter
-        self.read_cache_limit = 1 << 30
         self.last_report: dict = {}
         self.last_gc_report: dict = {}
 
     def close(self):
         """Drain async work and tear down the IO pools (idempotent)."""
         self.wait()
+        self.store.wait_drained()
         self.chunks.close()
         self._restore_exec.shutdown(wait=False)
 
     # ------------------------------------------------------------------
-    # save
+    # save: stage 0 (snapshot) inline, stages 1–3 inline or overlapped
     # ------------------------------------------------------------------
     def save(self, state, step: int, *, extra: dict | None = None,
              blocking: bool = True, crash: CrashInjector = NO_CRASH) -> dict:
-        """Checkpoint `state` at `step`. With blocking=False the host
-        snapshot is synchronous but file IO overlaps subsequent compute
-        (drain protocol guarantees quiescence before the next round)."""
+        """Checkpoint `state` at `step`. With blocking=False only the
+        device→host snapshot is synchronous; chunk/hash/write/2PC-COMMIT
+        run on the persist stage and overlap subsequent training steps
+        (the drain protocol guarantees quiescence before the next round)."""
         t0 = time.monotonic()
         # P4: quiescence before snapshot
         self.wait()                                  # previous round drained
@@ -213,63 +173,56 @@ class CheckpointManager:
         total = sum(a.nbytes for _, _, a in items)
         self.store.fast.preflight(total // max(self._est_ratio(), 1))
         self.counters.enqueue(total)
+
+        # exactly-once counter drain for this round: the abort path inside
+        # the round AND the persist stage's error handler both reach for
+        # it, and a double commit would skew the two-counter equality (P4)
+        # forever — the trainer's next wait() would stall to timeout
+        counted = {"done": False}
+
+        def commit_total():
+            if not counted["done"]:
+                counted["done"] = True
+                self.counters.commit(total)
+
         args = (items, registry, state, step, extra or {}, total, t0,
-                snap_s, wait_s, crash)
+                snap_s, wait_s, crash, commit_total)
         if blocking:
-            return self._write_round(*args)
-        self._async_thread = threading.Thread(
-            target=self._async_entry, args=args, daemon=True)
-        self._async_thread.start()
+            try:
+                return self._write_round(*args, overlapped=False)
+            except BaseException:
+                # ANY failure (not just the abort path, which drains its
+                # own counters) must drain exactly once — e.g. an OSError
+                # on the manifest write would otherwise skew the P4
+                # equality and stall every later save in counters.wait()
+                commit_total()
+                raise
+        self._persist.submit(
+            lambda: self._write_round(*args, overlapped=True),
+            # counters must still drain or the trainer deadlocks
+            on_error=lambda e: commit_total())
         return {"step": step, "async": True, "snapshot_s": snap_s,
-                "bytes": total}
+                "blocking_s": time.monotonic() - t0, "bytes": total}
 
     def _est_ratio(self):
         return 2 if self.codec != "raw" else 1
 
-    def _async_entry(self, *args):
-        try:
-            self._write_round(*args)
-        except Exception as e:  # noqa
-            self._async_err = e
-            # counters must still drain or the trainer deadlocks
-            self.counters.commit(args[5])
-
     def wait(self):
-        """Drain the async writer (two-counter equality, P4)."""
-        if self._async_thread is not None:
-            self._async_thread.join()
-            self._async_thread = None
+        """Drain the persist stage (two-counter equality, P4)."""
+        self._persist.wait()
         if not self.counters.drained():
             self.counters.wait(timeout=self.save_timeout_s)
-        if self._async_err is not None:
-            e, self._async_err = self._async_err, None
-            raise e
+
+    def request_fast_flush(self):
+        """Preemption hook (signal-handler safe): ask the in-flight
+        overlapped round to skip non-essential maintenance and land."""
+        self._persist.request_fast_flush()
 
     def _snapshot(self, state) -> list:
-        """Device → host copy; one entry per unique logical shard range.
-        The pipelined engine fans the per-shard host copies out over the
-        (save-time idle) restore pool; the serial engine keeps the
-        original inline copies."""
-        pending = []
-        for name, leaf in leaf_paths(state):
-            if hasattr(leaf, "addressable_shards"):
-                seen = set()
-                gshape = leaf.shape
-                for sh in leaf.addressable_shards:
-                    rng = normalize_index(sh.index, gshape)
-                    key = (rng.start, rng.stop)
-                    if key in seen:
-                        continue           # replicated copy — save once
-                    seen.add(key)
-                    pending.append((name, rng, sh.data))
-            else:
-                arr = np.asarray(leaf)
-                rng = ShardRange((0,) * arr.ndim, arr.shape)
-                pending.append((name, rng, arr))
-        hosts = self._restore_exec.map_ordered(
-            np.asarray, [data for _, _, data in pending])
-        return [(name, rng, arr)
-                for (name, rng, _), arr in zip(pending, hosts)]
+        """Stage 0: device → host copy (``save_path.snapshot_items``) —
+        the only part of an overlapped save the training thread waits on.
+        Kept as an instance method so tests can interpose topologies."""
+        return save_path.snapshot_items(state, self._restore_exec)
 
     def _leaf_codec(self, leaf_name: str) -> str:
         if leaf_name.startswith("params/"):
@@ -277,181 +230,38 @@ class CheckpointManager:
         return self.codec
 
     def _write_round(self, items, registry, state, step, extra, total, t0,
-                     snap_s, wait_s, crash) -> dict:
+                     snap_s, wait_s, crash, commit_total,
+                     overlapped: bool = False) -> dict:
         stage = atomic.staging_dir(self.store.root, step)
         stage.mkdir(parents=True, exist_ok=True)
         atomic.mark_pending(stage, {"step": step, "t": time.time()})
-        coord = self.coordinator
-        rel_stage = stage.name
         incremental = self.mode == "incremental"
 
-        stats_lock = threading.Lock()
-        stats = {"files": 0, "payload_bytes": 0, "written_bytes": 0,
-                 "new_object_bytes": 0, "chunks": 0}
-        manifest_shards = {}
-        shard_records: dict = {}    # item index → chunked manifest record
-        shard_order: dict = {}      # leaf name → [item indices]
-        dead: set = set()
-
-        def assign(alive: list):
-            """Round-robin shard assignment over surviving ranks; the next
-            alive rank writes the buddy replica (full mode — in incremental
-            mode chunk objects carry their own replica copies)."""
-            per_rank = {r: [] for r in alive}
-            shards = {}
-            order = {}
-            for i, (name, rng, arr) in enumerate(items):
-                r = alive[i % len(alive)]
-                fname = f"{UPPER_DIR}/{leaf_to_fname(name)}/shard-{i:05d}.bin"
-                per_rank[r].append((i, name, rng, arr, fname, False))
-                order.setdefault(name, []).append(i)
-                if incremental:
-                    continue
-                replicas = [fname]
-                if self.replicas > 1 and len(alive) > 1:
-                    buddy = alive[(i + 1) % len(alive)]
-                    rf = fname + REPLICA_SUFFIX
-                    per_rank[buddy].append((i, name, rng, arr, rf, True))
-                    replicas.append(rf)
-                shards.setdefault(name, []).append({
-                    "file": fname, "replicas": replicas,
-                    "start": list(rng.start), "stop": list(rng.stop),
-                    "dtype": str(arr.dtype),
-                    "codec": self._leaf_codec(name),
-                })
-            return per_rank, shards, order
-
-        def writer(rank: int, work: list):
-            try:
-                coord.rank_begin(rank)
-                nbytes = 0
-                files = []
-                rank_chunks: Counter = Counter()
-                rank_dirs: set = set()     # fan-out dirs pending fsync
-                for i, name, rng, arr, fname, is_replica in work:
-                    codec_name = self._leaf_codec(name)
-                    if incremental:
-                        pipelined = not self.chunks.executor.serial
-                        if pipelined and codec_name == "raw":
-                            # zero-copy feed: the chunk pipeline consumes a
-                            # uint8 VIEW of the host array — no tobytes()
-                            # copy, and chunk slices stay views all the way
-                            # into hash/crc/write
-                            payload = np.ascontiguousarray(arr) \
-                                .reshape(-1).view(np.uint8)
-                            meta = {}
-                        else:
-                            payload, meta = codec_mod.encode(arr, codec_name)
-                        crash.maybe(f"rank{rank}_before_write")
-                        if pipelined:
-                            digests, new_bytes, crc = self.chunks.put_payload(
-                                payload, crash,
-                                on_chunk=lambda: coord.heartbeat(rank),
-                                chunker=self._chunker, want_crc=True,
-                                dirs_out=rank_dirs)
-                        else:
-                            digests, new_bytes = self.chunks.put_payload(
-                                payload, crash,
-                                on_chunk=lambda: coord.heartbeat(rank),
-                                chunker=self._chunker)
-                            crc = zlib.crc32(payload) & 0xFFFFFFFF
-                        crash.maybe(f"rank{rank}_after_chunk_write")
-                        rank_chunks.update(digests)
-                        nbytes += new_bytes
-                        rec = {
-                            "chunks": digests,
-                            "chunk_size": self.chunks.chunk_size,
-                            "chunking": self.chunking,
-                            "start": list(rng.start), "stop": list(rng.stop),
-                            "dtype": str(arr.dtype), "codec": codec_name,
-                            "meta": meta,
-                            "crc32": crc,
-                            "payload_bytes": len(payload),
-                        }
-                        with stats_lock:
-                            shard_records[i] = rec
-                            stats["files"] += 1
-                            stats["payload_bytes"] += len(payload)
-                            stats["written_bytes"] += new_bytes
-                            stats["new_object_bytes"] += new_bytes
-                            stats["chunks"] += len(digests)
-                    else:
-                        data, header = _pack_shard(name, rng, arr, codec_name)
-                        crash.maybe(f"rank{rank}_before_write")
-                        self.store.fast.write_file(f"{rel_stage}/{fname}",
-                                                   data)
-                        nbytes += len(data)
-                        files.append(fname)
-                        with stats_lock:
-                            stats["written_bytes"] += len(data)
-                            if not is_replica:
-                                stats["files"] += 1
-                                stats["payload_bytes"] += \
-                                    header["payload_bytes"]
-                    coord.heartbeat(rank)
-                if rank_dirs:
-                    # one durability barrier per rank, fanned over the
-                    # chunk pool — PREPARED may only be acked once every
-                    # object this rank wrote is findable after a crash
-                    self.chunks.fsync_dirs(rank_dirs, crash)
-                    coord.heartbeat(rank)
-                coord.rank_prepared(rank, nbytes=nbytes, files=files,
-                                    chunks=rank_chunks)
-            except Exception as e:  # noqa
-                coord.rank_failed(rank, f"{type(e).__name__}: {e}")
-
-        ok = False
-        reason = ""
-        for attempt in range(self.max_retries + 1):
-            alive = [r for r in range(self.n_writers) if r not in dead]
-            if not alive:
-                reason = "no surviving writer ranks"
-                break
-            for k in stats:
-                stats[k] = 0
-            shard_records.clear()
-            per_rank, manifest_shards, shard_order = assign(alive)
-            coord.begin_round(step, participants=alive)
-            threads = [threading.Thread(target=writer, args=(r, per_rank[r]),
-                                        daemon=True) for r in alive]
-            for t in threads:
-                t.start()
-            ok = coord.wait_all_prepared(timeout=self.save_timeout_s)
-            reason = coord.abort_reason()
-            newly_dead = set(coord.round.failed) if coord.round else set()
-            for t in threads:
-                t.join()
-            if ok:
-                break
-            coord.finish_round(False)
-            dead |= newly_dead or set(alive)  # timeout w/o blame: give up
-            if attempt < self.max_retries and newly_dead:
-                warn("CKPT_W_RETRY",
-                     "writer rank(s) failed; redistributing their shards "
-                     "to survivors and retrying",
-                     dead=sorted(dead), step=step, reason=reason)
-        if not ok:
+        # ---- stage 1: plan + write (retrying 2PC phase 1) ----
+        outcome = write_shards(
+            items=items, alive_hint=self.n_writers,
+            coordinator=self.coordinator, chunks=self.chunks,
+            store=self.store, rel_stage=stage.name, step=step,
+            incremental=incremental, chunking=self.chunking,
+            chunker=self._chunker, replicas=self.replicas,
+            leaf_codec=self._leaf_codec, max_retries=self.max_retries,
+            save_timeout_s=self.save_timeout_s, crash=crash,
+            overlapped=overlapped)
+        if not outcome.ok:
             # ABORT leaks nothing: no manifest, no LATEST move, and no
             # refcounts published — chunk objects a dead rank managed to
             # write are unreferenced orphans that the next sweep reclaims
             shutil.rmtree(stage, ignore_errors=True)
-            self.counters.commit(total)
-            raise AbortedError("checkpoint aborted", step=step, reason=reason)
+            commit_total()
+            raise AbortedError("checkpoint aborted", step=step,
+                               reason=outcome.reason)
+        stats = outcome.stats
 
-        # phase 2: manifest = commit record (single handle, P7)
-        if incremental:
-            leaves = {
-                name: {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
-                       "shards": [shard_records[i]
-                                  for i in shard_order.get(name, [])]}
-                for name, leaf in leaf_paths(state)
-            }
-        else:
-            leaves = {
-                name: {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
-                       "shards": manifest_shards.get(name, [])}
-                for name, leaf in leaf_paths(state)
-            }
+        # ---- stage 2: manifest = commit record (single handle, P7) ----
+        leaf_specs = [(name, leaf.shape, str(leaf.dtype))
+                      for name, leaf in leaf_paths(state)]
+        leaves = outcome.plan.manifest_leaves(
+            leaf_specs, outcome.shard_records if incremental else None)
         manifest = {
             "format": FORMAT_VERSION,
             "mode": self.mode,
@@ -474,14 +284,24 @@ class CheckpointManager:
         # COMMIT phase: the coordinator publishes the round's aggregated
         # chunk refcounts atomically; the digests are captured first so the
         # new objects can be drained to the slow tier below
+        coord = self.coordinator
         round_digests = sorted(coord.round.chunk_refs) if coord.round else []
         coord.finish_round(
             True,
             publish_refs=(
                 (lambda refs: self.chunks.apply_refs(refs, crash))
                 if incremental else None))
-        self.counters.commit(total)
-        self.last_gc_report = self._gc_locked(crash=crash)
+        commit_total()
+
+        # ---- stage 3: maintenance + slow-tier drain ----
+        if overlapped and self._persist.fast_flush_requested:
+            # preemption fast-flush: the commit above is durable; skip the
+            # O(objects + history) sweep so the process can exit. The drain
+            # below still runs — a committed round must reach the slow tier
+            # or later deduped rounds would reference fast-only objects.
+            self.last_gc_report = {"skipped": True, "reason": "fast-flush"}
+        else:
+            self.last_gc_report = self._gc_locked(crash=crash)
         self.store.drain_step(
             final.name,
             extra_files=[cas.object_rel(d, r)
@@ -494,6 +314,8 @@ class CheckpointManager:
             "written_bytes": stats["written_bytes"],
             "files": stats["files"], "seconds": dt,
             "snapshot_s": snap_s, "drain_wait_s": wait_s,
+            "overlapped": overlapped,
+            "blocking_s": snap_s if overlapped else dt,
             "throughput_gbps": total / dt / 1e9 if dt else 0.0,
             "compression_ratio": total / max(stats["payload_bytes"], 1),
         }
@@ -515,51 +337,11 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     def _live_chunk_refs(self, tiers=None, errors: list | None = None) \
             -> Counter:
-        """Mark phase: chunk refcounts implied by every committed manifest
-        on the given tiers (default: all — old steps may survive on the
-        slow tier after fast-tier retirement and their chunks stay live).
-        Committed manifests are immutable, so per-(tier, step) ref counters
-        are memoized: each save only parses the manifest it just wrote
-        instead of re-reading the whole run history.
-
-        An unreadable manifest does NOT silently contribute zero refs: the
-        same step's copy on another tier is still consulted (a step only
-        counts as seen once successfully parsed), and any step that stays
-        unreadable everywhere is appended to `errors` so a destructive
-        caller can fail safe instead of sweeping that step's chunks."""
-        full_scan = tiers is None
-        tiers = self.store.tiers() if full_scan else tiers
-        live: Counter = Counter()
-        seen_steps: set = set()
-        failed_steps: dict = {}
-        valid_keys: set = set()
-        for tier in tiers:
-            for s in atomic.list_committed_steps(tier.root):
-                key = (tier.name, s)
-                valid_keys.add(key)
-                if s in seen_steps:
-                    continue
-                refs = self._manifest_refs_cache.get(key)
-                if refs is None:
-                    mpath = atomic.committed_dir(tier.root, s) \
-                        / atomic.MANIFEST
-                    try:
-                        refs = cas.live_chunk_refs(
-                            [json.loads(mpath.read_text())])
-                    except (OSError, ValueError):
-                        failed_steps[s] = tier.name
-                        continue
-                    self._manifest_refs_cache[key] = refs
-                seen_steps.add(s)
-                live.update(refs)
-        if errors is not None:
-            errors.extend((t, s) for s, t in failed_steps.items()
-                          if s not in seen_steps)
-        if full_scan:                      # drop memo entries of retired steps
-            for key in list(self._manifest_refs_cache):
-                if key not in valid_keys:
-                    del self._manifest_refs_cache[key]
-        return live
+        """Mark phase (``save_path.collect_live_refs``), memoized per
+        (tier, step) so each save only parses the manifest it just wrote."""
+        return save_path.collect_live_refs(self.store,
+                                           self._manifest_refs_cache,
+                                           tiers=tiers, errors=errors)
 
     def gc(self, *, crash: CrashInjector = NO_CRASH) -> dict:
         """Retire fast-tier steps beyond `retain`, clear staging litter,
@@ -574,61 +356,15 @@ class CheckpointManager:
 
     def _gc_locked(self, *, crash: CrashInjector = NO_CRASH,
                    force_sweep: bool = False) -> dict:
-        """GC body — called directly by the save round itself (which IS
-        the async thread, so it must not self-join via wait()).
-
-        The destructive mark-and-sweep is O(total objects + history), so
-        the per-save path only runs it when retention actually dropped a
-        step (that's when objects become garbage in bulk); an explicit
-        gc() always sweeps, which is how aborted-round orphans are
-        reclaimed on demand."""
-        # a step being drained to the slow tier MUST land before retirement
-        # and marking — otherwise retiring its fast copy mid-copy would
-        # leave its manifest on no tier and sweep would reap its chunks
-        self.store.wait_drained()
-        steps = atomic.list_committed_steps(self.store.root)
-        dropped = steps[:-self.retain] if self.retain else []
-        for s in dropped:
-            shutil.rmtree(atomic.committed_dir(self.store.root, s),
-                          ignore_errors=True)
-        atomic.gc_staging(self.store.root)
-        no_sweep = {"swept": 0, "swept_bytes": 0, "kept": 0, "kept_bytes": 0,
-                    "tmp_removed": 0, "evicted": 0, "evicted_bytes": 0}
-        if not (dropped or force_sweep):
-            return {"steps_dropped": [],
-                    "cas": dict(no_sweep, skipped=True)}
-        errors: list = []
-        live = self._live_chunk_refs(errors=errors)
-        fast_errors: list = []
-        fast_live = (self._live_chunk_refs(tiers=[self.store.fast],
-                                           errors=fast_errors)
-                     if self.store.slow is not None else None)
-        if fast_errors:
-            # eviction's mark set is incomplete (a fast-tier manifest is
-            # unreadable even though the slow copy may be fine) — evicting
-            # on it would silently demote a retained step to slow-tier
-            # bandwidth, so skip eviction this round
-            warn("CKPT_W_GC", "unreadable fast-tier manifest(s); skipping "
-                 "burst-buffer eviction this round", steps=fast_errors[:8])
-            fast_live = None
-        crash.maybe("after_gc_mark")
-        if errors:
-            # fail safe: with any committed manifest unreadable the mark
-            # set is incomplete, and sweeping would permanently delete
-            # chunks a committed checkpoint still needs
-            warn("CKPT_W_GC", "unreadable committed manifest(s); skipping "
-                 "the CAS sweep (fail-safe) — repair or remove the damaged "
-                 "step(s) and rerun gc()", steps=errors[:8])
-            return {"steps_dropped": dropped,
-                    "cas": dict(no_sweep, skipped=True,
-                                unreadable_manifests=errors)}
-        report = {"steps_dropped": dropped,
-                  "cas": self.chunks.sweep(live, crash,
-                                           fast_live=fast_live)}
-        return report
+        """Stage-3 body (``save_path.run_maintenance``) — called directly
+        by the save round itself (which IS the persist thread, so it must
+        not self-join via wait())."""
+        return save_path.run_maintenance(
+            self.store, self.chunks, self.retain, self._live_chunk_refs,
+            crash=crash, force_sweep=force_sweep)
 
     # ------------------------------------------------------------------
-    # restore
+    # restore: manifest → RestorePlan → prefetch → device placement
     # ------------------------------------------------------------------
     def latest_step(self):
         """Newest restorable step. A crash between the commit rename and
@@ -673,187 +409,46 @@ class CheckpointManager:
                                     root=str(self.store.root))
         manifest = self.load_manifest(step)
         step_dir = atomic.committed_dir(Path("."), step).name
-        leaves = manifest["leaves"]
 
         flat, treedef = jax.tree_util.tree_flatten(abstract_state)
         shard_flat = (treedef.flatten_up_to(shardings)
                       if shardings is not None else [None] * len(flat))
         names = [n for n, _ in leaf_paths(abstract_state)]
-        jobs = []
-        for name, sds, sharding in zip(names, flat, shard_flat):
-            rec = leaves.get(name)
-            if rec is None:
-                raise MissingShardError("leaf missing from checkpoint",
-                                        leaf=name, step=step)
-            # canonical numpy target dtype, resolved on the main thread
-            np_dtype = np.asarray(jax.numpy.zeros((), sds.dtype)).dtype
-            jobs.append((name, rec, sds, sharding, np_dtype))
-
-        def host(job):
-            name, rec, sds, sharding, np_dtype = job
-            fetch = self._leaf_fetcher(step_dir, name, rec, np_dtype)
-            shape = tuple(sds.shape)
-            return {(rng.start, rng.stop): fetch(rng)
-                    for rng in self._leaf_ranges(shape, sharding)}
-
-        prefetched = self._restore_exec.map_ordered(host, jobs)
-        out = [self._leaf_to_device(step_dir, job, pre)
-               for job, pre in zip(jobs, prefetched)]
+        plan = RestorePlan.build(manifest, step_dir, names, flat,
+                                 shard_flat, step)
+        prefetched = self._restore.prefetch(plan)
+        out = [self._restore.leaf_to_device(step_dir, job, pre)
+               for job, pre in zip(plan.jobs, prefetched)]
         state = jax.tree_util.tree_unflatten(treedef, out)
         if validate:
-            validate_against(state, leaves)
-        with self._read_cache_lock:
-            self._read_cache.clear()
-            self._read_cache_bytes = 0
+            validate_against(state, manifest["leaves"])
+        self._cache.clear()
         return state, manifest.get("extra", {})
 
-    def _leaf_fetcher(self, step_dir, name, rec, np_dtype):
-        """Host-side range fetch for one leaf: plan reads over the saved
-        shard ranges, read/decode each, assemble the target range. Pure
-        numpy + IO — safe on restore pool workers.
-
-        Pipelined engine only: when a single saved shard covers the target
-        range EXACTLY (the common same-topology restore), its decoded
-        array is returned as-is — no assemble copy, no coverage mask. The
-        serial engine keeps the original always-assemble path (it is the
-        benchmark baseline)."""
-        available = [(ShardRange(tuple(s["start"]), tuple(s["stop"])), s)
-                     for s in rec["shards"]]
-        exact_ok = not self._restore_exec.serial
-
-        def fetch(target: ShardRange) -> np.ndarray:
-            picks = plan_reads(target, available)
-            if exact_ok and len(picks) == 1 and \
-                    picks[0][0].start == target.start and \
-                    picks[0][0].stop == target.stop:
-                arr = self._read_shard(step_dir, picks[0][1])
-                if arr.dtype == np_dtype and arr.shape == target.shape:
-                    return arr
-                # dtype/shape drift: fall through to the casting assemble
-            pieces = [(rng, self._read_shard(step_dir, s))
-                      for rng, s in picks]
-            try:
-                return assemble(target, pieces, np_dtype)
-            except LookupError as e:
-                raise MissingShardError(str(e), leaf=name) from None
-
-        return fetch
-
-    @staticmethod
-    def _leaf_ranges(shape, sharding):
-        """Index ranges THIS PROCESS needs from one leaf — what the
-        host-fetch phase prefetches. Only addressable devices count: on a
-        multi-host restore each host must read O(its shards), not
-        O(global model). An un-enumerable sharding yields no prefetch
-        ranges; the device callback then fetches lazily."""
-        if sharding is None:
-            return [ShardRange((0,) * len(shape), shape)]
-        try:
-            idx_map = sharding.addressable_devices_indices_map(shape)
-        except Exception:  # noqa — exotic sharding: fall back to lazy cb
-            return []
-        seen, out = set(), []
-        for idx in idx_map.values():
-            if idx is None:
-                continue
-            rng = normalize_index(idx, shape)
-            key = (rng.start, rng.stop)
-            if key not in seen:
-                seen.add(key)
-                out.append(rng)
-        return out
-
-    def _leaf_to_device(self, step_dir, job, prefetched):
-        """Phase 2 (main thread): device array from prefetched host data,
-        with a lazy fetch fallback for ranges the prefetch missed."""
-        name, rec, sds, sharding, np_dtype = job
-        shape = tuple(sds.shape)
-        dtype = sds.dtype
-        if sharding is None:
-            full = prefetched[((0,) * len(shape), shape)]
-            return jax.numpy.asarray(full, dtype=dtype)
-        fetch = self._leaf_fetcher(step_dir, name, rec, np_dtype)
-
-        def cb(index):
-            rng = normalize_index(index, shape)
-            key = (rng.start, rng.stop)
-            if key not in prefetched:
-                prefetched[key] = fetch(rng)
-            return prefetched[key]
-
-        return jax.make_array_from_callback(shape, sharding, cb)
-
+    # ------------------------------------------------------------------
+    # compatibility shims: tests and operator tooling reach these names
+    # ------------------------------------------------------------------
     def _read_shard(self, step_dir: str, srec: dict) -> np.ndarray:
-        if "chunks" in srec:
-            return self._read_chunked_shard(srec)
-        # step-scoped: shard file names repeat across steps, and a failed
-        # restore can leave the cache populated for a different step
-        key = f"{step_dir}/{srec['file']}"
-        cached = self._cache_get(key)
-        if cached is not None:
-            return cached
-        last_err = None
-        for fname in srec.get("replicas", [srec["file"]]):
-            rel = f"{step_dir}/{fname}"
-            tier = self.store.locate(rel)
-            if tier is None:
-                last_err = MissingShardError("shard not on any tier",
-                                             file=fname)
-                continue
-            try:
-                rng, arr = _unpack_shard(tier.read_file(rel))
-                if fname != srec["file"]:
-                    warn("CKPT_W_REPLICA", "primary shard unavailable; "
-                         "restored from buddy replica", file=srec["file"])
-                self._cache_put(key, arr)
-                return arr
-            except (CorruptShardError, OSError, ValueError) as e:
-                last_err = e
-                continue
-        raise last_err if last_err else MissingShardError(
-            "unreadable shard", file=srec["file"])
+        return self._restore.read_shard(step_dir, srec)
 
-    def _read_chunked_shard(self, srec: dict) -> np.ndarray:
-        """v3/v4 incremental shard: reassemble the encoded payload via the
-        prefetch pipeline (each chunk resolved fast tier → slow tier →
-        buddy replica, the whole-payload crc as the end-to-end integrity
-        gate), then decode."""
-        key = ("cas", tuple(srec["chunks"]), srec["codec"], srec["dtype"],
-               tuple(srec["start"]), tuple(srec["stop"]))
-        cached = self._cache_get(key)
-        if cached is not None:
-            return cached
-        payload = self.chunks.read_payload(srec["chunks"],
-                                           srec.get("payload_bytes"),
-                                           crc32=srec["crc32"])
-        rng = ShardRange(tuple(srec["start"]), tuple(srec["stop"]))
-        arr = codec_mod.decode(payload, srec["codec"], rng.shape,
-                               srec["dtype"], srec.get("meta", {}))
-        self._cache_put(key, arr)
-        return arr
-
-    # ------------------------------------------------------------------
-    # read cache: LRU, byte-budgeted, safe under concurrent leaf fan-out
-    # ------------------------------------------------------------------
     def _cache_get(self, key):
-        with self._read_cache_lock:
-            ent = self._read_cache.get(key)
-            if ent is None:
-                return None
-            self._read_cache.move_to_end(key)     # recency, not insertion
-            return ent[1]
+        return self._cache.get(key)
 
     def _cache_put(self, key, arr):
-        with self._read_cache_lock:
-            old = self._read_cache.pop(key, None)
-            if old is not None:
-                # re-insert (e.g. concurrent fills of the same shard) must
-                # not double-count: a leaked byte total would eventually
-                # exceed the limit forever and thrash the cache to one entry
-                self._read_cache_bytes -= old[1].nbytes
-            self._read_cache[key] = (time.monotonic(), arr)
-            self._read_cache_bytes += arr.nbytes
-            while self._read_cache_bytes > self.read_cache_limit \
-                    and len(self._read_cache) > 1:
-                _, (_, evicted) = self._read_cache.popitem(last=False)
-                self._read_cache_bytes -= evicted.nbytes
+        self._cache.put(key, arr)
+
+    @property
+    def _read_cache(self):
+        return self._cache.entries
+
+    @property
+    def _read_cache_bytes(self) -> int:
+        return self._cache.nbytes
+
+    @property
+    def read_cache_limit(self) -> int:
+        return self._cache.limit
+
+    @read_cache_limit.setter
+    def read_cache_limit(self, v: int):
+        self._cache.limit = v

@@ -32,7 +32,8 @@ from __future__ import annotations
 import os
 import threading
 from collections import deque
-from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
+from concurrent.futures import (Future, ThreadPoolExecutor,
+                                wait as futures_wait)
 
 DEFAULT_IO_THREADS = 4
 
@@ -103,6 +104,20 @@ class ChunkIOExecutor:
             futures_wait(list(pending))
             raise
         return out
+
+    def submit(self, fn, *args) -> Future:
+        """Raw pool submission for streaming callers (``save_path.
+        SaveSession``) that manage their own in-flight window and
+        consumption order. A serial executor runs the call inline and
+        returns an already-resolved future, so callers need no branch."""
+        if self.serial:
+            f: Future = Future()
+            try:
+                f.set_result(fn(*args))
+            except BaseException as e:  # noqa — future carries it
+                f.set_exception(e)
+            return f
+        return self._get_pool().submit(fn, *args)
 
     def shutdown(self, wait: bool = True):
         with self._lock:

@@ -41,9 +41,12 @@ class RankInfo:
 class Round:
     """One two-phase-commit checkpoint round."""
 
-    def __init__(self, step: int, participants):
+    def __init__(self, step: int, participants, overlapped: bool = False):
         self.step = step
         self.participants = set(participants)
+        # True when the round persists in the background (async save) —
+        # the training thread has already moved on past the snapshot
+        self.overlapped = overlapped
         self.aborted = False
         self.abort_reason = ""
         self.prepared = set()
@@ -143,15 +146,17 @@ class CheckpointCoordinator:
     # ------------------------------------------------------------------
     # coordinator-side API
     # ------------------------------------------------------------------
-    def begin_round(self, step: int, participants=None) -> Round:
+    def begin_round(self, step: int, participants=None,
+                    overlapped: bool = False) -> Round:
         """participants: rank ids taking part (retry rounds exclude ranks
-        declared dead — the node-failure recovery path)."""
+        declared dead — the node-failure recovery path). ``overlapped``
+        marks a round whose persist runs behind training compute."""
         with self._lock:
             assert self.round is None or self.round.done(), \
                 "previous round still active"
             if participants is None:
                 participants = range(self.n_ranks)
-            self.round = Round(step, participants)
+            self.round = Round(step, participants, overlapped=overlapped)
             for ri in self.ranks.values():
                 ri.state = RankState.IDLE
                 ri.last_heartbeat = self._clock()
@@ -184,9 +189,12 @@ class CheckpointCoordinator:
         with self._lock:
             r = self.round
             self.metrics["commits" if committed else "aborts"] += 1
+            if r.overlapped:
+                self.metrics["overlapped_rounds"] = \
+                    self.metrics.get("overlapped_rounds", 0) + 1
             self.history.append({
                 "step": r.step, "committed": committed,
-                "reason": r.abort_reason,
+                "reason": r.abort_reason, "overlapped": r.overlapped,
                 "bytes": sum(ri.bytes_written for ri in self.ranks.values()),
                 "chunk_refs": sum(r.chunk_refs.values()),
             })

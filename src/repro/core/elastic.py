@@ -80,21 +80,47 @@ def assemble(target: ShardRange, pieces, dtype) -> np.ndarray:
 
 
 def plan_reads(target: ShardRange, available: list) -> list:
-    """available: list of (ShardRange, handle). Returns the minimal subset
-    (greedy by overlap size) that covers `target`."""
-    picks = []
-    remaining = target.size()
-    # greedy: biggest overlaps first — avoids reading redundant replicas
+    """available: list of (ShardRange, handle). Returns a small subset
+    (greedy by overlap size) that covers `target`.
+
+    Coverage is tracked per ELEMENT, not by an element-count bound: saved
+    shards may partially overlap each other (e.g. ranges written under
+    different topologies in one history), and a count that double-credits
+    the overlap would stop picking before the target is actually covered.
+    Shards contributing no new elements are skipped — redundant replicas
+    are never read twice."""
     scored = []
     for rng, handle in available:
         ov = overlap(rng, target)
         if ov is not None or not target.shape:
-            scored.append((ov.size() if ov else 1, rng, handle))
+            scored.append((ov.size() if ov else 1, ov, rng, handle))
+    # greedy: biggest overlaps first — fewest reads, no redundant replicas
     scored.sort(key=lambda t: -t[0])
-    seen = None
-    for sz, rng, handle in scored:
+    if not target.shape:                     # scalar: any one source serves
+        return [(rng, handle) for _, _, rng, handle in scored[:1]]
+    if scored and scored[0][1] is not None \
+            and scored[0][1].start == target.start \
+            and scored[0][1].stop == target.stop:
+        # exact cover by one source (the common same-topology restore):
+        # answer in O(1), before allocating the coverage mask — this sits
+        # on the restore hot path next to the assemble-skip fast path
+        return [(scored[0][2], scored[0][3])]
+    # partial covers: one bool mask (assemble allocates the same for its
+    # coverage check right after) with per-element accounting — but only
+    # slice-sized counts per candidate, never full-array scans
+    covered = np.zeros(target.shape, dtype=bool)
+    remaining = target.size()
+    picks = []
+    for _, ov, rng, handle in scored:
+        if remaining <= 0:
+            break
+        dst = tuple(slice(a - t, b - t)
+                    for a, b, t in zip(ov.start, ov.stop, target.start))
+        sub = covered[dst]
+        fresh = sub.size - int(np.count_nonzero(sub))
+        if fresh == 0:
+            continue                         # adds nothing new
+        covered[dst] = True
+        remaining -= fresh
         picks.append((rng, handle))
-        remaining -= sz                      # upper bound (ignores overlap
-        if remaining <= 0:                   # between picks — safe, we verify
-            break                            # coverage in assemble())
     return picks

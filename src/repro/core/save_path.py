@@ -1,0 +1,642 @@
+"""Save-path pipeline stages: planning, the rank-wide chunk submission
+queue, the phase-1 write engine, and the background persist stage.
+
+``CheckpointManager`` used to interleave all of this inside one ~900-line
+module; the stages now live here so each can evolve independently:
+
+  SavePlan      pure planning — round-robin shard→rank assignment, buddy
+                replica placement, and the manifest-record skeletons;
+  SaveSession   a RANK-WIDE submission queue over the shared
+                ``ChunkIOExecutor``: chunks from payload k+1 enter the pool
+                while payload k's tail is still in flight, eliminating the
+                per-shard ``put_payload`` drain bubble (the ROADMAP's
+                writer-rank cross-payload pipelining item). Digest order,
+                per-payload crc folding, heartbeats, dedup accounting and
+                the error-joins-all guarantee are all preserved;
+  write_shards  the retrying two-phase-commit phase 1: writer threads per
+                surviving rank, coordinator-supervised, redistributing a
+                dead rank's shards to survivors;
+  PersistStage  the background persist thread for ``save(blocking=False)``:
+                the training thread returns after the device→host snapshot
+                while chunk/hash/write/COMMIT run here, with a
+                preemption-aware fast-flush hook (SIGTERM → skip
+                non-essential maintenance, drain, exit).
+
+``io_threads=1`` stays byte-for-byte the serial PR-1 engine: SaveSession
+degrades to the original chunk-at-a-time ``put_payload`` calls.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from collections import Counter, deque
+from concurrent.futures import wait as futures_wait
+
+import msgpack
+import numpy as np
+
+from . import codec as codec_mod
+from .atomic import NO_CRASH, CrashInjector
+from .cas import ChunkStore, chunk_digest, split_payload
+from .elastic import ShardRange, normalize_index
+from .errors import warn
+from .namespace import REPLICA_SUFFIX, UPPER_DIR, leaf_to_fname
+
+
+def pack_shard(leaf: str, rng: ShardRange, arr, codec: str):
+    """Full-mode (v2) inline shard file: length-prefixed msgpack header +
+    encoded payload."""
+    payload, meta = codec_mod.encode(arr, codec)
+    header = {
+        "leaf": leaf,
+        "global_dtype": str(arr.dtype),
+        "start": list(rng.start),
+        "stop": list(rng.stop),
+        "codec": codec,
+        "meta": meta,
+        "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+        "payload_bytes": len(payload),
+    }
+    hb = msgpack.packb(header)
+    return len(hb).to_bytes(4, "little") + hb + payload, header
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+class SavePlan:
+    """Pure planning for one write attempt: which rank writes which shard
+    (round-robin over survivors), where buddy replicas go (the next alive
+    rank), and the full-mode manifest shard records. No IO."""
+
+    def __init__(self, per_rank: dict, manifest_shards: dict,
+                 shard_order: dict):
+        self.per_rank = per_rank            # rank → [(i, name, rng, arr, fname, is_replica)]
+        self.manifest_shards = manifest_shards  # full mode: leaf → [records]
+        self.shard_order = shard_order      # leaf → [item indices]
+
+    @classmethod
+    def build(cls, items, alive: list, *, incremental: bool, replicas: int,
+              leaf_codec) -> "SavePlan":
+        per_rank = {r: [] for r in alive}
+        shards: dict = {}
+        order: dict = {}
+        for i, (name, rng, arr) in enumerate(items):
+            r = alive[i % len(alive)]
+            fname = f"{UPPER_DIR}/{leaf_to_fname(name)}/shard-{i:05d}.bin"
+            per_rank[r].append((i, name, rng, arr, fname, False))
+            order.setdefault(name, []).append(i)
+            if incremental:
+                # chunk objects carry their own replica copies
+                continue
+            replica_files = [fname]
+            if replicas > 1 and len(alive) > 1:
+                buddy = alive[(i + 1) % len(alive)]
+                rf = fname + REPLICA_SUFFIX
+                per_rank[buddy].append((i, name, rng, arr, rf, True))
+                replica_files.append(rf)
+            shards.setdefault(name, []).append({
+                "file": fname, "replicas": replica_files,
+                "start": list(rng.start), "stop": list(rng.stop),
+                "dtype": str(arr.dtype),
+                "codec": leaf_codec(name),
+            })
+        return cls(per_rank, shards, order)
+
+    def manifest_leaves(self, leaf_specs, shard_records: dict | None) -> dict:
+        """Manifest ``leaves`` table. ``leaf_specs``: [(name, shape, dtype)]
+        for every leaf of the state. ``shard_records`` (incremental mode):
+        item index → chunked record; None selects the full-mode records."""
+        if shard_records is not None:
+            return {
+                name: {"shape": list(shape), "dtype": dtype,
+                       "shards": [shard_records[i]
+                                  for i in self.shard_order.get(name, [])]}
+                for name, shape, dtype in leaf_specs
+            }
+        return {
+            name: {"shape": list(shape), "dtype": dtype,
+                   "shards": self.manifest_shards.get(name, [])}
+            for name, shape, dtype in leaf_specs
+        }
+
+
+# ---------------------------------------------------------------------------
+# rank-wide chunk submission queue
+# ---------------------------------------------------------------------------
+
+class PayloadTicket:
+    """Accumulator for one submitted payload: digests in chunk order, bytes
+    physically written, running crc32, and a completion count. Resolved by
+    the session's consumption loop; read it only after ``flush()`` (or
+    ``result()``, which drains just far enough)."""
+
+    __slots__ = ("digests", "new_bytes", "crc", "remaining", "n_chunks",
+                 "payload_bytes")
+
+    def __init__(self, n_chunks: int, payload_bytes: int):
+        self.digests: list = []
+        self.new_bytes = 0
+        self.crc = 0
+        self.remaining = n_chunks
+        self.n_chunks = n_chunks
+        self.payload_bytes = payload_bytes
+
+    @property
+    def done(self) -> bool:
+        return self.remaining == 0
+
+
+class SaveSession:
+    """Rank-wide submission queue feeding the chunk pool continuously
+    ACROSS shard boundaries.
+
+    ``put_payload`` drains its in-flight window at every payload end, so a
+    writer rank with many small shards stalls the pool once per shard.
+    Here the writer submits each payload and immediately moves on; chunk
+    completions are consumed (in global submission order) only to keep the
+    window bounded, to fold each payload's crc, and to run the coordinator
+    heartbeat. ``flush()`` drains everything before the rank's durability
+    barrier.
+
+    Error semantics match ``ChunkIOExecutor.map_ordered``: the first
+    failure (including injected ``CrashPoint``s) cancels queued chunks,
+    joins every in-flight call, and re-raises — when a SaveSession method
+    exits with an error, no submitted work is still running.
+
+    The serial engine (``io_threads=1``) bypasses the queue entirely:
+    ``submit_payload`` runs the original chunk-at-a-time ``put_payload``
+    inline, so the PR-1 baseline stays byte-for-byte intact.
+    """
+
+    def __init__(self, chunks: ChunkStore, *, crash: CrashInjector = NO_CRASH,
+                 on_chunk=None, chunker=None, dirs: set | None = None,
+                 window: int | None = None):
+        self._chunks = chunks
+        self._crash = crash
+        self._on_chunk = on_chunk
+        self._chunker = chunker
+        self._exec = chunks.executor
+        self.serial = self._exec.serial
+        # fan-out dirs pending the rank's batched fsync barrier
+        self.dirs: set = dirs if dirs is not None else set()
+        self._dirs_lock = threading.Lock()
+        self._window = max(int(window or 2 * self._exec.threads), 1)
+        self._pending: deque = deque()      # (future, ticket, chunk)
+
+    # -- submission ----------------------------------------------------
+    def submit_payload(self, payload) -> PayloadTicket:
+        """Chunk `payload` and feed the pool; returns the payload's ticket.
+        Serial engine: runs to completion inline (PR-1 path)."""
+        if self.serial:
+            digests, new = self._chunks.put_payload(
+                payload, self._crash, on_chunk=self._on_chunk,
+                chunker=self._chunker)
+            ticket = PayloadTicket(0, len(payload))
+            ticket.digests = digests
+            ticket.new_bytes = new
+            ticket.crc = zlib.crc32(payload) & 0xFFFFFFFF
+            return ticket
+        chunks = (self._chunker(payload) if self._chunker is not None
+                  else split_payload(payload, self._chunks.chunk_size))
+        ticket = PayloadTicket(len(chunks), len(payload))
+        try:
+            for chunk in chunks:
+                while len(self._pending) >= self._window:
+                    self._consume_one()
+                fut = self._exec.submit(self._store, chunk)
+                self._pending.append((fut, ticket, chunk))
+        except BaseException:
+            self.abort()
+            raise
+        return ticket
+
+    def _store(self, chunk):
+        d = chunk_digest(chunk)
+        return d, self._chunks.store_chunk(d, chunk, self._crash,
+                                           self.dirs, self._dirs_lock)
+
+    # -- consumption ---------------------------------------------------
+    def _consume_one(self):
+        fut, ticket, chunk = self._pending.popleft()
+        try:
+            d, new = fut.result()
+        except BaseException:
+            self.abort()
+            raise
+        ticket.digests.append(d)
+        ticket.new_bytes += new
+        ticket.crc = zlib.crc32(chunk, ticket.crc)
+        ticket.remaining -= 1
+        try:
+            if ticket.n_chunks > 1 and \
+                    len(ticket.digests) == 1:
+                # first chunk of a multi-chunk payload durably renamed
+                # while its siblings are still in flight — the mid-batch
+                # crash point
+                self._crash.maybe("cas_mid_batch")
+            if self._on_chunk is not None:
+                self._on_chunk()
+        except BaseException:
+            self.abort()
+            raise
+
+    def abort(self):
+        """Cancel what hasn't started, join what has (no stray worker may
+        still be writing objects while the caller's abort path runs).
+        Session methods call this on their own failures; a CALLER whose
+        error occurs between session calls (codec failure, injected crash)
+        must call it too before unwinding, or pool workers would still be
+        renaming objects while the abort/GC path runs."""
+        futs = [f for f, _, _ in self._pending]
+        for f in futs:
+            f.cancel()
+        futures_wait(futs)
+        self._pending.clear()
+
+    def result(self, ticket: PayloadTicket) -> tuple:
+        """Drain until `ticket` resolves; returns (digests, new_bytes, crc).
+        Chunks of LATER payloads may remain in flight."""
+        while not ticket.done:
+            self._consume_one()
+        return ticket.digests, ticket.new_bytes, ticket.crc & 0xFFFFFFFF
+
+    def flush(self):
+        """Drain every in-flight chunk (all tickets resolve)."""
+        while self._pending:
+            self._consume_one()
+
+    def barrier(self, crash: CrashInjector | None = None):
+        """flush + the rank's ONE batched durability fsync over every
+        fan-out dir this session touched."""
+        self.flush()
+        if self.dirs:
+            self._chunks.fsync_dirs(self.dirs, crash or self._crash)
+            self.dirs.clear()
+
+
+# ---------------------------------------------------------------------------
+# phase-1 write engine (retrying, coordinator-supervised)
+# ---------------------------------------------------------------------------
+
+class WriteOutcome:
+    """Result of the phase-1 barrier: per-attempt stats, chunked records,
+    the plan that produced them, and abort blame."""
+
+    def __init__(self):
+        self.ok = False
+        self.reason = ""
+        self.plan: SavePlan | None = None
+        self.stats = {"files": 0, "payload_bytes": 0, "written_bytes": 0,
+                      "new_object_bytes": 0, "chunks": 0}
+        self.shard_records: dict = {}       # item index → chunked record
+        self.dead: set = set()
+
+
+def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
+                 store, rel_stage: str, step: int, incremental: bool,
+                 chunking: str, chunker, replicas: int, leaf_codec,
+                 max_retries: int, save_timeout_s: float,
+                 crash: CrashInjector, overlapped: bool = False) \
+        -> WriteOutcome:
+    """Run the retrying 2PC phase 1: plan an attempt over surviving ranks,
+    start one writer thread per rank, wait for the all-PREPARED barrier,
+    and on a rank death redistribute its shards to survivors (up to
+    ``max_retries`` times). Pure write-side — commit/abort stays with the
+    caller."""
+    out = WriteOutcome()
+    stats_lock = threading.Lock()
+
+    def writer(rank: int, work: list):
+        session = None
+        try:
+            coordinator.rank_begin(rank)
+            nbytes = 0
+            files: list = []
+            rank_chunks: Counter = Counter()
+            session = SaveSession(chunks, crash=crash,
+                                  on_chunk=lambda: coordinator.heartbeat(rank),
+                                  chunker=chunker)
+            deferred: list = []             # (item index, ticket, record)
+            for i, name, rng, arr, fname, is_replica in work:
+                codec_name = leaf_codec(name)
+                if incremental:
+                    if not session.serial and codec_name == "raw":
+                        # zero-copy feed: the chunk pipeline consumes a
+                        # uint8 VIEW of the host array — no tobytes()
+                        # copy, and chunk slices stay views all the way
+                        # into hash/crc/write
+                        payload = np.ascontiguousarray(arr) \
+                            .reshape(-1).view(np.uint8)
+                        meta = {}
+                    else:
+                        payload, meta = codec_mod.encode(arr, codec_name)
+                    crash.maybe(f"rank{rank}_before_write")
+                    ticket = session.submit_payload(payload)
+                    rec = {
+                        "chunks": None,     # filled after the flush below
+                        "chunk_size": chunks.chunk_size,
+                        "chunking": chunking,
+                        "start": list(rng.start), "stop": list(rng.stop),
+                        "dtype": str(arr.dtype), "codec": codec_name,
+                        "meta": meta,
+                        "crc32": None,
+                        "payload_bytes": len(payload),
+                    }
+                    deferred.append((i, ticket, rec))
+                else:
+                    data, header = pack_shard(name, rng, arr, codec_name)
+                    crash.maybe(f"rank{rank}_before_write")
+                    store.fast.write_file(f"{rel_stage}/{fname}", data)
+                    nbytes += len(data)
+                    files.append(fname)
+                    with stats_lock:
+                        out.stats["written_bytes"] += len(data)
+                        if not is_replica:
+                            out.stats["files"] += 1
+                            out.stats["payload_bytes"] += \
+                                header["payload_bytes"]
+                coordinator.heartbeat(rank)
+            # one durability barrier per rank, fanned over the chunk pool —
+            # PREPARED may only be acked once every object this rank wrote
+            # is findable after a crash
+            session.barrier(crash)
+            coordinator.heartbeat(rank)
+            for i, ticket, rec in deferred:
+                digests, new_bytes, crc = session.result(ticket)
+                # the matrix's "writer dies with orphan chunks on disk"
+                # point: this payload's objects are renamed AND covered by
+                # the barrier above, so the injected death deterministically
+                # leaves durable orphans for the recovery sweep
+                crash.maybe(f"rank{rank}_after_chunk_write")
+                rec["chunks"] = digests
+                rec["crc32"] = crc
+                rank_chunks.update(digests)
+                nbytes += new_bytes
+                with stats_lock:
+                    out.shard_records[i] = rec
+                    out.stats["files"] += 1
+                    out.stats["payload_bytes"] += rec["payload_bytes"]
+                    out.stats["written_bytes"] += new_bytes
+                    out.stats["new_object_bytes"] += new_bytes
+                    out.stats["chunks"] += len(digests)
+            coordinator.rank_prepared(rank, nbytes=nbytes, files=files,
+                                      chunks=rank_chunks)
+        except Exception as e:  # noqa
+            if session is not None:
+                # an error raised BETWEEN session calls (codec failure,
+                # injected crash) leaves chunk futures in flight — join
+                # them before reporting failure, or pool workers would
+                # still be renaming objects while the round's abort /
+                # retry / GC path runs
+                try:
+                    session.abort()
+                except Exception:  # noqa — the original error wins
+                    pass
+            coordinator.rank_failed(rank, f"{type(e).__name__}: {e}")
+
+    for attempt in range(max_retries + 1):
+        alive = [r for r in range(alive_hint) if r not in out.dead]
+        if not alive:
+            out.reason = "no surviving writer ranks"
+            break
+        for k in out.stats:
+            out.stats[k] = 0
+        out.shard_records.clear()
+        out.plan = SavePlan.build(items, alive, incremental=incremental,
+                                  replicas=replicas, leaf_codec=leaf_codec)
+        coordinator.begin_round(step, participants=alive,
+                                overlapped=overlapped)
+        threads = [threading.Thread(target=writer,
+                                    args=(r, out.plan.per_rank[r]),
+                                    daemon=True) for r in alive]
+        for t in threads:
+            t.start()
+        out.ok = coordinator.wait_all_prepared(timeout=save_timeout_s)
+        out.reason = coordinator.abort_reason()
+        newly_dead = set(coordinator.round.failed) if coordinator.round \
+            else set()
+        for t in threads:
+            t.join()
+        if out.ok:
+            break
+        coordinator.finish_round(False)
+        out.dead |= newly_dead or set(alive)  # timeout w/o blame: give up
+        if attempt < max_retries and newly_dead:
+            warn("CKPT_W_RETRY",
+                 "writer rank(s) failed; redistributing their shards "
+                 "to survivors and retrying",
+                 dead=sorted(out.dead), step=step, reason=out.reason)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# snapshot stage (stage 0 — the only blocking part of an overlapped save)
+# ---------------------------------------------------------------------------
+
+def snapshot_items(state, pool) -> list:
+    """Device → host copy; one entry per unique logical shard range.
+    The pipelined engine fans the per-shard host copies out over `pool`
+    (the save-time idle restore pool); the serial engine keeps the
+    original inline copies."""
+    from .split_state import leaf_paths
+    pending = []
+    for name, leaf in leaf_paths(state):
+        if hasattr(leaf, "addressable_shards"):
+            seen = set()
+            gshape = leaf.shape
+            for sh in leaf.addressable_shards:
+                rng = normalize_index(sh.index, gshape)
+                key = (rng.start, rng.stop)
+                if key in seen:
+                    continue               # replicated copy — save once
+                seen.add(key)
+                pending.append((name, rng, sh.data))
+        else:
+            arr = np.asarray(leaf)
+            rng = ShardRange((0,) * arr.ndim, arr.shape)
+            pending.append((name, rng, arr))
+    hosts = pool.map_ordered(np.asarray, [d for _, _, d in pending])
+    return [(name, rng, arr)
+            for (name, rng, _), arr in zip(pending, hosts)]
+
+
+# ---------------------------------------------------------------------------
+# maintenance stage (stage 3: retention + CAS mark-and-sweep)
+# ---------------------------------------------------------------------------
+
+def collect_live_refs(store, memo: dict, tiers=None,
+                      errors: list | None = None) -> Counter:
+    """Mark phase: chunk refcounts implied by every committed manifest on
+    the given tiers (default: all — old steps may survive on the slow tier
+    after fast-tier retirement and their chunks stay live). Committed
+    manifests are immutable, so per-(tier, step) ref counters are memoized
+    in `memo`: each save only parses the manifest it just wrote instead of
+    re-reading the whole run history.
+
+    An unreadable manifest does NOT silently contribute zero refs: the
+    same step's copy on another tier is still consulted (a step only
+    counts as seen once successfully parsed), and any step that stays
+    unreadable everywhere is appended to `errors` so a destructive caller
+    can fail safe instead of sweeping that step's chunks."""
+    import json
+
+    from . import atomic, cas
+    full_scan = tiers is None
+    tiers = store.tiers() if full_scan else tiers
+    live: Counter = Counter()
+    seen_steps: set = set()
+    failed_steps: dict = {}
+    valid_keys: set = set()
+    for tier in tiers:
+        for s in atomic.list_committed_steps(tier.root):
+            key = (tier.name, s)
+            valid_keys.add(key)
+            if s in seen_steps:
+                continue
+            refs = memo.get(key)
+            if refs is None:
+                mpath = atomic.committed_dir(tier.root, s) / atomic.MANIFEST
+                try:
+                    refs = cas.live_chunk_refs(
+                        [json.loads(mpath.read_text())])
+                except (OSError, ValueError):
+                    failed_steps[s] = tier.name
+                    continue
+                memo[key] = refs
+            seen_steps.add(s)
+            live.update(refs)
+    if errors is not None:
+        errors.extend((t, s) for s, t in failed_steps.items()
+                      if s not in seen_steps)
+    if full_scan:                      # drop memo entries of retired steps
+        for key in list(memo):
+            if key not in valid_keys:
+                del memo[key]
+    return live
+
+
+def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
+                    crash: CrashInjector = NO_CRASH,
+                    force_sweep: bool = False) -> dict:
+    """Stage 3 body: retire fast-tier steps beyond `retain`, clear staging
+    litter, then mark-and-sweep the content-addressed store. `collect` is
+    the manager's memoizing mark-phase callable (tiers=, errors=).
+
+    The destructive mark-and-sweep is O(total objects + history), so the
+    per-save path only runs it when retention actually dropped a step
+    (that's when objects become garbage in bulk); an explicit gc() always
+    sweeps, which is how aborted-round orphans are reclaimed on demand."""
+    import shutil
+
+    from . import atomic
+
+    # a step being drained to the slow tier MUST land before retirement
+    # and marking — otherwise retiring its fast copy mid-copy would leave
+    # its manifest on no tier and sweep would reap its chunks
+    store.wait_drained()
+    steps = atomic.list_committed_steps(store.root)
+    dropped = steps[:-retain] if retain else []
+    for s in dropped:
+        shutil.rmtree(atomic.committed_dir(store.root, s),
+                      ignore_errors=True)
+    atomic.gc_staging(store.root)
+    no_sweep = {"swept": 0, "swept_bytes": 0, "kept": 0, "kept_bytes": 0,
+                "tmp_removed": 0, "evicted": 0, "evicted_bytes": 0}
+    if not (dropped or force_sweep):
+        return {"steps_dropped": [], "cas": dict(no_sweep, skipped=True)}
+    errors: list = []
+    live = collect(errors=errors)
+    fast_errors: list = []
+    fast_live = (collect(tiers=[store.fast], errors=fast_errors)
+                 if store.slow is not None else None)
+    if fast_errors:
+        # eviction's mark set is incomplete (a fast-tier manifest is
+        # unreadable even though the slow copy may be fine) — evicting on
+        # it would silently demote a retained step to slow-tier bandwidth,
+        # so skip eviction this round
+        warn("CKPT_W_GC", "unreadable fast-tier manifest(s); skipping "
+             "burst-buffer eviction this round", steps=fast_errors[:8])
+        fast_live = None
+    crash.maybe("after_gc_mark")
+    if errors:
+        # fail safe: with any committed manifest unreadable the mark set
+        # is incomplete, and sweeping would permanently delete chunks a
+        # committed checkpoint still needs
+        warn("CKPT_W_GC", "unreadable committed manifest(s); skipping "
+             "the CAS sweep (fail-safe) — repair or remove the damaged "
+             "step(s) and rerun gc()", steps=errors[:8])
+        return {"steps_dropped": dropped,
+                "cas": dict(no_sweep, skipped=True,
+                            unreadable_manifests=errors)}
+    return {"steps_dropped": dropped,
+            "cas": chunks.sweep(live, crash, fast_live=fast_live)}
+
+
+# ---------------------------------------------------------------------------
+# background persist stage
+# ---------------------------------------------------------------------------
+
+class PersistStage:
+    """Owns the overlapped persist: ``save(blocking=False)`` hands the
+    snapshotted round here and returns; chunk/hash/write/2PC-COMMIT run on
+    this thread while training continues. One round in flight at a time
+    (the drain protocol serializes successive saves).
+
+    ``request_fast_flush()`` is the preemption hook: a SIGTERM handler (via
+    ``PreemptionGuard.add_callback``) flips a flag the in-flight round
+    consults to skip non-essential maintenance (the per-save GC sweep) so
+    the round commits and the process can exit promptly — the commit
+    itself, refcount publication and the slow-tier drain are never
+    skipped (durability is the point of the final checkpoint). The flag
+    clears when the flushed round ends. A request with NO round in flight
+    deliberately applies to the next overlapped round (the signal may land
+    during the snapshot, before the persist thread exists); if the process
+    then survives the preemption, the cost is one skipped maintenance
+    round — self-healing, since the following round (or an explicit gc())
+    retires everything that accumulated."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self._err: BaseException | None = None
+        self._fast_flush = threading.Event()
+
+    @property
+    def active(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    @property
+    def fast_flush_requested(self) -> bool:
+        return self._fast_flush.is_set()
+
+    def request_fast_flush(self):
+        self._fast_flush.set()
+
+    def submit(self, fn, on_error):
+        """Run ``fn`` on the persist thread; ``on_error(exc)`` runs there
+        on failure (the manager uses it to keep the drain counters moving —
+        a stuck counter would deadlock the trainer)."""
+        def entry():
+            try:
+                fn()
+            except BaseException as e:  # noqa — propagated via wait()
+                self._err = e
+                on_error(e)
+            finally:
+                # fast-flush is per-request, not a latch: once the flushed
+                # round lands (or dies) the next round must run full
+                # maintenance again, or a survived preemption request
+                # would disable GC for the rest of the process lifetime
+                self._fast_flush.clear()
+
+        self._thread = threading.Thread(target=entry, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            e, self._err = self._err, None
+            raise e

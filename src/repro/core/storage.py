@@ -96,6 +96,18 @@ class Tier:
         self._throttle(len(data))
         return data
 
+    def read_into(self, rel: str, dest: memoryview) -> bool:
+        """Direct-placement read: fill `dest` from the file without an
+        intermediate bytes object. True iff the file length matched the
+        destination exactly (a mismatch — truncated or over-long object —
+        leaves the caller to fall back to the verified copy path)."""
+        path = self.root / rel
+        with open(path, "rb") as f:
+            n = f.readinto(dest)
+            ok = n == len(dest) and not f.read(1)
+        self._throttle(n or 0)
+        return ok
+
     def delete_file(self, rel: str) -> int:
         """Remove a file, returning the bytes freed (0 if absent)."""
         path = self.root / rel

@@ -121,6 +121,30 @@ def _step_dedup(root: Path, manifest: dict) -> dict | None:
             "dedup_ratio": payload / max(uniq, 1)}
 
 
+def _pending_rounds(root: Path, staging: list) -> list:
+    """In-flight (pending-stage) rounds: staging dirs whose PENDING marker
+    still parses. An overlapped save(blocking=False) legitimately keeps
+    one of these alive while it persists in the background — the operator
+    needs the owning step and its AGE to tell a live round from crash
+    litter, not a blanket 'orphaned' verdict."""
+    import time
+    rounds = []
+    for name in staging:
+        marker = root / name / atomic.PENDING
+        try:
+            info = json.loads(marker.read_text())
+            rounds.append({"dir": name, "step": int(info.get("step", -1)),
+                           "age_s": round(max(time.time()
+                                              - float(info.get("t", 0)), 0),
+                                          1)})
+        except (OSError, ValueError):
+            # no/torn marker: either mid-commit (marker already cleared,
+            # rename pending) or true litter — listed, but age unknown
+            rounds.append({"dir": name, "step": None, "age_s": None})
+    return sorted(rounds, key=lambda r: (r["age_s"] is None,
+                                         -(r["age_s"] or 0)))
+
+
 def inspect(root: Path, step=None, verify=False, out=print):
     report = {"root": str(root), "ok": True, "problems": []}
     latest = atomic.read_latest(root)
@@ -131,8 +155,18 @@ def inspect(root: Path, step=None, verify=False, out=print):
     out(f"checkpoint root: {root}")
     out(f"  committed steps: {steps or 'none'}   LATEST -> {latest}")
     if staging:
-        out(f"  ! {len(staging)} orphaned staging dir(s) (crash litter; "
-            f"gc with atomic.gc_staging)")
+        pending = _pending_rounds(root, staging)
+        report["pending_rounds"] = pending
+        for pr in pending:
+            if pr["age_s"] is not None:
+                out(f"  ~ in-flight round: step {pr['step']} "
+                    f"age {pr['age_s']}s ({pr['dir']}) — an overlapped "
+                    f"save in progress, or crash litter if the age keeps "
+                    f"growing")
+            else:
+                out(f"  ! staging dir without a readable PENDING marker: "
+                    f"{pr['dir']} (mid-commit or crash litter; "
+                    f"gc with atomic.gc_staging)")
     if latest is not None and latest not in steps:
         report["problems"].append(f"LATEST={latest} is not a committed step")
     step = step if step is not None else latest

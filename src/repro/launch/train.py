@@ -72,6 +72,11 @@ def main(argv=None):
     report = trainer.fit(args.steps)
     print(f"status={report['status']} step={report['step']} "
           f"ckpt={report['ckpt_metrics']}")
+    last = trainer.manager.last_report
+    if last:
+        print(f"last ckpt: step={last['step']} persist={last['seconds']:.3f}s"
+              f" blocked={last.get('blocking_s', last['seconds']):.3f}s"
+              f" overlapped={last.get('overlapped', False)}")
     if report["history"]:
         print("final:", report["history"][-1])
     return 0

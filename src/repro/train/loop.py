@@ -135,6 +135,10 @@ class Trainer:
         assert self.state is not None, "call init_or_restore() first"
         own_guard = guard is None
         guard = guard or PreemptionGuard()
+        # SIGTERM mid-persist: flip the manager's fast-flush flag from the
+        # signal handler so the in-flight overlapped round skips
+        # non-essential maintenance and lands promptly
+        guard.add_callback(self.manager.request_fast_flush)
         status = "completed"
         steps_done = 0
         if own_guard:
@@ -144,6 +148,11 @@ class Trainer:
                 if guard.should_preempt:
                     self.manager.wait()
                     rep = self.save(blocking=True)
+                    # the preemption checkpoint must be FULLY durable —
+                    # including its slow-tier copy — before the process
+                    # answers the eviction: the burst buffer may not
+                    # survive the node reassignment
+                    self.manager.store.wait_drained()
                     log.info("preempted at step %d; checkpoint %.3fs",
                              self.py_step, rep["seconds"])
                     status = "preempted"
@@ -165,7 +174,14 @@ class Trainer:
                              m.get("loss", float("nan")), m["step_s"])
                 if self.tcfg.ckpt_every and \
                         self.py_step % self.tcfg.ckpt_every == 0:
-                    self.save(blocking=not self.tcfg.async_ckpt)
+                    rep = self.save(blocking=not self.tcfg.async_ckpt)
+                    if rep.get("async"):
+                        # the train thread paid only the snapshot barrier;
+                        # persist overlaps the steps that follow
+                        log.info("ckpt step %d: blocked %.3fs "
+                                 "(snapshot %.3fs), persist overlapped",
+                                 self.py_step, rep["blocking_s"],
+                                 rep["snapshot_s"])
                 if stop_after is not None and steps_done >= stop_after:
                     status = "paused"
                     break

@@ -157,6 +157,22 @@ def test_crash_consistency(tmp_path, point):
                                   np.asarray(restored["params"]["w"]))
 
 
+def test_blocking_save_failure_still_drains_counters(tmp_path):
+    """A blocking save dying AFTER phase 1 (manifest write, rename, LATEST
+    — here an injected crash) must still drain the P4 counters exactly
+    once on the SAME manager, or every later save()/wait() stalls for
+    save_timeout_s in counters.wait()."""
+    mgr = CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
+                            save_timeout_s=5.0)
+    state = _state()
+    with pytest.raises(CrashPoint):
+        mgr.save(state, 1, crash=CrashInjector("before_latest_write"))
+    assert mgr.counters.drained()
+    atomic.gc_staging(mgr.store.root)
+    rep = mgr.save(state, 2)            # no timeout stall
+    assert rep["step"] == 2
+
+
 def test_buddy_replica_restores_after_primary_loss(tmp_path):
     mgr = CheckpointManager(_store(tmp_path), replicas=2, n_writers=2)
     state = _state()

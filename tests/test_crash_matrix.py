@@ -19,7 +19,15 @@ executor: a crash mid-batch (other chunks still in flight on pool
 threads), a crash after every rename but before the batched directory
 fsync, and a crash on the concurrent-dedup path where a racer returns
 while another thread owns the digest.
+
+Overlapped rounds (``save(blocking=False)``) get their own axis: the same
+injection points fired while the persist runs on the background stage —
+plus preempt-during-persist (fast-flush) and abort-of-an-overlapped-round
+scenarios. The matrix honours ``CRASH_MATRIX_IO_THREADS`` so CI can sweep
+the serial (=1) and wide (=8) engines explicitly.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +40,10 @@ from repro.core.errors import AbortedError
 from repro.core.storage import Tier, TieredStore
 
 KEY = jax.random.PRNGKey(3)
+
+# CI sweeps the executor axis explicitly (1 = serial reference engine,
+# 8 = wide pipelined engine); the default matches the manager default
+IO_THREADS = int(os.environ.get("CRASH_MATRIX_IO_THREADS", "4"))
 
 # ≥ 8 injection points per mode (acceptance criterion): writer phase,
 # chunk-object writes (serial AND pipelined executor), manifest write,
@@ -99,7 +111,8 @@ def test_crash_matrix(tmp_path, mode, chunking, point):
         return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
                                  mode=mode, chunk_size=512,
                                  chunking=chunking, retain=1,
-                                 max_retries=0, keepalive_s=60.0, **kw)
+                                 max_retries=0, keepalive_s=60.0,
+                                 io_threads=IO_THREADS, **kw)
 
     states = {1: _state(1), 2: _state(2)}
     mk().save(states[1], 1)
@@ -155,7 +168,8 @@ def test_repeated_crashes_then_recovery(tmp_path, mode, chunking):
         return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
                                  mode=mode, chunk_size=512,
                                  chunking=chunking, retain=2,
-                                 max_retries=0, keepalive_s=60.0)
+                                 max_retries=0, keepalive_s=60.0,
+                                 io_threads=IO_THREADS)
 
     state = _state(0)
     mk().save(state, 1)
@@ -187,3 +201,125 @@ def test_repeated_crashes_then_recovery(tmp_path, mode, chunking):
     mgr.save(final, step)
     _assert_restores(mgr, step, final)
     assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+
+
+# ---------------------------------------------------------------------------
+# overlapped (async-persist) rounds
+# ---------------------------------------------------------------------------
+
+OVERLAP_POINTS = [
+    "rank0_before_write",        # persist dies before any IO
+    "cas_mid_batch",             # chunks in flight on pool threads
+    "cas_before_batch_fsync",    # renamed, rank durability barrier lost
+    "before_manifest",           # shards durable, no commit record
+    "after_commit_rename",       # committed, LATEST points back
+    "before_latest_write",       # committed, LATEST update never started
+    "before_refs_publish",       # committed, refcount publication lost
+    "mid_gc_sweep",              # stage-3 maintenance died mid-sweep
+]
+
+
+def _mk_overlap(tmp_path, **kw):
+    return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
+                             mode="incremental", chunk_size=512,
+                             retain=1, max_retries=0, keepalive_s=60.0,
+                             io_threads=IO_THREADS, **kw)
+
+
+@pytest.mark.parametrize("point", OVERLAP_POINTS)
+def test_crash_matrix_overlapped_persist(tmp_path, point):
+    """The same commit/GC invariants with the crash fired INSIDE the
+    background persist stage of save(blocking=False): wait() must surface
+    the error, the drain counters must still drain exactly once (a double
+    commit would skew the P4 equality forever), and recovery must find
+    zero leaked CAS objects."""
+    states = {1: _state(1), 2: _state(2)}
+    _mk_overlap(tmp_path).save(states[1], 1)
+    mgr = _mk_overlap(tmp_path)
+    rep = mgr.save(states[2], 2, blocking=False,
+                   crash=CrashInjector(point))
+    assert rep["async"] and rep["step"] == 2
+    try:
+        mgr.wait()
+        crashed = False     # point unreached on this engine: a clean commit
+    except (CrashPoint, AbortedError):
+        crashed = True
+    if point not in ("cas_mid_batch", "cas_before_batch_fsync"):
+        # executor-internal points exist only on the pipelined engine; all
+        # others must fire on the persist stage in every configuration
+        assert crashed, f"{point} never fired on the persist stage"
+    # exactly-once counter drain even though the round died mid-persist
+    assert mgr.counters.drained()
+
+    rec = _mk_overlap(tmp_path)              # fresh manager = restart
+    rec.gc()
+    committed = atomic.list_committed_steps(rec.store.root)
+    assert committed, "no committed checkpoint survived the crash"
+    latest = rec.latest_step()
+    assert latest == committed[-1]
+    for s in committed:
+        _assert_restores(rec, s, states[s])
+    fsck = rec.chunks.fsck(rec._live_chunk_refs())
+    assert fsck["ok"], (point, fsck)
+    nxt = latest + 1
+    states[nxt] = _state(nxt)
+    assert rec.save(states[nxt], nxt)["step"] == nxt
+    _assert_restores(rec, nxt, states[nxt])
+    assert rec.chunks.fsck(rec._live_chunk_refs())["ok"]
+
+
+def test_preempt_during_persist_fast_flush(tmp_path):
+    """SIGTERM while an overlapped round persists: the fast-flush hook
+    makes the round skip stage-3 maintenance but NEVER the commit — the
+    checkpoint lands, restores bit-exact, and the next explicit gc()
+    repairs the deferred maintenance."""
+    from repro.core.preempt import PreemptionGuard
+    mgr = _mk_overlap(tmp_path)
+    states = {1: _state(1), 2: _state(2)}
+    mgr.save(states[1], 1)
+    guard = PreemptionGuard()
+    guard.add_callback(mgr.request_fast_flush)
+    guard.request()                      # signal lands BEFORE/DURING persist
+    rep = mgr.save(states[2], 2, blocking=False)
+    assert rep["async"]
+    mgr.wait()                           # the fast-flushed round drains
+    assert mgr.last_report["step"] == 2
+    assert mgr.last_gc_report == {"skipped": True, "reason": "fast-flush"}
+    _assert_restores(mgr, 2, states[2])
+    assert mgr.latest_step() == 2
+    # fast-flush is per-request, not a latch: the flag clears once the
+    # flushed round lands, so the NEXT overlapped round runs maintenance
+    assert not mgr._persist.fast_flush_requested
+    states[3] = _state(3)
+    mgr.save(states[3], 3, blocking=False)
+    mgr.wait()
+    assert mgr.last_gc_report.get("reason") != "fast-flush"
+    assert mgr.last_gc_report["steps_dropped"]      # retention ran again
+    # deferred maintenance self-heals: explicit gc() leaves fsck clean
+    mgr.gc()
+    assert atomic.list_committed_steps(mgr.store.root) == [3]
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    _assert_restores(mgr, 3, states[3])
+
+
+def test_abort_of_overlapped_round_leaks_nothing(tmp_path):
+    """A writer-rank death inside an overlapped round: wait() surfaces
+    AbortedError, counters drain exactly once, no staging litter survives,
+    and after GC the CAS holds exactly the committed steps' objects."""
+    mgr = _mk_overlap(tmp_path)
+    states = {1: _state(1)}
+    mgr.save(states[1], 1)
+    baseline = mgr.chunks.fsck(mgr._live_chunk_refs())["objects"]
+    for r in range(2):
+        mgr.coordinator.inject_failure(r)
+    with pytest.raises(AbortedError):
+        mgr.save(_state(2), 2, blocking=False)
+        mgr.wait()
+    assert mgr.counters.drained()
+    assert not list(mgr.store.root.glob("*.tmp-*"))
+    assert mgr.latest_step() == 1
+    mgr.gc()                             # reclaims any orphaned objects
+    fsck = mgr.chunks.fsck(mgr._live_chunk_refs())
+    assert fsck["ok"]
+    assert fsck["objects"] == baseline   # zero leaked CAS objects
+    _assert_restores(mgr, 1, states[1])

@@ -1,0 +1,148 @@
+"""Edge cases of the elastic restore planner (`plan_reads`/`assemble`):
+zero-size shards, targets with no covering source, single-element
+overlaps, scalars, and dtype preservation through assemble."""
+import numpy as np
+import pytest
+
+from repro.core.elastic import (ShardRange, assemble, normalize_index,
+                                overlap, plan_reads)
+
+
+def _rng(start, stop):
+    return ShardRange(tuple(start), tuple(stop))
+
+
+# ---------------------------------------------------------------------------
+# zero-size shards
+# ---------------------------------------------------------------------------
+
+def test_zero_size_shard_never_overlaps():
+    empty = _rng((3, 0), (3, 4))          # zero rows
+    target = _rng((0, 0), (8, 4))
+    assert overlap(empty, target) is None
+    assert empty.size() == 0
+
+
+def test_zero_size_target_assembles_empty():
+    """A (0,)-shaped target is trivially covered: nothing to read, empty
+    result, correct dtype."""
+    target = _rng((5,), (5,))
+    picks = plan_reads(target, [(_rng((0,), (10,)), "h")])
+    out = assemble(target, [(r, np.arange(10, dtype=np.int16)[r.start[0]:
+                                                              r.stop[0]])
+                            for r, _ in picks], np.int16)
+    assert out.shape == (0,)
+    assert out.dtype == np.int16
+
+
+def test_zero_size_available_shard_is_harmless():
+    """Zero-size shards in the available list must not break planning or
+    coverage for a real target."""
+    data = np.arange(12, dtype=np.float32).reshape(3, 4)
+    available = [
+        (_rng((0, 0), (0, 4)), "empty"),          # zero-size
+        (_rng((0, 0), (3, 4)), "full"),
+    ]
+    target = _rng((0, 0), (3, 4))
+    picks = plan_reads(target, available)
+    assert ("full" in [h for _, h in picks])
+    pieces = [(r, data[r.start[0]:r.stop[0], r.start[1]:r.stop[1]])
+              for r, h in picks if h == "full"]
+    np.testing.assert_array_equal(assemble(target, pieces, np.float32), data)
+
+
+# ---------------------------------------------------------------------------
+# no covering source
+# ---------------------------------------------------------------------------
+
+def test_target_with_no_covering_source_raises_lookup():
+    target = _rng((0,), (8,))
+    available = [(_rng((0,), (4,)), "half")]      # covers only [0, 4)
+    picks = plan_reads(target, available)
+    pieces = [(r, np.zeros(r.shape, np.float32)) for r, _ in picks]
+    with pytest.raises(LookupError, match="uncovered"):
+        assemble(target, pieces, np.float32)
+
+
+def test_fully_disjoint_source_raises_lookup():
+    target = _rng((0, 0), (2, 2))
+    pieces = [(_rng((4, 4), (6, 6)), np.ones((2, 2), np.float32))]
+    with pytest.raises(LookupError):
+        assemble(target, pieces, np.float32)
+
+
+def test_partial_hole_in_middle_detected():
+    """Coverage accounting is per element, not per shard count: two shards
+    covering the edges must not mask a hole in the middle."""
+    target = _rng((0,), (9,))
+    pieces = [(_rng((0,), (3,)), np.zeros(3, np.float32)),
+              (_rng((6,), (9,)), np.zeros(3, np.float32))]
+    with pytest.raises(LookupError, match="3 elements"):
+        assemble(target, pieces, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# single-element overlaps
+# ---------------------------------------------------------------------------
+
+def test_single_element_overlap_assembles_exact():
+    base = np.arange(25, dtype=np.int64).reshape(5, 5)
+    # four quadrants overlapping on single rows/cols + one 1×1 center shard
+    available = [
+        (_rng((0, 0), (3, 3)), base[0:3, 0:3]),
+        (_rng((2, 2), (5, 5)), base[2:5, 2:5]),
+        (_rng((0, 2), (3, 5)), base[0:3, 2:5]),
+        (_rng((2, 0), (5, 3)), base[2:5, 0:3]),
+        (_rng((2, 2), (3, 3)), base[2:3, 2:3]),   # single element
+    ]
+    target = _rng((0, 0), (5, 5))
+    picks = plan_reads(target, [(r, a) for r, a in available])
+    got = assemble(target, [(r, a) for r, a in picks], np.int64)
+    np.testing.assert_array_equal(got, base)
+
+
+def test_single_element_target():
+    base = np.arange(16, dtype=np.float64).reshape(4, 4)
+    target = _rng((2, 3), (3, 4))
+    picks = plan_reads(target, [(_rng((0, 0), (4, 4)), base)])
+    got = assemble(target, [(r, a) for r, a in picks], np.float64)
+    assert got.shape == (1, 1)
+    assert got[0, 0] == base[2, 3]
+
+
+def test_scalar_target_roundtrip():
+    target = _rng((), ())
+    val = np.asarray(7, np.int32)
+    got = assemble(target, [(_rng((), ()), val)], np.int32)
+    assert got.shape == ()
+    assert int(got) == 7
+
+
+# ---------------------------------------------------------------------------
+# dtype preservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float16, np.float32, np.int8,
+                                   np.uint8, np.int64, np.bool_])
+def test_dtype_preserved_through_assemble(dtype):
+    base = (np.arange(12) % 2).astype(dtype).reshape(3, 4)
+    pieces = [(_rng((0, 0), (3, 2)), base[:, 0:2]),
+              (_rng((0, 2), (3, 4)), base[:, 2:4])]
+    got = assemble(_rng((0, 0), (3, 4)), pieces, dtype)
+    assert got.dtype == np.dtype(dtype)
+    np.testing.assert_array_equal(got, base)
+
+
+def test_assemble_casts_to_requested_dtype():
+    """The restore path resolves the TARGET dtype on the main thread;
+    assemble must honour it even when pieces arrive in another dtype."""
+    pieces = [(_rng((0,), (4,)), np.arange(4, dtype=np.float64))]
+    got = assemble(_rng((0,), (4,)), pieces, np.float32)
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, np.arange(4, dtype=np.float32))
+
+
+def test_normalize_index_open_slices():
+    rng = normalize_index((slice(None), slice(2, None)), (4, 8))
+    assert rng == _rng((0, 2), (4, 8))
+    assert rng.shape == (4, 6)

@@ -33,6 +33,30 @@ def test_inspector_reports_healthy_checkpoint(tmp_path):
     assert rep["latest"] == 3 and rep["steps"] == [3]
 
 
+def test_inspector_shows_in_flight_round_with_age_and_step(tmp_path):
+    """An overlapped save keeps a pending-stage dir alive; the inspector
+    must show its owning step and age instead of calling it crash litter
+    (and a marker-less staging dir is still flagged)."""
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2)
+    mgr.save(_state(), 1)
+    stage = atomic.staging_dir(mgr.store.root, 2)
+    stage.mkdir(parents=True)
+    atomic.mark_pending(stage, {"step": 2, "t": __import__("time").time()})
+    lines = []
+    rep = inspect(mgr.store.root, out=lambda *a: lines.append(" ".join(
+        str(x) for x in a)))
+    assert rep["pending_rounds"][0]["step"] == 2
+    assert rep["pending_rounds"][0]["age_s"] is not None
+    assert rep["pending_rounds"][0]["age_s"] < 60
+    assert any("in-flight round: step 2" in ln for ln in lines)
+    # a bare staging dir (no marker) is reported as possible litter
+    bare = mgr.store.root / "step_00000003.tmp-deadbeef"
+    bare.mkdir()
+    rep2 = inspect(mgr.store.root, out=lambda *a: None)
+    kinds = {(r["step"], r["age_s"] is None) for r in rep2["pending_rounds"]}
+    assert (2, False) in kinds and (None, True) in kinds
+
+
 def test_inspector_detects_corruption_and_replica_recovery(tmp_path):
     mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2,
                             replicas=2)

@@ -1,0 +1,107 @@
+"""PreemptionGuard signal discipline: deferral, re-delivery to the
+restored handler, full signal history, callbacks, and the manager
+fast-flush hook."""
+import os
+import signal
+import threading
+
+import pytest
+
+from repro.core.preempt import PreemptionGuard, PreemptQueue
+
+
+def test_os_signal_deferred_and_redelivered_to_outer_handler():
+    """A real SIGUSR1 caught inside the guard must (a) set the flag and
+    (b) reach the OUTER handler once the guard exits — before this fix the
+    signal simply vanished and the process out-lived its eviction."""
+    outer: list = []
+    old = signal.signal(signal.SIGUSR1, lambda s, f: outer.append(s))
+    try:
+        with PreemptionGuard(signals=(signal.SIGUSR1,)) as guard:
+            os.kill(os.getpid(), signal.SIGUSR1)
+            assert guard.should_preempt
+            assert outer == []          # deferred, not forwarded mid-guard
+        assert outer == [signal.SIGUSR1]
+    finally:
+        signal.signal(signal.SIGUSR1, old)
+
+
+def test_every_signum_recorded_not_just_last():
+    outer: list = []
+    old = signal.signal(signal.SIGUSR1, lambda s, f: outer.append(s))
+    old2 = signal.signal(signal.SIGUSR2, lambda s, f: outer.append(s))
+    try:
+        with PreemptionGuard(signals=(signal.SIGUSR1,
+                                      signal.SIGUSR2)) as guard:
+            os.kill(os.getpid(), signal.SIGUSR1)
+            os.kill(os.getpid(), signal.SIGUSR2)
+            os.kill(os.getpid(), signal.SIGUSR1)
+            assert guard.signums == [signal.SIGUSR1, signal.SIGUSR2,
+                                     signal.SIGUSR1]
+            assert guard.signum == signal.SIGUSR1    # most recent
+        # each distinct signal re-delivered exactly once
+        assert sorted(outer) == sorted([signal.SIGUSR1, signal.SIGUSR2])
+    finally:
+        signal.signal(signal.SIGUSR1, old)
+        signal.signal(signal.SIGUSR2, old2)
+
+
+def test_programmatic_request_does_not_redeliver():
+    """request() has no OS signal behind it — __exit__ must not manufacture
+    one (a re-raised SIGUSR1 under the default handler would KILL the
+    process)."""
+    outer: list = []
+    old = signal.signal(signal.SIGUSR1, lambda s, f: outer.append(s))
+    try:
+        with PreemptionGuard(signals=(signal.SIGUSR1,)) as guard:
+            guard.request()
+            assert guard.should_preempt
+            assert guard.signums == [signal.SIGUSR1]
+        assert outer == []
+    finally:
+        signal.signal(signal.SIGUSR1, old)
+
+
+def test_callbacks_run_on_signal_and_failures_are_contained():
+    fired = threading.Event()
+    guard = PreemptionGuard(signals=(signal.SIGUSR1,))
+
+    def bad():
+        raise RuntimeError("broken hook")
+
+    guard.add_callback(bad)
+    guard.add_callback(fired.set)
+    guard.add_callback(fired.set)        # duplicate: must not stack
+    assert len(guard._callbacks) == 2
+    guard.request()                      # must not raise despite bad()
+    assert fired.is_set() and guard.should_preempt
+
+
+def test_preempt_queue_triggers_guard():
+    guard = PreemptionGuard()
+    q = PreemptQueue()
+    q.submit_high_priority(guard, "high-pri-job")
+    assert guard.should_preempt
+    assert q.events[0][0] == "preempt"
+
+
+def test_exit_restores_previous_handlers():
+    old = signal.getsignal(signal.SIGUSR1)
+    with PreemptionGuard(signals=(signal.SIGUSR1,)):
+        assert signal.getsignal(signal.SIGUSR1) != old
+    assert signal.getsignal(signal.SIGUSR1) == old
+
+
+def test_manager_fast_flush_callback(tmp_path):
+    """The trainer wires guard → manager.request_fast_flush; a signal must
+    flip the persist stage's fast-flush flag."""
+    from repro.core.checkpoint import CheckpointManager
+    from repro.core.storage import Tier, TieredStore
+    mgr = CheckpointManager(TieredStore(Tier("fast", tmp_path / "f")),
+                            codec="raw", n_writers=1, keepalive_s=60.0)
+    guard = PreemptionGuard()
+    guard.add_callback(mgr.request_fast_flush)
+    assert not mgr._persist.fast_flush_requested
+    guard.request()
+    assert mgr._persist.fast_flush_requested
+    mgr.close()

@@ -1,0 +1,278 @@
+"""Unit tests for the staged pipeline engines (`core.save_path` /
+`core.restore_path`): the rank-wide SaveSession submission queue
+(cross-payload pipelining), the direct-placement fixed-chunking restore,
+the persist stage, and the plan builders."""
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import cas
+from repro.core.atomic import CrashInjector, CrashPoint
+from repro.core.save_path import (PayloadTicket, PersistStage, SavePlan,
+                                  SaveSession)
+from repro.core.storage import Tier, TieredStore
+
+
+def _chunks(tmp_path, io_threads=4, chunk_size=128, replicas=1):
+    store = TieredStore(Tier("fast", tmp_path / f"cs{io_threads}"))
+    return cas.ChunkStore(store, chunk_size=chunk_size, replicas=replicas,
+                          io_threads=io_threads)
+
+
+# ---------------------------------------------------------------------------
+# SaveSession: rank-wide cross-payload submission queue
+# ---------------------------------------------------------------------------
+
+def test_session_matches_put_payload_reference(tmp_path, rng):
+    """Digests, byte accounting and crc of the streaming session must be
+    identical to the one-payload-at-a-time reference engine."""
+    payloads = [rng.bytes(500), rng.bytes(128), b"", rng.bytes(1000)]
+    ref = _chunks(tmp_path / "ref", io_threads=1)
+    want = []
+    for p in payloads:
+        digests, new = ref.put_payload(p)
+        want.append((digests, new, zlib.crc32(p) & 0xFFFFFFFF))
+
+    cs = _chunks(tmp_path / "ses", io_threads=4)
+    session = SaveSession(cs)
+    tickets = [session.submit_payload(p) for p in payloads]  # NO flush between
+    session.barrier()
+    got = [session.result(t) for t in tickets]
+    assert got == want
+    for p, (digests, _, _) in zip(payloads, got):
+        assert bytes(cs.read_payload(digests, len(p))) == p
+    cs.close()
+    ref.close()
+
+
+def test_session_pipelines_across_payload_boundaries(tmp_path, rng):
+    """The drain-bubble regression probe: after submitting payload A the
+    session must accept payload B's chunks without waiting for A to
+    finish (a per-shard drain would force ticket A complete first)."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=64)
+    gate = threading.Event()
+    orig = cs.store_chunk
+    stalled = []
+
+    def slow_store(digest, data, crash=None, dirs=None, dirs_lock=None):
+        if not stalled:
+            stalled.append(digest)
+            gate.wait(timeout=10)        # first chunk parks a pool worker
+        return orig(digest, data, crash or cas.NO_CRASH, dirs, dirs_lock)
+
+    cs.store_chunk = slow_store
+    session = SaveSession(cs, window=8)
+    a = session.submit_payload(rng.bytes(64 * 2))    # 2 chunks, first stalls
+    b = session.submit_payload(rng.bytes(64 * 2))    # must submit immediately
+    assert not a.done and not b.done                 # neither forced a drain
+    gate.set()
+    session.barrier()
+    da, _, _ = session.result(a)
+    db, _, _ = session.result(b)
+    assert len(da) == 2 and len(db) == 2
+    cs.close()
+
+
+def test_session_serial_engine_is_put_payload(tmp_path, rng):
+    """io_threads=1 must stay byte-for-byte the PR-1 engine: the session
+    degrades to inline put_payload calls, tickets resolve immediately."""
+    cs = _chunks(tmp_path, io_threads=1)
+    session = SaveSession(cs)
+    payload = rng.bytes(300)
+    ticket = session.submit_payload(payload)
+    assert ticket.done                              # resolved inline
+    digests, new, crc = session.result(ticket)
+    assert crc == (zlib.crc32(payload) & 0xFFFFFFFF)
+    assert bytes(cs.read_payload(digests, len(payload))) == payload
+    cs.close()
+
+
+def test_session_error_joins_all_in_flight(tmp_path, rng):
+    """A CrashPoint mid-batch must cancel the queue and join every
+    in-flight chunk before re-raising — no stray worker may still be
+    writing while the caller's abort path runs."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=64)
+    session = SaveSession(cs, crash=CrashInjector("cas_mid_batch"))
+    with pytest.raises(CrashPoint):
+        session.submit_payload(rng.bytes(64 * 40))
+        session.barrier()
+    assert not session._pending                     # queue fully drained
+    cs.close()
+
+
+def test_session_caller_abort_joins_in_flight(tmp_path, rng):
+    """A caller whose error occurs BETWEEN session calls must be able to
+    abort(): it blocks until every in-flight chunk worker has finished —
+    no stray worker may write objects after abort() returns."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=64)
+    gate = threading.Event()
+    started = threading.Event()
+    orig = cs.store_chunk
+
+    def slow(digest, data, crash=None, dirs=None, dirs_lock=None):
+        started.set()
+        gate.wait(timeout=10)
+        return orig(digest, data, crash or cas.NO_CRASH, dirs, dirs_lock)
+
+    cs.store_chunk = slow
+    session = SaveSession(cs, window=8)
+    session.submit_payload(rng.bytes(64 * 4))
+    assert started.wait(5)
+    done = []
+    t = threading.Thread(
+        target=lambda: (session.abort(), done.append(1)), daemon=True)
+    t.start()
+    t.join(0.3)
+    assert not done                 # abort still joining the stalled worker
+    gate.set()
+    t.join(10)
+    assert done and not session._pending
+    cs.close()
+
+
+def test_session_dedup_accounting(tmp_path, rng):
+    """Identical payloads across the session dedup: second submission
+    writes zero new bytes but reports the same digests."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=64)
+    payload = rng.bytes(64 * 3)
+    session = SaveSession(cs)
+    t1 = session.submit_payload(payload)
+    t2 = session.submit_payload(payload)
+    session.barrier()
+    d1, n1, c1 = session.result(t1)
+    d2, n2, c2 = session.result(t2)
+    assert d1 == d2 and c1 == c2
+    assert n1 == 64 * 3 and n2 == 0
+    cs.close()
+
+
+def test_session_batched_dirs_fsynced_once(tmp_path, rng):
+    """The session records fan-out dirs for ONE rank-level fsync barrier;
+    barrier() clears them."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=64)
+    session = SaveSession(cs)
+    session.submit_payload(rng.bytes(64 * 8))
+    session.flush()
+    assert session.dirs                             # recorded, not yet synced
+    session.barrier()
+    assert not session.dirs
+    cs.close()
+
+
+# ---------------------------------------------------------------------------
+# SavePlan
+# ---------------------------------------------------------------------------
+
+def _items(n):
+    from repro.core.elastic import ShardRange
+    return [(f"params/w{i}", ShardRange((0,), (4,)),
+             np.arange(4, dtype=np.float32)) for i in range(n)]
+
+
+def test_save_plan_round_robin_and_replicas():
+    plan = SavePlan.build(_items(4), alive=[0, 1], incremental=False,
+                          replicas=2, leaf_codec=lambda n: "raw")
+    # each rank gets 2 primaries + 2 buddy replicas
+    for r in (0, 1):
+        work = plan.per_rank[r]
+        assert sum(1 for w in work if not w[5]) == 2
+        assert sum(1 for w in work if w[5]) == 2
+    recs = [s for recs in plan.manifest_shards.values() for s in recs]
+    assert all(len(s["replicas"]) == 2 for s in recs)
+
+
+def test_save_plan_incremental_skips_file_records():
+    plan = SavePlan.build(_items(3), alive=[0], incremental=True,
+                          replicas=2, leaf_codec=lambda n: "raw")
+    assert plan.manifest_shards == {}
+    assert plan.shard_order == {f"params/w{i}": [i] for i in range(3)}
+
+
+# ---------------------------------------------------------------------------
+# direct-placement restore (fixed chunking)
+# ---------------------------------------------------------------------------
+
+def test_read_payload_fixed_matches_join_path(tmp_path, rng):
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=128)
+    for size in (0, 1, 127, 128, 129, 128 * 7 + 3):
+        payload = rng.bytes(size)
+        digests, _ = cs.put_payload(payload)
+        crc = zlib.crc32(payload) & 0xFFFFFFFF
+        direct = cs.read_payload_fixed(digests, size, 128, crc)
+        assert bytes(direct) == payload
+    cs.close()
+
+
+def test_read_payload_fixed_heals_corrupt_primary(tmp_path, rng):
+    """A corrupted fast-tier object must fail the crc gate and recover
+    through the fully-verified path (buddy replica)."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=128, replicas=2)
+    payload = rng.bytes(128 * 4)
+    digests, _ = cs.put_payload(payload)
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    victim = tmp_path / "cs4" / cas.object_rel(digests[1])
+    data = bytearray(victim.read_bytes())
+    data[0] ^= 0xFF
+    victim.write_bytes(bytes(data))                 # same length, bad bytes
+    got = cs.read_payload_fixed(digests, len(payload), 128, crc)
+    assert bytes(got) == payload
+    cs.close()
+
+
+def test_read_payload_fixed_short_object_falls_back(tmp_path, rng):
+    """A truncated primary (length mismatch on readinto) falls back to the
+    verified per-chunk path without corrupting the buffer."""
+    cs = _chunks(tmp_path, io_threads=4, chunk_size=128, replicas=2)
+    payload = rng.bytes(128 * 3)
+    digests, _ = cs.put_payload(payload)
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    victim = tmp_path / "cs4" / cas.object_rel(digests[0])
+    victim.write_bytes(victim.read_bytes()[:50])    # truncate
+    got = cs.read_payload_fixed(digests, len(payload), 128, crc)
+    assert bytes(got) == payload
+    cs.close()
+
+
+def test_read_payload_fixed_serial_engine_uses_join_path(tmp_path, rng):
+    """The serial engine must not take the direct-placement path (it is
+    the byte-for-byte PR-1 baseline)."""
+    cs = _chunks(tmp_path, io_threads=1, chunk_size=128)
+    payload = rng.bytes(128 * 2 + 5)
+    digests, _ = cs.put_payload(payload)
+    got = cs.read_payload_fixed(digests, len(payload), 128,
+                                zlib.crc32(payload) & 0xFFFFFFFF)
+    assert isinstance(got, bytes)                   # join path returns bytes
+    assert got == payload
+    cs.close()
+
+
+# ---------------------------------------------------------------------------
+# PersistStage
+# ---------------------------------------------------------------------------
+
+def test_persist_stage_propagates_error_once():
+    stage = PersistStage()
+    handled = []
+
+    def boom():
+        raise RuntimeError("persist died")
+
+    stage.submit(boom, on_error=handled.append)
+    with pytest.raises(RuntimeError, match="persist died"):
+        stage.wait()
+    stage.wait()                                    # second wait: clean
+    assert len(handled) == 1
+
+
+def test_persist_stage_fast_flush_flag():
+    stage = PersistStage()
+    assert not stage.fast_flush_requested
+    stage.request_fast_flush()
+    assert stage.fast_flush_requested
+
+
+def test_payload_ticket_empty_payload():
+    t = PayloadTicket(0, 0)
+    assert t.done and t.digests == [] and t.crc == 0
