@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""CI gate: fail when the recorded perf trajectory regresses against the
+committed baseline floors.
+
+``BENCH_ckpt.json`` (repo root) carries, alongside the live benchmark
+sections the benches rewrite, two COMMITTED floor sections:
+
+  baseline        floors for full bench-box runs (the numbers a PR
+                  commits after running the real sweeps);
+  baseline_tiny   floors for ``--tiny`` CI smoke runs (noisy shared
+                  runners — set loose, they exist to catch the
+                  "pipelined engine became slower than serial" class of
+                  regression, not 10% drift).
+
+Every live section is compared against the floor set matching its
+``tiny`` flag; a floored metric more than ``--threshold`` (default 20%)
+below its floor fails the gate. Sections or metrics without a floor are
+skipped — floors are opt-in and maintained deliberately.
+
+Usage:
+  python scripts/check_bench_regression.py [--bench BENCH_ckpt.json]
+      [--threshold 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def check(doc: dict, threshold: float, out=print) -> list:
+    failures = []
+    checked = 0
+    for section, rec in sorted(doc.items()):
+        if section.startswith("baseline") or not isinstance(rec, dict):
+            continue
+        floors_key = "baseline_tiny" if rec.get("tiny") else "baseline"
+        floors = doc.get(floors_key, {}).get(section)
+        if not floors:
+            continue
+        for metric, floor in sorted(floors.items()):
+            cur = rec.get(metric)
+            if not isinstance(cur, (int, float)):
+                failures.append(
+                    f"{section}.{metric}: missing from the recorded run "
+                    f"(floor {floor})")
+                continue
+            checked += 1
+            limit = floor * (1.0 - threshold)
+            verdict = "ok" if cur >= limit else "REGRESSED"
+            out(f"  {verdict:9s} {section}.{metric} = {cur:.3f} "
+                f"(floor {floor} − {threshold:.0%} → {limit:.3f}, "
+                f"{floors_key})")
+            if cur < limit:
+                failures.append(
+                    f"{section}.{metric}: {cur:.3f} < {limit:.3f}")
+    if not checked:
+        failures.append("no floored metrics were checked — did the "
+                        "benchmarks run before this gate?")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", type=Path,
+                    default=Path(__file__).resolve().parents[1]
+                    / "BENCH_ckpt.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="allowed fractional drop below a floor")
+    args = ap.parse_args(argv)
+    try:
+        doc = json.loads(args.bench.read_text())
+    except (OSError, ValueError) as e:
+        print(f"cannot read {args.bench}: {e}", file=sys.stderr)
+        return 1
+    print(f"bench regression gate over {args.bench}:")
+    failures = check(doc, args.threshold)
+    for f in failures:
+        print(f"  !! {f}", file=sys.stderr)
+    print("gate:", "FAIL" if failures else "PASS")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,6 +7,7 @@ See DESIGN.md for the paper↔module map (P1–P12).
 from .atomic import CrashInjector, CrashPoint
 from .cas import ChunkStore
 from .cdc import GearChunker
+from .cdc_scan import GearScanner
 from .checkpoint import CheckpointManager
 from .chunk_exec import ChunkIOExecutor
 from .coordinator import CheckpointCoordinator
@@ -26,7 +27,8 @@ __all__ = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
     "ChunkIOExecutor", "ChunkStore", "CkptError", "CodecUnavailableError",
     "CorruptShardError", "CrashInjector", "CrashPoint",
-    "DrainCounters", "GearChunker", "MissingShardError", "NamespaceError",
+    "DrainCounters", "GearChunker", "GearScanner", "MissingShardError",
+    "NamespaceError",
     "NoCheckpointError", "PersistStage", "PreemptQueue", "PreemptionGuard",
     "ReadCache", "RegistryMismatchError", "RestorePlan", "RestoreSession",
     "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",

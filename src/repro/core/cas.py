@@ -71,6 +71,15 @@ def split_payload(payload: bytes, chunk_size: int):
             for i in range(0, len(payload), chunk_size)]
 
 
+def run_chunker(chunker, payload):
+    """Apply a chunker that may be a plain callable (payload → chunk list)
+    or a chunker object (``cdc.GearChunker`` — which the save path prefers,
+    because the object exposes the async candidate scanner)."""
+    if hasattr(chunker, "chunk"):
+        return chunker.chunk(payload)
+    return chunker(payload)
+
+
 def object_rel(digest: str, replica: int = 0) -> str:
     rel = f"{OBJECTS_DIR}/{digest[:2]}/{digest}{OBJ_SUFFIX}"
     return rel + REPLICA_SUFFIX if replica else rel
@@ -223,7 +232,8 @@ class ChunkStore:
                     crash: CrashInjector = NO_CRASH,
                     on_chunk=None, chunker=None,
                     want_crc: bool = False,
-                    dirs_out: set | None = None) -> tuple:
+                    dirs_out: set | None = None,
+                    lens_out: list | None = None) -> tuple:
         """Chunk + store an encoded shard payload.
         Returns (digest_list, new_bytes_written).
 
@@ -252,18 +262,24 @@ class ChunkStore:
         commit protocol needs (the manifest is written after every rank
         acks; un-fsynced orphans from a crash before that are swept).
 
+        ``lens_out`` (manifest v5): append each chunk's byte length, in
+        chunk order — CDC shard records store the list so restore can
+        compute every chunk's offset up front and place reads directly.
+
         The pipelined branch is ``save_path.SaveSession`` limited to one
         payload — ONE implementation of the windowed hash→write pipeline
         (crc folding, dir batching, mid-batch crash point, error-joins-all)
         serves both this call and the rank-wide streaming writer."""
         if self._exec.serial:
-            chunks = (chunker(payload) if chunker is not None
+            chunks = (run_chunker(chunker, payload) if chunker is not None
                       else split_payload(payload, self.chunk_size))
             digests, new, crc = [], 0, 0
             for chunk in chunks:
                 d = chunk_digest(chunk)
                 new += self.put(d, chunk, crash)
                 digests.append(d)
+                if lens_out is not None:
+                    lens_out.append(len(chunk))
                 if want_crc:
                     crc = zlib.crc32(chunk, crc)
                 if on_chunk is not None:
@@ -283,6 +299,8 @@ class ChunkStore:
         else:
             session.barrier(crash)
         digests, new, crc = session.result(ticket)
+        if lens_out is not None:
+            lens_out.extend(ticket.lens)
         if want_crc:
             return digests, new, crc
         return digests, new
@@ -350,11 +368,7 @@ class ChunkStore:
         analogue of the write path's zero-copy feed): every chunk's offset
         is known ahead (``i * chunk_size``), so the pipelined engine
         ``readinto``s each chunk straight into a preallocated payload
-        buffer — no per-chunk bytes objects, no join copy. The
-        whole-payload crc32 stays the integrity gate; any short/missing/
-        corrupt object drops that chunk (or the whole payload, on crc
-        mismatch) back to the fully-verified ``read_payload`` path, which
-        pinpoints damage and heals via replicas/tiers.
+        buffer — no per-chunk bytes objects, no join copy.
 
         The serial engine keeps the original join path untouched."""
         digests = list(digests)
@@ -366,14 +380,42 @@ class ChunkStore:
             # digest list and claimed length disagree — let the verified
             # path produce the precise corruption error
             return self.read_payload(digests, payload_bytes, crc32=crc32)
+        lens = [chunk_size] * len(digests)
+        if digests:
+            lens[-1] = payload_bytes - (len(digests) - 1) * chunk_size
+        return self.read_payload_direct(digests, payload_bytes, crc32, lens)
+
+    def read_payload_direct(self, digests, payload_bytes: int, crc32: int,
+                            lens) -> bytes | bytearray:
+        """Direct-placement reassembly from an explicit chunk LENGTH list
+        (manifest v5): offsets are the prefix sums, so the ``readinto``
+        fast path extends to every chunking scheme — content-defined
+        chunks land at their exact offsets in a preallocated payload
+        buffer with no assemble/join copy. The whole-payload crc32 stays
+        the integrity gate; any short/missing/corrupt object drops that
+        chunk (or the whole payload, on crc mismatch) back to the
+        fully-verified ``read_payload`` path, which pinpoints damage and
+        heals via replicas/tiers.
+
+        The serial engine keeps the original join path untouched."""
+        digests = list(digests)
+        lens = [int(n) for n in lens]
+        if self._exec.serial or payload_bytes is None or crc32 is None:
+            return self.read_payload(digests, payload_bytes, crc32=crc32)
+        if len(lens) != len(digests) or any(n <= 0 for n in lens) \
+                or sum(lens) != payload_bytes:
+            # length list and digest list disagree — let the verified
+            # path produce the precise corruption error
+            return self.read_payload(digests, payload_bytes, crc32=crc32)
+        offsets = [0]
+        for n in lens:
+            offsets.append(offsets[-1] + n)
         buf = bytearray(payload_bytes)
         mv = memoryview(buf)
         fast = self.store.fast
 
         def _fill(i: int):
-            lo = i * chunk_size
-            hi = min(lo + chunk_size, payload_bytes)
-            dest = mv[lo:hi]
+            dest = mv[offsets[i]:offsets[i + 1]]
             try:
                 if fast.read_into(object_rel(digests[i]), dest):
                     return
@@ -382,7 +424,7 @@ class ChunkStore:
             data = self.get(digests[i], verify=True)
             if len(data) != len(dest):
                 raise CorruptShardError(
-                    "fixed-chunking object length mismatch",
+                    "chunk object length does not match the manifest",
                     digest=digests[i], expected=len(dest), got=len(data))
             dest[:] = data
 

@@ -20,7 +20,9 @@ byte-at-a-time loop with a vectorizable rolling hash:
     where ``H & mask == 0``; each byte entering/leaving the window
     reshuffles all 32 bits, and sums of 64 table values are uniform, so
     cut spacing is geometric exactly as with the classic shift-gear hash —
-    but the scan is numpy-vectorized instead of a Python loop;
+    but the scan is vectorized instead of a Python loop, with selectable
+    backends (``core.cdc_scan``): the numpy oracle, an XLA ``lax.scan``
+    pipeline, or a Pallas accelerator kernel — all byte-identical;
   * **Normalized chunking with min/avg/max bounds** — FastCDC's two-mask
     scheme: below the average target a *stricter* mask (avg·2^NORM_BITS
     expected spacing) applies, past it a *looser* one, and ``max_size``
@@ -39,30 +41,17 @@ Invariants (property-tested in ``tests/test_cdc.py``):
 """
 from __future__ import annotations
 
-import hashlib
-
 import numpy as np
 
-WINDOW = 64          # rolling-hash window (bytes); boundaries depend on
-                     # exactly this much trailing context
+from . import cdc_scan
+from .cdc_scan import GEAR, WINDOW, GearScanner  # noqa: F401 — re-exports:
+# the gear table and window are part of the on-disk dedup contract and
+# tests pin them through this module
+
 NORM_BITS = 2        # FastCDC normalization level (mask skew around avg)
 MIN_DIV = 4          # default min_size = avg_size // MIN_DIV
 MAX_MUL = 4          # default max_size = avg_size * MAX_MUL
 MIN_AVG_SIZE = 4 * WINDOW   # below this min_size would undercut the window
-
-
-def _gear_table() -> np.ndarray:
-    # uint32, not uint64: the scan is memory-bandwidth bound and no mask
-    # ever needs more than 32 bits (avg_size is capped at 2^28)
-    out = np.empty(256, np.uint32)
-    for b in range(256):
-        h = hashlib.blake2b(bytes([b]), digest_size=4,
-                            person=b"repro-cdc-v1").digest()
-        out[b] = int.from_bytes(h, "little")
-    return out
-
-
-GEAR = _gear_table()
 
 
 class GearChunker:
@@ -73,7 +62,7 @@ class GearChunker:
     """
 
     def __init__(self, avg_size: int, *, min_size: int | None = None,
-                 max_size: int | None = None):
+                 max_size: int | None = None, scan_backend: str = "numpy"):
         if avg_size < MIN_AVG_SIZE:
             raise ValueError(
                 f"avg_size must be >= {MIN_AVG_SIZE} (rolling-hash window "
@@ -93,31 +82,32 @@ class GearChunker:
         # strict-candidate set is a subset of the loose one
         self.mask_strict = np.uint32((1 << (bits + NORM_BITS)) - 1)
         self.mask_loose = np.uint32((1 << max(bits - NORM_BITS, 1)) - 1)
+        # candidate scan engine: "numpy" (the oracle), "jnp" / "pallas"
+        # (accelerated, byte-identical — core.cdc_scan), or "auto"
+        self.scan_backend = scan_backend
+        self.scanner = GearScanner(int(self.mask_strict),
+                                   int(self.mask_loose),
+                                   backend=scan_backend)
 
     # ------------------------------------------------------------------
-    def _candidates(self, payload: bytes):
+    def _candidates(self, payload):
         """All candidate cut *end offsets* (strict set, loose set)."""
-        n = len(payload)
-        if n <= WINDOW:
-            e = np.empty(0, np.int64)
-            return e, e
-        v = GEAR[np.frombuffer(payload, np.uint8)]
-        c = np.cumsum(v, dtype=np.uint32)          # wraps mod 2^32 — intended
-        # window sum ending at byte i (inclusive), for i in [WINDOW-1, n-1]
-        s = c[WINDOW - 1:].copy()
-        s[1:] -= c[:n - WINDOW]
-        loose = np.nonzero((s & self.mask_loose) == 0)[0] + WINDOW
-        strict = loose[(s[loose - WINDOW] & self.mask_strict) == 0]
-        return strict.astype(np.int64), loose.astype(np.int64)
+        return self.scanner.scan(payload)
 
-    def cut_points(self, payload: bytes) -> list:
-        """End offsets of every chunk (last one == len(payload))."""
+    def cut_points(self, payload, candidates=None) -> list:
+        """End offsets of every chunk (last one == len(payload)).
+
+        ``candidates`` short-circuits the scan with a precomputed
+        (strict, loose) pair — the save path scans payloads asynchronously
+        (``scanner.scan_async``) so the scan of payload k+1 overlaps the
+        chunk hash/write of payload k, then feeds the result back here."""
         n = len(payload)
         if n == 0:
             return []
         if n <= self.min_size:
             return [n]
-        strict, loose = self._candidates(payload)
+        strict, loose = (candidates if candidates is not None
+                         else self._candidates(payload))
         cuts = []
         pos = 0
         while n - pos > self.min_size:
@@ -141,12 +131,18 @@ class GearChunker:
             cuts.append(n)
         return cuts
 
-    def chunk(self, payload: bytes) -> list:
-        """Split ``payload`` into content-defined chunks (list of bytes)."""
-        cuts = self.cut_points(payload)
+    def chunk(self, payload, candidates=None) -> list:
+        """Split ``payload`` into content-defined chunks.
+
+        Returns zero-copy ``memoryview`` slices — the chunker never
+        duplicates the payload; hashing, crc folding and object writes all
+        accept buffer views (``payload`` may be bytes, a memoryview, or a
+        contiguous uint8 ndarray)."""
+        cuts = self.cut_points(payload, candidates=candidates)
+        mv = memoryview(payload)
         out = []
         pos = 0
         for e in cuts:
-            out.append(payload[pos:e])
+            out.append(mv[pos:e])
             pos = e
         return out

@@ -1,0 +1,462 @@
+"""Batched gear-scan engine — the accelerated candidate scan under CDC.
+
+Content-defined chunking is only "free" at save time when the rolling-hash
+scan runs near memory bandwidth. The PR-2 scan is a vectorized numpy
+pipeline (gather → cumsum → windowed diff → mask → nonzero); every stage
+materializes a full-payload temporary, so on a bandwidth-starved host it
+tops out well below the hash/write pipeline it feeds (~50 MB/s on the
+reference box — the ROADMAP's CDC-throughput item). This module keeps that
+numpy implementation as the *correctness oracle* and adds two accelerated
+backends that compute byte-identical candidates:
+
+  numpy    the PR-2 scan, unchanged — the oracle every other backend is
+           property-tested against (cut points are the dedup keyspace:
+           a backend that drifts by one byte re-writes history);
+
+  jnp      an XLA pipeline built for exactness AND cache locality: the
+           payload is cut into ~4 MiB segments (64-byte halo carries the
+           rolling-window context across the cut, so segmentation is
+           exact); each segment is laid out as columns of ``BLOCK`` bytes
+           and scanned with ONE ``lax.scan`` whose per-step state is a
+           single row of window sums — w[i] = w[i-1] + gear[enter] -
+           gear[leave] — all fused by XLA into a sliding pass whose
+           working set lives in cache. The device emits a per-position
+           candidate byte (0 / loose / strict) plus a per-64-block hit
+           bitmap, and the host only inspects blocks the bitmap flags
+           (candidates are geometrically rare, so extraction is ~free).
+           Measured on the 2-core reference box: 5-7× the numpy oracle at
+           shard-sized payloads — and the same dispatch is async, so a
+           SaveSession overlaps the scan of payload k+1 with the chunk
+           hash/write of payload k;
+
+  pallas   the same blocked scan as an explicit accelerator kernel (one
+           grid program per block, halo block passed alongside) for
+           GPU/TPU hosts, where the gather+cumsum runs at HBM bandwidth.
+           On hosts without an accelerator it falls back to ``jnp`` (a
+           one-time warning); correctness is pinned by interpret-mode
+           parity tests.
+
+Backend choice is a knob (``GearChunker(scan_backend=...)``), with
+``auto`` picking pallas on accelerator hosts, jnp for payloads large
+enough to amortize a dispatch, and numpy below that.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+
+import numpy as np
+
+from .errors import warn
+
+WINDOW = 64          # rolling-hash window (bytes); boundaries depend on
+                     # exactly this much trailing context
+BLOCK = 1024         # jnp scan column height (positions per lax.scan step
+                     # stride); chosen on the reference box sweep
+SEGMENT_BYTES = 4 << 20      # per-dispatch span: large enough to amortize
+                             # dispatch, small enough to stay cache-warm
+MIN_ACCEL_BYTES = 2 << 20    # auto: below this the numpy oracle wins
+                             # (dispatch + padding overhead)
+_MIN_COLS = 64               # smallest tail bucket: 64 columns = 64 KiB
+BACKENDS = ("auto", "numpy", "jnp", "pallas")
+
+
+def _gear_table() -> np.ndarray:
+    # uint32, not uint64: the scan is memory-bandwidth bound and no mask
+    # ever needs more than 32 bits (avg_size is capped at 2^28)
+    out = np.empty(256, np.uint32)
+    for b in range(256):
+        h = hashlib.blake2b(bytes([b]), digest_size=4,
+                            person=b"repro-cdc-v1").digest()
+        out[b] = int.from_bytes(h, "little")
+    return out
+
+
+GEAR = _gear_table()
+
+_EMPTY = np.empty(0, np.int64)
+
+
+def as_u8(payload) -> np.ndarray:
+    """Zero-copy uint8 view of any buffer the save path feeds the chunker
+    (bytes, memoryview, contiguous ndarray)."""
+    if isinstance(payload, np.ndarray):
+        return payload.reshape(-1).view(np.uint8)
+    return np.frombuffer(payload, np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# numpy backend — the correctness oracle
+# ---------------------------------------------------------------------------
+
+def scan_candidates_numpy(data: np.ndarray, mask_strict: int,
+                          mask_loose: int):
+    """All candidate cut *end offsets* (strict set, loose set) — the PR-2
+    scan, byte for byte. Every accelerated backend is tested against this.
+    """
+    n = len(data)
+    if n <= WINDOW:
+        return _EMPTY, _EMPTY
+    v = GEAR[data]
+    c = np.cumsum(v, dtype=np.uint32)          # wraps mod 2^32 — intended
+    # window sum ending at byte i (inclusive), for i in [WINDOW-1, n-1]
+    s = c[WINDOW - 1:].copy()
+    s[1:] -= c[:n - WINDOW]
+    loose = np.nonzero((s & np.uint32(mask_loose)) == 0)[0] + WINDOW
+    strict = loose[(s[loose - WINDOW] & np.uint32(mask_strict)) == 0]
+    return strict.astype(np.int64), loose.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# jnp backend — segmented sliding-window lax.scan
+# ---------------------------------------------------------------------------
+
+def _jnp_scan_fn():
+    """Build (once) the jitted segment scan. Static args: the two masks —
+    jax caches one executable per (padded length, mask pair)."""
+    import jax
+    import jax.numpy as jnp
+
+    def scan_impl(padded, mask_strict, mask_loose):
+        # padded: uint8 [WINDOW + nb*BLOCK] — WINDOW halo bytes (previous
+        # segment's tail, zeros for the payload head), then the segment,
+        # zero-padded up to a column bucket.
+        nb = (padded.shape[0] - WINDOW) // BLOCK
+        gear = jnp.asarray(GEAR)
+        # column layout: column b holds payload positions [b*BLOCK,
+        # (b+1)*BLOCK); the scan step advances every column's sliding
+        # window by one byte, so the whole per-step state is one row
+        main = padded[WINDOW:].reshape(nb, BLOCK).T     # entering bytes
+        lead = padded[:-WINDOW].reshape(nb, BLOCK).T    # leaving bytes
+        halo = padded[:-WINDOW].reshape(nb, BLOCK)[:, :WINDOW].T
+        w0 = jnp.sum(gear[halo], axis=0, dtype=jnp.uint32)
+
+        ms = jnp.uint32(mask_strict)
+        ml = jnp.uint32(mask_loose)
+
+        def body(w, rows):
+            enter, leave = rows
+            w = w + gear[enter] - gear[leave]
+            # loose mask bits ⊂ strict mask bits, so one AND serves both
+            h = w & ms
+            m = ((h & ml) == 0).astype(jnp.uint8) \
+                + (h == 0).astype(jnp.uint8)
+            return w, m
+
+        _, out = jax.lax.scan(body, w0, (main, lead))   # [BLOCK, nb]
+        # per-64-block hit bitmap: the host only reads blocks that hit
+        flags = out.reshape(BLOCK // WINDOW, WINDOW, nb).max(axis=1)
+        return out, flags
+
+    return jax.jit(scan_impl, static_argnums=(1, 2))
+
+
+def _staging(n: int) -> np.ndarray:
+    """FRESH staging buffer per dispatch — deliberately never reused.
+    ``jnp.asarray`` on CPU may zero-copy ALIAS an aligned numpy buffer
+    instead of copying it (measured both behaviours on this box), so a
+    reused scratch would be overwritten under an in-flight async scan.
+    A fresh buffer is safe under either behaviour: jax holds a reference
+    and nothing mutates it after dispatch — and when jax does alias it,
+    the device import costs nothing."""
+    return np.empty(n, np.uint8)
+
+
+class _JnpBackend:
+    """Per-process jnp scan state (lazily built; thread-safe — jax.jit
+    executables are shareable across threads)."""
+
+    _lock = threading.Lock()
+    _fn = None
+
+    @classmethod
+    def fn(cls):
+        with cls._lock:
+            if cls._fn is None:
+                cls._fn = _jnp_scan_fn()
+            return cls._fn
+
+    @staticmethod
+    def dispatch(data: np.ndarray, start: int, seg_len: int,
+                 mask_strict: int, mask_loose: int):
+        """Launch one segment scan (async — jax returns before the device
+        finishes). Returns the device result pair.
+
+        Staging never zeroes: garbage in the halo head and the bucket
+        tail is EXACT to leave there. Halo garbage cancels out of the
+        sliding-window algebra after WINDOW steps (every halo byte
+        entering w0 is subtracted as a leaving byte before the first
+        valid position), and tail positions beyond ``seg_len`` are
+        discarded by extraction — so the scan pays one warm memcpy and
+        zero page-zeroing."""
+        import jax.numpy as jnp
+        cols = -(-seg_len // BLOCK)
+        # bucket tail shapes to powers of two so recompilation is bounded
+        # (full segments all share one shape)
+        bucket = _MIN_COLS
+        while bucket < cols:
+            bucket *= 2
+        padded = _staging(WINDOW + bucket * BLOCK)
+        halo = min(start, WINDOW)
+        if halo:
+            padded[WINDOW - halo:WINDOW] = data[start - halo:start]
+        padded[WINDOW:WINDOW + seg_len] = data[start:start + seg_len]
+        return _JnpBackend.fn()(jnp.asarray(padded), int(mask_strict),
+                                int(mask_loose))
+
+    @staticmethod
+    def extract(result, start: int, seg_len: int, total_len: int):
+        """Device result → global candidate positions of one segment.
+        Only flagged 64-blocks are inspected; positions below the first
+        full window (global < WINDOW-1) and in the zero-pad tail are
+        discarded — they match the oracle's validity range."""
+        out, flags = result
+        flags_np = np.asarray(flags)                   # [BLOCK/W, cols]
+        bs, qs = np.nonzero(flags_np.T)                # sorted by position
+        if not len(bs):
+            return _EMPTY, _EMPTY
+        out_np = np.asarray(out)                       # [BLOCK, cols]
+        blocks = out_np.reshape(BLOCK // WINDOW, WINDOW, -1)
+        m = blocks[qs, :, bs]                          # [hits, WINDOW]
+        base = (bs.astype(np.int64) * BLOCK + qs * WINDOW)[:, None]
+        pos = base + np.arange(WINDOW, dtype=np.int64)
+        sel = m > 0
+        p, mv = pos[sel], m[sel]                       # row-major: sorted
+        gp = p + start
+        ok = (p < seg_len) & (gp >= WINDOW - 1) & (gp < total_len)
+        gp, mv = gp[ok], mv[ok]
+        return (gp[mv == 2] + 1), (gp + 1)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend — explicit accelerator kernel (GPU/TPU), jnp fallback
+# ---------------------------------------------------------------------------
+
+PALLAS_BLOCK = 64 << 10      # bytes per grid program
+
+
+def _pallas_scan_fn(interpret: bool = False):
+    """Blocked gear scan as a Pallas kernel: one grid program per
+    ``PALLAS_BLOCK`` span, with the *previous* block passed as a second
+    input so each program sees its 64-byte halo (program 0 reads itself;
+    its halo region falls below the first full window and is discarded by
+    extraction). Emits the same 0/loose/strict mask byte per position as
+    the jnp backend."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(gear_ref, halo_ref, main_ref, out_ref, *, mask_strict,
+               mask_loose):
+        buf = jnp.concatenate([halo_ref[-WINDOW:], main_ref[...]])
+        g = jnp.take(gear_ref[...], buf.astype(jnp.int32))
+        c = jnp.cumsum(g, dtype=jnp.uint32)            # wraps mod 2^32
+        w = c[WINDOW:] - c[:-WINDOW]
+        h = w & jnp.uint32(mask_strict)
+        out_ref[...] = ((h & jnp.uint32(mask_loose)) == 0) \
+            .astype(jnp.uint8) + (h == 0).astype(jnp.uint8)
+
+    def scan(padded, mask_strict, mask_loose):
+        import functools
+        n = padded.shape[0]
+        grid = (n // PALLAS_BLOCK,)
+        return pl.pallas_call(
+            functools.partial(kernel, mask_strict=mask_strict,
+                              mask_loose=mask_loose),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((256,), lambda i: (0,)),          # gear table
+                pl.BlockSpec((PALLAS_BLOCK,),
+                             lambda i: (jnp.maximum(i - 1, 0),)),  # halo
+                pl.BlockSpec((PALLAS_BLOCK,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((PALLAS_BLOCK,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+            interpret=interpret,
+        )(jnp.asarray(GEAR), padded, padded)
+
+    return jax.jit(scan, static_argnums=(1, 2))
+
+
+class _PallasBackend:
+    """Pallas dispatch; one mask-byte array per segment, extracted on the
+    host with a plain nonzero (accelerator hosts are not the ones starved
+    for host cycles)."""
+
+    def __init__(self, interpret: bool = False):
+        self._fn = _pallas_scan_fn(interpret=interpret)
+
+    def dispatch(self, data: np.ndarray, start: int, seg_len: int,
+                 mask_strict: int, mask_loose: int):
+        import jax.numpy as jnp
+        # WINDOW halo bytes ahead of the segment carry the rolling-window
+        # context across the segment cut (program 0 of the grid reads its
+        # own block as halo; those positions land in the discarded region
+        # below)
+        padded_len = -(-(seg_len + WINDOW) // PALLAS_BLOCK) * PALLAS_BLOCK
+        # warm staging, never zeroed: halo/tail garbage is filtered by
+        # extraction (and the first-window positions it could influence
+        # are below WINDOW-1)
+        padded = _staging(padded_len)
+        halo = min(start, WINDOW)
+        if halo:
+            padded[WINDOW - halo:WINDOW] = data[start - halo:start]
+        padded[WINDOW:WINDOW + seg_len] = data[start:start + seg_len]
+        return self._fn(jnp.asarray(padded), int(mask_strict),
+                        int(mask_loose))
+
+    @staticmethod
+    def extract(result, start: int, seg_len: int, total_len: int):
+        mask = np.asarray(result)
+        p = np.flatnonzero(mask) - WINDOW        # → segment-local positions
+        p = p[(p >= 0) & (p < seg_len)]
+        gp = p + start
+        ok = (gp >= WINDOW - 1) & (gp < total_len)
+        gp = gp[ok]
+        mv = mask[p + WINDOW][ok]
+        return (gp[mv == 2] + 1), (gp + 1)
+
+
+def accelerator_present() -> bool:
+    try:
+        import jax
+        return jax.default_backend() in ("gpu", "tpu", "cuda", "rocm")
+    except Exception:  # noqa — no usable jax: numpy oracle still works
+        return False
+
+
+# ---------------------------------------------------------------------------
+# the scanner
+# ---------------------------------------------------------------------------
+
+MAX_INFLIGHT_SEGMENTS = 3    # bounds live staging+result memory: a large
+                             # payload scans as a pipeline of cache-sized
+                             # segments, not one giant working set
+
+
+class ScanTicket:
+    """Handle for one (possibly in-flight) payload scan. ``result()``
+    joins the device work and returns the (strict, loose) candidate end
+    offsets — byte-identical to the numpy oracle.
+
+    Dispatch is WINDOWED: the first ``MAX_INFLIGHT_SEGMENTS`` segments
+    are launched by ``scan_async`` (so device work overlaps whatever the
+    caller does next); the rest launch from ``result()`` as earlier
+    segments extract, keeping at most a few segments of staging buffers
+    and device results alive at once."""
+
+    __slots__ = ("_pending", "_todo", "_dispatch", "_extract", "_done")
+
+    def __init__(self, pending, todo, dispatch, extract, done=None):
+        self._pending = pending         # deque of (result, start, len, n)
+        self._todo = todo               # [(start, seg_len, total)] not yet launched
+        self._dispatch = dispatch
+        self._extract = extract
+        self._done = done               # eager backends resolve immediately
+
+    def result(self):
+        if self._done is None:
+            strict, loose = [], []
+            while self._pending:
+                res, start, seg_len, total = self._pending.popleft()
+                s, l = self._extract(res, start, seg_len, total)
+                strict.append(s)
+                loose.append(l)
+                if self._todo:
+                    nstart, nlen, ntotal = self._todo.pop(0)
+                    self._pending.append(
+                        (self._dispatch(nstart, nlen), nstart, nlen, ntotal))
+            self._done = (
+                np.concatenate(strict) if strict else _EMPTY,
+                np.concatenate(loose) if loose else _EMPTY)
+            self._pending = self._todo = self._dispatch = None
+        return self._done
+
+
+_pallas_warned = False
+
+
+class GearScanner:
+    """Candidate scan for one (mask_strict, mask_loose) pair with a
+    selectable backend. ``scan`` is synchronous; ``scan_async`` dispatches
+    device work and returns a ticket, which is how the save path overlaps
+    the scan of the next payload with the chunk hash/write of the current
+    one."""
+
+    def __init__(self, mask_strict: int, mask_loose: int, *,
+                 backend: str = "auto", pallas_interpret: bool = False):
+        if backend not in BACKENDS:
+            raise ValueError(f"scan_backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        self.mask_strict = int(mask_strict)
+        self.mask_loose = int(mask_loose)
+        if self.mask_loose & ~self.mask_strict:
+            # the single-AND trick in the accelerated backends (and the
+            # strict-⊆-loose candidate algebra) both require nested masks
+            raise ValueError("mask_loose must be a bit-subset of "
+                             "mask_strict")
+        self.backend = backend
+        self._pallas_interpret = pallas_interpret
+        self._pallas = None
+
+    # -- backend resolution -------------------------------------------
+    def resolve(self, n: int) -> str:
+        """The backend a payload of ``n`` bytes actually runs on."""
+        b = self.backend
+        if b == "auto":
+            if n < MIN_ACCEL_BYTES:
+                return "numpy"     # dispatch overhead dominates below this
+            return "pallas" if accelerator_present() else "jnp"
+        if b == "pallas" and not (accelerator_present()
+                                  or self._pallas_interpret):
+            global _pallas_warned
+            if not _pallas_warned:
+                _pallas_warned = True
+                warn("CDC_W_SCAN", "pallas scan backend requested but no "
+                     "accelerator is present; falling back to the jnp "
+                     "backend", backend="jnp")
+            return "jnp"
+        return b
+
+    def _pallas_backend(self) -> _PallasBackend:
+        if self._pallas is None:
+            self._pallas = _PallasBackend(interpret=self._pallas_interpret)
+        return self._pallas
+
+    # -- scanning ------------------------------------------------------
+    def scan(self, payload):
+        return self.scan_async(payload).result()
+
+    def scan_async(self, payload) -> ScanTicket:
+        from collections import deque
+        data = as_u8(payload)
+        n = len(data)
+        if n <= WINDOW:
+            return ScanTicket(None, None, None, None,
+                              done=(_EMPTY, _EMPTY))
+        backend = self.resolve(n)
+        if backend == "numpy":
+            return ScanTicket(None, None, None, None,
+                              done=scan_candidates_numpy(
+                                  data, self.mask_strict, self.mask_loose))
+        if backend == "pallas":
+            eng = self._pallas_backend()
+            raw_dispatch, extract = eng.dispatch, eng.extract
+        else:
+            raw_dispatch, extract = _JnpBackend.dispatch, _JnpBackend.extract
+
+        def dispatch(start, seg_len):
+            return raw_dispatch(data, start, seg_len, self.mask_strict,
+                                self.mask_loose)
+
+        spans = []
+        pos = 0
+        while pos < n:
+            seg_len = min(SEGMENT_BYTES, n - pos)
+            spans.append((pos, seg_len, n))
+            pos += seg_len
+        pending = deque(
+            (dispatch(start, seg_len), start, seg_len, total)
+            for start, seg_len, total in spans[:MAX_INFLIGHT_SEGMENTS])
+        return ScanTicket(pending, spans[MAX_INFLIGHT_SEGMENTS:], dispatch,
+                          extract)

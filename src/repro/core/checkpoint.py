@@ -26,7 +26,10 @@ Save modes (``mode=``): ``full`` writes every shard inline (v2 layout);
 ``incremental`` chunks encoded payloads into the content-addressed store
 (``core.cas``) — unchanged chunks dedup to zero write cost. Chunking
 schemes (``chunking=``): ``fixed`` or ``cdc`` (FastCDC-style,
-``core.cdc``). Manifest format v4; v3/v2 stay fully readable, including
+``core.cdc``, with a selectable candidate-scan backend ``scan_backend=``
+— numpy oracle / XLA / Pallas, ``core.cdc_scan``). Manifest format v5
+(CDC shard records carry their chunk length lists, so restore places
+every scheme's reads directly); v4/v3/v2 stay fully readable, including
 mixed histories.
 
 Restore pipeline (elastic, P2/P6): manifest → RestorePlan (per-leaf jobs
@@ -47,7 +50,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from . import atomic, cas, cdc
+from . import atomic, cas, cdc, cdc_scan
 from . import codec as codec_mod
 from . import save_path
 from .atomic import NO_CRASH, CrashInjector
@@ -63,10 +66,12 @@ from .save_path import PersistStage, pack_shard, write_shards
 from .split_state import leaf_paths
 from .storage import TieredStore
 
-FORMAT_VERSION = 4
+FORMAT_VERSION = 5
 # v2 = full-mode inline shards only; v3 = chunked records, implicitly
-# fixed-size chunking (no per-record scheme field)
-READABLE_FORMATS = (2, 3, 4)
+# fixed-size chunking (no per-record scheme field); v4 = chunking scheme
+# per shard record; v5 = CDC shard records additionally carry their chunk
+# LENGTH list (restore-side direct placement for content-defined chunks)
+READABLE_FORMATS = (2, 3, 4, 5)
 MODES = ("full", "incremental")
 CHUNKINGS = ("fixed", "cdc")
 
@@ -85,21 +90,31 @@ class CheckpointManager:
                  mode: str = "full",
                  chunk_size: int = cas.DEFAULT_CHUNK_SIZE,
                  chunking: str = "fixed",
+                 scan_backend: str = "auto",
                  io_threads: int = DEFAULT_IO_THREADS):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         if chunking not in CHUNKINGS:
             raise ValueError(f"chunking must be one of {CHUNKINGS}, "
                              f"got {chunking!r}")
+        if scan_backend not in cdc_scan.BACKENDS:
+            raise ValueError(
+                f"scan_backend must be one of {cdc_scan.BACKENDS}, "
+                f"got {scan_backend!r}")
         self.store = store
         self.n_writers = n_writers
         self.mode = mode
         self.chunking = chunking
         # chunking="cdc": chunk_size becomes the content-defined AVERAGE
         # (min/avg/max = size/4, size, size*4 — FastCDC normalization);
-        # the chunker is stateless and shared by every writer rank
-        self._chunker = (cdc.GearChunker(chunk_size).chunk
-                         if chunking == "cdc" else None)
+        # the chunker is stateless and shared by every writer rank.
+        # scan_backend picks the candidate-scan engine (core.cdc_scan);
+        # the serial engine is pinned to the numpy oracle — it IS the
+        # PR-1 baseline, and accelerated scans must not leak into it
+        self._chunker = (cdc.GearChunker(
+            chunk_size,
+            scan_backend="numpy" if io_threads <= 1 else scan_backend)
+            if chunking == "cdc" else None)
         # None → best codec the environment supports (zstd needs the
         # optional `zstandard` package; raw always works)
         self.codec = codec or codec_mod.default_codec()
@@ -269,6 +284,12 @@ class CheckpointManager:
             "created": time.time(),
             "chunk_size": self.chunks.chunk_size if incremental else None,
             "chunking": self.chunking if incremental else None,
+            # CDC bound triple (min/avg/max): lets the inspector compare
+            # the realized chunk-size distribution against what was asked
+            "chunk_bounds": ([self._chunker.min_size, self._chunker.avg_size,
+                              self._chunker.max_size]
+                             if incremental and self._chunker is not None
+                             else None),
             "leaves": leaves,
             "registry": registry_json(registry),
             "extra": extra,

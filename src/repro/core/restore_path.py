@@ -255,15 +255,18 @@ class RestoreSession:
             "unreadable shard", file=srec["file"])
 
     def read_chunked_shard(self, srec: dict) -> np.ndarray:
-        """v3/v4 incremental shard: reassemble the encoded payload via the
-        prefetch pipeline (each chunk resolved fast tier → slow tier →
+        """v3/v4/v5 incremental shard: reassemble the encoded payload via
+        the prefetch pipeline (each chunk resolved fast tier → slow tier →
         buddy replica, the whole-payload crc as the end-to-end integrity
         gate), then decode.
 
-        Fixed chunking on the pipelined engine takes the direct-placement
-        path: chunk offsets are ``i × chunk_size`` by construction, so the
-        reads land straight in a preallocated payload buffer (v3 records
-        carry no scheme field — they ARE fixed, by construction)."""
+        The pipelined engine places reads directly whenever chunk offsets
+        are knowable up front — fixed chunking by construction
+        (``i × chunk_size``; v3 records carry no scheme field — they ARE
+        fixed), and any scheme whose record carries a chunk LENGTH list
+        (v5 CDC records) via the prefix-sum offsets. Either way the reads
+        land straight in a preallocated payload buffer with no
+        assemble/join copy."""
         key = ("cas", tuple(srec["chunks"]), srec["codec"], srec["dtype"],
                tuple(srec["start"]), tuple(srec["stop"]))
         cached = self.cache.get(key)
@@ -271,12 +274,17 @@ class RestoreSession:
             return cached
         fixed = srec.get("chunking", "fixed") == "fixed"
         chunk_size = srec.get("chunk_size") or 0
+        chunk_lens = srec.get("chunk_lens")
         payload_bytes = srec.get("payload_bytes")
         crc32 = srec.get("crc32")
         if fixed and chunk_size > 0 and payload_bytes is not None \
                 and crc32 is not None:
             payload = self.chunks.read_payload_fixed(
                 srec["chunks"], payload_bytes, chunk_size, crc32)
+        elif chunk_lens is not None and payload_bytes is not None \
+                and crc32 is not None:
+            payload = self.chunks.read_payload_direct(
+                srec["chunks"], payload_bytes, crc32, chunk_lens)
         else:
             payload = self.chunks.read_payload(srec["chunks"],
                                                payload_bytes, crc32=crc32)

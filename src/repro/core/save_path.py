@@ -38,6 +38,7 @@ import numpy as np
 from . import codec as codec_mod
 from .atomic import NO_CRASH, CrashInjector
 from .cas import ChunkStore, chunk_digest, split_payload
+from .cas import run_chunker as cas_run_chunker
 from .elastic import ShardRange, normalize_index
 from .errors import warn
 from .namespace import REPLICA_SUFFIX, UPPER_DIR, leaf_to_fname
@@ -127,25 +128,33 @@ class SavePlan:
 # ---------------------------------------------------------------------------
 
 class PayloadTicket:
-    """Accumulator for one submitted payload: digests in chunk order, bytes
-    physically written, running crc32, and a completion count. Resolved by
-    the session's consumption loop; read it only after ``flush()`` (or
-    ``result()``, which drains just far enough)."""
+    """Accumulator for one submitted payload: digests in chunk order,
+    per-chunk byte lengths (manifest v5 offset lists), bytes physically
+    written, running crc32, and a completion count. Resolved by the
+    session's consumption loop; read it only after ``flush()`` (or
+    ``result()``, which drains just far enough).
 
-    __slots__ = ("digests", "new_bytes", "crc", "remaining", "n_chunks",
-                 "payload_bytes")
+    A ticket whose payload sits in the scan-ahead queue (its candidate
+    scan still in flight on the device) has ``submitted=False`` until the
+    session chunks it and feeds the pool."""
 
-    def __init__(self, n_chunks: int, payload_bytes: int):
+    __slots__ = ("digests", "lens", "new_bytes", "crc", "remaining",
+                 "n_chunks", "payload_bytes", "submitted")
+
+    def __init__(self, n_chunks: int, payload_bytes: int,
+                 submitted: bool = True):
         self.digests: list = []
+        self.lens: list = []
         self.new_bytes = 0
         self.crc = 0
         self.remaining = n_chunks
         self.n_chunks = n_chunks
         self.payload_bytes = payload_bytes
+        self.submitted = submitted
 
     @property
     def done(self) -> bool:
-        return self.remaining == 0
+        return self.submitted and self.remaining == 0
 
 
 class SaveSession:
@@ -177,6 +186,10 @@ class SaveSession:
         self._crash = crash
         self._on_chunk = on_chunk
         self._chunker = chunker
+        # a chunker OBJECT (cdc.GearChunker) exposes the async candidate
+        # scanner — that unlocks the scan-ahead queue below; a plain
+        # callable still works and chunks inline
+        self._chunker_obj = chunker if hasattr(chunker, "scanner") else None
         self._exec = chunks.executor
         self.serial = self._exec.serial
         # fan-out dirs pending the rank's batched fsync barrier
@@ -184,33 +197,76 @@ class SaveSession:
         self._dirs_lock = threading.Lock()
         self._window = max(int(window or 2 * self._exec.threads), 1)
         self._pending: deque = deque()      # (future, ticket, chunk)
+        self._scan_queue: deque = deque()   # (payload, scan ticket, ticket)
 
     # -- submission ----------------------------------------------------
     def submit_payload(self, payload) -> PayloadTicket:
         """Chunk `payload` and feed the pool; returns the payload's ticket.
-        Serial engine: runs to completion inline (PR-1 path)."""
+        Serial engine: runs to completion inline (PR-1 path).
+
+        Pipelined engine with an accelerated CDC scanner: the payload's
+        candidate scan is DISPATCHED here (async, on the device) and its
+        chunks are only fed to the pool when the next payload arrives (or
+        at flush/result) — so the scan of payload k+1 overlaps the chunk
+        hash/write of payload k instead of serializing in front of it."""
         if self.serial:
+            lens: list = []
             digests, new = self._chunks.put_payload(
                 payload, self._crash, on_chunk=self._on_chunk,
-                chunker=self._chunker)
+                chunker=self._chunker, lens_out=lens)
             ticket = PayloadTicket(0, len(payload))
             ticket.digests = digests
+            ticket.lens = lens
             ticket.new_bytes = new
             ticket.crc = zlib.crc32(payload) & 0xFFFFFFFF
             return ticket
-        chunks = (self._chunker(payload) if self._chunker is not None
+        if self._chunker_obj is not None and \
+                self._chunker_obj.scanner.resolve(len(payload)) != "numpy":
+            ticket = PayloadTicket(-1, len(payload), submitted=False)
+            try:
+                handle = self._chunker_obj.scanner.scan_async(payload)
+                self._scan_queue.append((payload, handle, ticket))
+                # depth-1 scan-ahead: feed the pool with every OLDER
+                # payload's chunks (their scans had the whole previous
+                # hash/write phase to finish) while the device scans this
+                # one
+                while len(self._scan_queue) > 1:
+                    self._submit_scanned()
+            except BaseException:
+                self.abort()
+                raise
+            return ticket
+        chunks = (cas_run_chunker(self._chunker, payload)
+                  if self._chunker is not None
                   else split_payload(payload, self._chunks.chunk_size))
         ticket = PayloadTicket(len(chunks), len(payload))
         try:
-            for chunk in chunks:
-                while len(self._pending) >= self._window:
-                    self._consume_one()
-                fut = self._exec.submit(self._store, chunk)
-                self._pending.append((fut, ticket, chunk))
+            self._feed(chunks, ticket)
         except BaseException:
             self.abort()
             raise
         return ticket
+
+    def _feed(self, chunks, ticket: PayloadTicket):
+        for chunk in chunks:
+            while len(self._pending) >= self._window:
+                self._consume_one()
+            fut = self._exec.submit(self._store, chunk)
+            self._pending.append((fut, ticket, chunk))
+
+    def _submit_scanned(self):
+        """Resolve the oldest queued scan and feed its chunks to the pool
+        (tickets always submit — and therefore resolve — in order)."""
+        payload, handle, ticket = self._scan_queue.popleft()
+        try:
+            chunks = self._chunker_obj.chunk(payload,
+                                             candidates=handle.result())
+            ticket.n_chunks = ticket.remaining = len(chunks)
+            ticket.submitted = True
+            self._feed(chunks, ticket)
+        except BaseException:
+            self.abort()
+            raise
 
     def _store(self, chunk):
         d = chunk_digest(chunk)
@@ -226,6 +282,7 @@ class SaveSession:
             self.abort()
             raise
         ticket.digests.append(d)
+        ticket.lens.append(len(chunk))
         ticket.new_bytes += new
         ticket.crc = zlib.crc32(chunk, ticket.crc)
         ticket.remaining -= 1
@@ -245,10 +302,12 @@ class SaveSession:
     def abort(self):
         """Cancel what hasn't started, join what has (no stray worker may
         still be writing objects while the caller's abort path runs).
-        Session methods call this on their own failures; a CALLER whose
-        error occurs between session calls (codec failure, injected crash)
-        must call it too before unwinding, or pool workers would still be
-        renaming objects while the abort/GC path runs."""
+        Queued scans are dropped (device scan results are side-effect
+        free). Session methods call this on their own failures; a CALLER
+        whose error occurs between session calls (codec failure, injected
+        crash) must call it too before unwinding, or pool workers would
+        still be renaming objects while the abort/GC path runs."""
+        self._scan_queue.clear()
         futs = [f for f, _, _ in self._pending]
         for f in futs:
             f.cancel()
@@ -256,14 +315,20 @@ class SaveSession:
         self._pending.clear()
 
     def result(self, ticket: PayloadTicket) -> tuple:
-        """Drain until `ticket` resolves; returns (digests, new_bytes, crc).
-        Chunks of LATER payloads may remain in flight."""
+        """Drain until `ticket` resolves; returns (digests, new_bytes, crc)
+        (per-chunk lengths ride on ``ticket.lens``). Chunks of LATER
+        payloads may remain in flight."""
+        while not ticket.submitted:
+            self._submit_scanned()
         while not ticket.done:
             self._consume_one()
         return ticket.digests, ticket.new_bytes, ticket.crc & 0xFFFFFFFF
 
     def flush(self):
-        """Drain every in-flight chunk (all tickets resolve)."""
+        """Drain every queued scan and in-flight chunk (all tickets
+        resolve)."""
+        while self._scan_queue:
+            self._submit_scanned()
         while self._pending:
             self._consume_one()
 
@@ -372,6 +437,11 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                 crash.maybe(f"rank{rank}_after_chunk_write")
                 rec["chunks"] = digests
                 rec["crc32"] = crc
+                if chunking == "cdc":
+                    # manifest v5: content-defined chunk lengths — restore
+                    # prefix-sums them into offsets and places reads
+                    # directly (fixed chunking derives offsets instead)
+                    rec["chunk_lens"] = [int(n) for n in ticket.lens]
                 rank_chunks.update(digests)
                 nbytes += new_bytes
                 with stats_lock:

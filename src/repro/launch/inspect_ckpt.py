@@ -121,6 +121,60 @@ def _step_dedup(root: Path, manifest: dict) -> dict | None:
             "dedup_ratio": payload / max(uniq, 1)}
 
 
+def _chunk_histogram(root: Path, manifest: dict, deep: bool = False) -> dict:
+    """Per-scheme chunk-size distribution (p10/p50/p90) vs the configured
+    bounds — misconfigured CDC bounds (avg too small for the leaf sizes,
+    max force-cutting everything) show up here during fsck instead of as
+    silent dedup loss.
+
+    Sizes come free for v5 CDC records (``chunk_lens``) and fixed records
+    (derived from ``chunk_size``); for older CDC records (v4 — no length
+    lists) sizes require a stat per unique object, so those are only
+    collected under ``--verify`` (``deep``)."""
+    import numpy as np
+    sizes: defaultdict = defaultdict(list)
+    stat_digests: defaultdict = defaultdict(set)
+    for rec in manifest["leaves"].values():
+        for s in rec["shards"]:
+            if "chunks" not in s:
+                continue
+            scheme = s.get("chunking", "fixed")
+            lens = s.get("chunk_lens")
+            if lens:
+                sizes[scheme].extend(lens)
+            elif scheme == "fixed" and s.get("chunk_size") \
+                    and s.get("payload_bytes") is not None:
+                k, payload = len(s["chunks"]), s["payload_bytes"]
+                if k:
+                    sizes[scheme].extend(
+                        [s["chunk_size"]] * (k - 1)
+                        + [payload - (k - 1) * s["chunk_size"]])
+            elif deep:
+                stat_digests[scheme].update(s["chunks"])
+    for scheme, digests in stat_digests.items():
+        for d in digests:
+            p = root / cas.object_rel(d)
+            if not p.exists():
+                p = root / cas.object_rel(d, 1)
+            if p.exists():
+                sizes[scheme].append(p.stat().st_size)
+    bounds = manifest.get("chunk_bounds")
+    out = {}
+    for scheme, ss in sorted(sizes.items()):
+        if not ss:
+            continue
+        p10, p50, p90 = (int(v) for v in
+                         np.percentile(ss, [10, 50, 90]))
+        ent = {"chunks": len(ss), "p10": p10, "p50": p50, "p90": p90}
+        if scheme == "cdc" and bounds:
+            ent["configured"] = {"min": bounds[0], "avg": bounds[1],
+                                 "max": bounds[2]}
+        elif scheme == "fixed" and manifest.get("chunk_size"):
+            ent["configured"] = {"size": manifest["chunk_size"]}
+        out[scheme] = ent
+    return out
+
+
 def _pending_rounds(root: Path, staging: list) -> list:
     """In-flight (pending-stage) rounds: staging dirs whose PENDING marker
     still parses. An overlapped save(blocking=False) legitimately keeps
@@ -208,6 +262,17 @@ def inspect(root: Path, step=None, verify=False, out=print):
             f"{dedup['dedup_ratio']:.2f}x "
             f"({dedup['payload_bytes']/2**20:.2f} MiB logical / "
             f"{dedup['unique_chunk_bytes']/2**20:.2f} MiB stored)")
+        hist = _chunk_histogram(root, manifest, deep=verify)
+        if hist:
+            report["chunk_hist"] = hist
+            for scheme, h in hist.items():
+                cfg = h.get("configured", {})
+                cfg_s = ("  configured " + "/".join(
+                    f"{k}={v/2**10:.0f}K" for k, v in cfg.items())
+                    if cfg else "")
+                out(f"    {scheme} chunk sizes: p10 {h['p10']/2**10:.1f}K  "
+                    f"p50 {h['p50']/2**10:.1f}K  p90 {h['p90']/2**10:.1f}K"
+                    f"{cfg_s}")
     if (root / cas.CAS_DIR).exists():
         # manifests are only needed for the CAS mark set — full-mode roots
         # skip these reads entirely. An unreadable historical manifest is a

@@ -35,6 +35,10 @@ def main(argv=None):
     ap.add_argument("--chunking", default="fixed", choices=["fixed", "cdc"],
                     help="cdc = content-defined chunking (dedup survives "
                          "byte-shifted payloads)")
+    ap.add_argument("--scan-backend", default="auto",
+                    choices=["auto", "numpy", "jnp", "pallas"],
+                    help="cdc candidate-scan engine (auto = accelerated "
+                         "for large payloads, numpy oracle below)")
     ap.add_argument("--io-threads", type=int, default=4,
                     help="chunk-IO pipeline width (1 = serial engine)")
     ap.add_argument("--replicas", type=int, default=1)
@@ -66,6 +70,7 @@ def main(argv=None):
         async_ckpt=not args.sync_ckpt, codec=args.codec,
         params_codec=args.params_codec, ckpt_mode=args.ckpt_mode,
         chunk_size=args.chunk_size, chunking=args.chunking,
+        scan_backend=args.scan_backend,
         io_threads=args.io_threads, replicas=args.replicas,
         n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed)
     trainer = Trainer(cfg, tcfg).init_or_restore()

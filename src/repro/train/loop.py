@@ -47,6 +47,7 @@ class TrainerConfig:
     ckpt_mode: str = "full"         # "incremental" = CAS dedup checkpoints
     chunk_size: int = 1 << 20
     chunking: str = "fixed"         # "cdc" = content-defined (shift-tolerant)
+    scan_backend: str = "auto"      # cdc candidate scan engine (cdc_scan)
     io_threads: int = 4             # chunk-IO pipeline width (1 = serial)
     replicas: int = 1
     seed: int = 0
@@ -83,7 +84,7 @@ class Trainer:
             params_codec=tcfg.params_codec, replicas=tcfg.replicas,
             retain=tcfg.retain, mode=tcfg.ckpt_mode,
             chunk_size=tcfg.chunk_size, chunking=tcfg.chunking,
-            io_threads=tcfg.io_threads)
+            scan_backend=tcfg.scan_backend, io_threads=tcfg.io_threads)
         # ---- upper half ----
         self.state = None
         self.data_state: DataState | None = None

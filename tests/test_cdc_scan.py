@@ -1,0 +1,182 @@
+"""Accelerated gear-scan backends: cut-point parity against the numpy
+oracle (boundaries ARE the dedup keyspace — a one-byte drift re-writes
+history), async scan tickets, auto backend resolution, and the zero-copy
+chunker contract."""
+import numpy as np
+import pytest
+
+from repro.core import cdc_scan
+from repro.core.cdc import GearChunker
+from repro.core.cdc_scan import (GearScanner, ScanTicket, WINDOW,
+                                 scan_candidates_numpy)
+
+
+def _masks(avg=1024):
+    ck = GearChunker(avg)
+    return int(ck.mask_strict), int(ck.mask_loose)
+
+
+def _assert_scan_parity(scanner, ref_scanner, payload):
+    s, l = scanner.scan(payload)
+    rs, rl = ref_scanner.scan(payload)
+    np.testing.assert_array_equal(s, rs)
+    np.testing.assert_array_equal(l, rl)
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-numpy parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("size", [
+    0, 1, WINDOW - 1, WINDOW, WINDOW + 1,          # below/at the window
+    256, 1024,                                     # == min_size territory
+    65_536, 300_000,                               # multi-block
+    cdc_scan.SEGMENT_BYTES + 12_345,               # crosses a segment cut
+    # > MAX_INFLIGHT_SEGMENTS segments: exercises the windowed deferred
+    # re-dispatch inside ScanTicket.result()
+    cdc_scan.SEGMENT_BYTES * (cdc_scan.MAX_INFLIGHT_SEGMENTS + 1) + 54_321,
+])
+def test_jnp_candidate_parity(size, rng):
+    ms, ml = _masks()
+    jnp_s = GearScanner(ms, ml, backend="jnp")
+    ref = GearScanner(ms, ml, backend="numpy")
+    _assert_scan_parity(jnp_s, ref, rng.bytes(size))
+
+
+def test_jnp_parity_fuzz(rng):
+    """Property fuzz: random sizes × random mask pairs, byte-identical
+    candidate sets. Sizes deliberately straddle block and bucket edges."""
+    for avg in (512, 4096):
+        ms, ml = _masks(avg)
+        jnp_s = GearScanner(ms, ml, backend="jnp")
+        ref = GearScanner(ms, ml, backend="numpy")
+        for _ in range(10):
+            size = int(rng.integers(0, 200_000))
+            _assert_scan_parity(jnp_s, ref, rng.bytes(size))
+    # block/bucket edge sizes (BLOCK columns × _MIN_COLS bucket)
+    ms, ml = _masks()
+    jnp_s = GearScanner(ms, ml, backend="jnp")
+    ref = GearScanner(ms, ml, backend="numpy")
+    B = cdc_scan.BLOCK
+    for size in (B - 1, B, B + 1, 64 * B - 1, 64 * B, 64 * B + 1):
+        _assert_scan_parity(jnp_s, ref, rng.bytes(size))
+
+
+def test_low_entropy_payload_parity():
+    """Constant bytes: either a boundary everywhere or nowhere — the
+    force-cut-at-max regime must agree exactly."""
+    ms, ml = _masks()
+    jnp_s = GearScanner(ms, ml, backend="jnp")
+    ref = GearScanner(ms, ml, backend="numpy")
+    for fill in (b"\x00", b"\xa7"):
+        _assert_scan_parity(jnp_s, ref, fill * 100_000)
+
+
+@pytest.mark.parametrize("size", [1000, 70_000, 200_001])
+def test_pallas_interpret_parity(size, rng):
+    """The Pallas kernel, run through the interpreter (this box has no
+    accelerator), produces byte-identical candidates."""
+    ms, ml = _masks()
+    pal = GearScanner(ms, ml, backend="pallas", pallas_interpret=True)
+    ref = GearScanner(ms, ml, backend="numpy")
+    _assert_scan_parity(pal, ref, rng.bytes(size))
+
+
+def test_cut_point_parity_through_chunker(rng):
+    """End-to-end: GearChunker cut points (min/avg/max discipline applied
+    over the candidate sets) are identical across backends, including the
+    <WINDOW, ==min_size and force-cut-at-max-tail shapes."""
+    for payload in (b"", rng.bytes(WINDOW - 1), rng.bytes(256),
+                    rng.bytes(100_000), b"\x00" * 50_000,
+                    rng.bytes(1 << 20)):
+        ref = GearChunker(1024).cut_points(payload)
+        assert GearChunker(1024, scan_backend="jnp") \
+            .cut_points(payload) == ref
+        assert b"".join(GearChunker(1024, scan_backend="jnp")
+                        .chunk(payload)) == payload
+
+
+# ---------------------------------------------------------------------------
+# scanner API
+# ---------------------------------------------------------------------------
+
+def test_scan_async_matches_sync(rng):
+    ms, ml = _masks()
+    sc = GearScanner(ms, ml, backend="jnp")
+    payloads = [rng.bytes(n) for n in (50_000, 120_000, 80_000)]
+    tickets = [sc.scan_async(p) for p in payloads]
+    assert all(isinstance(t, ScanTicket) for t in tickets)
+    for t, p in zip(tickets, payloads):
+        s, l = t.result()
+        rs, rl = sc.scan(p)          # ticket result is memoized + stable
+        np.testing.assert_array_equal(s, rs)
+        np.testing.assert_array_equal(l, rl)
+        s2, l2 = t.result()
+        assert s2 is s and l2 is l
+
+
+def test_auto_backend_size_gate(rng):
+    ms, ml = _masks()
+    sc = GearScanner(ms, ml, backend="auto")
+    assert sc.resolve(1000) == "numpy"
+    # large payloads pick an accelerated backend (jnp on a CPU-only host,
+    # pallas when an accelerator is attached)
+    assert sc.resolve(cdc_scan.MIN_ACCEL_BYTES) in ("jnp", "pallas")
+
+
+def test_pallas_without_accelerator_falls_back(rng):
+    import jax
+    if jax.default_backend() != "cpu":
+        pytest.skip("accelerator attached — fallback not exercised")
+    ms, ml = _masks()
+    sc = GearScanner(ms, ml, backend="pallas")
+    assert sc.resolve(1 << 20) == "jnp"
+    _assert_scan_parity(sc, GearScanner(ms, ml, backend="numpy"),
+                        rng.bytes(50_000))
+
+
+def test_invalid_backend_rejected():
+    ms, ml = _masks()
+    with pytest.raises(ValueError):
+        GearScanner(ms, ml, backend="cuda")
+    with pytest.raises(ValueError):
+        GearChunker(1024, scan_backend="nope")
+    with pytest.raises(ValueError):
+        # loose mask must nest inside the strict mask
+        GearScanner(0x0F, 0xF0)
+
+
+def test_oracle_matches_legacy_semantics(rng):
+    """The extracted oracle is literally the PR-2 scan: empty below the
+    window, end offsets in (WINDOW, n]."""
+    ms, ml = _masks()
+    s, l = scan_candidates_numpy(np.frombuffer(rng.bytes(WINDOW), np.uint8),
+                                 ms, ml)
+    assert len(s) == 0 and len(l) == 0
+    data = np.frombuffer(rng.bytes(100_000), np.uint8)
+    s, l = scan_candidates_numpy(data, ms, ml)
+    assert set(s) <= set(l)
+    if len(l):
+        assert l.min() >= WINDOW and l.max() <= len(data)
+
+
+# ---------------------------------------------------------------------------
+# zero-copy chunking
+# ---------------------------------------------------------------------------
+
+def test_chunk_returns_zero_copy_views(rng):
+    payload = rng.bytes(100_000)
+    chunks = GearChunker(1024).chunk(payload)
+    assert all(isinstance(c, memoryview) for c in chunks)
+    # views alias the payload, not copies of it
+    assert all(c.obj is payload for c in chunks)
+    assert b"".join(chunks) == payload
+
+
+def test_chunk_accepts_ndarray_views(rng):
+    arr = np.frombuffer(rng.bytes(64_000), np.uint8)
+    chunks = GearChunker(1024).chunk(arr)
+    assert b"".join(chunks) == arr.tobytes()
+    # slices share the array's memory
+    assert all(np.shares_memory(np.frombuffer(c, np.uint8), arr)
+               for c in chunks)

@@ -12,7 +12,7 @@ import pytest
 from repro.core import atomic, cas
 from repro.core import codec as codec_mod
 from repro.core.atomic import CrashInjector, CrashPoint
-from repro.core.checkpoint import CheckpointManager
+from repro.core.checkpoint import FORMAT_VERSION, CheckpointManager
 from repro.core.elastic import ShardRange, assemble, plan_reads
 from repro.core.errors import (AbortedError, CodecUnavailableError,
                                CorruptShardError, MissingShardError,
@@ -255,25 +255,28 @@ def _rewrite_manifest_as_v2(root: Path, step: int):
     the v2 writer produced."""
     mpath = root / f"step_{step:08d}" / atomic.MANIFEST
     m = json.loads(mpath.read_text())
-    assert m["format"] == 4
+    assert m["format"] == FORMAT_VERSION
     m["format"] = 2
     m.pop("mode", None)
     m.pop("chunk_size", None)
     m.pop("chunking", None)
+    m.pop("chunk_bounds", None)
     mpath.write_text(json.dumps(m))
 
 
 def _rewrite_manifest_as_v3(root: Path, step: int):
-    """Strip the v4-only chunking-scheme fields — exactly what the v3
+    """Strip the v4+/v5-only chunking-scheme fields — exactly what the v3
     (PR-1 incremental) writer produced."""
     mpath = root / f"step_{step:08d}" / atomic.MANIFEST
     m = json.loads(mpath.read_text())
-    assert m["format"] == 4
+    assert m["format"] == FORMAT_VERSION
     m["format"] = 3
     m.pop("chunking", None)
+    m.pop("chunk_bounds", None)
     for rec in m["leaves"].values():
         for s in rec["shards"]:
             s.pop("chunking", None)
+            s.pop("chunk_lens", None)
     mpath.write_text(json.dumps(m))
 
 

@@ -96,6 +96,29 @@ def test_inspector_reports_chunked_checkpoint_and_dedup(tmp_path):
     # two steps share every chunk → step-level dedup ratio ~1, but the
     # store holds one copy for two steps' references
     assert rep["cas"]["references"] == 2 * rep["cas"]["objects"]
+    # fixed-scheme chunk-size histogram derives from chunk_size alone
+    hist = rep["chunk_hist"]["fixed"]
+    assert hist["p50"] <= 512 and hist["chunks"] > 0
+    assert hist["configured"] == {"size": 512}
+
+
+def test_inspector_chunk_histogram_vs_cdc_bounds(tmp_path):
+    """CDC steps report their realized chunk-size distribution against the
+    configured min/avg/max — the fsck surface for misconfigured bounds."""
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2,
+                            mode="incremental", codec="raw",
+                            chunking="cdc", chunk_size=512)
+    mgr.save({"params": {"w": jax.random.normal(KEY, (128, 128))}}, 1)
+    lines = []
+    rep = inspect(mgr.store.root,
+                  out=lambda *a: lines.append(" ".join(str(x) for x in a)))
+    hist = rep["chunk_hist"]["cdc"]
+    assert hist["configured"] == {"min": mgr._chunker.min_size,
+                                  "avg": mgr._chunker.avg_size,
+                                  "max": mgr._chunker.max_size}
+    assert mgr._chunker.min_size <= hist["p50"] <= mgr._chunker.max_size
+    assert hist["p10"] <= hist["p50"] <= hist["p90"]
+    assert any("cdc chunk sizes:" in ln for ln in lines)
 
 
 def test_verify_deep_pass_skips_step_covered_digests(tmp_path):

@@ -1,0 +1,227 @@
+"""Manifest v5: CDC shard records carry their chunk length list, so the
+restore-side direct-placement path (readinto at prefix-sum offsets, no
+assemble/join copy) extends to content-defined chunking.
+
+Covers: the v5 writer emits well-formed length lists; v5 CDC restores take
+the fixed-offset path (join-copy reassembly is asserted NOT to run);
+damage still falls back to the verified join path and heals; v4/v3
+history written by older writers restores under the v5 reader and
+mixed-version GC leaks nothing."""
+import json
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import atomic, cas
+from repro.core.cas import ChunkStore
+from repro.core.checkpoint import FORMAT_VERSION, CheckpointManager
+from repro.core.storage import Tier, TieredStore
+
+
+def _store(tmp_path: Path) -> TieredStore:
+    return TieredStore(Tier("fast", tmp_path / "fast"))
+
+
+def _state(seed=0, n=40_000):
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+    return {"params": {"w": jnp.asarray(
+        rng.standard_normal((n,), dtype=np.float32))}}
+
+
+def _abstract(state):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+
+
+def _mgr(tmp_path, chunking="cdc", io_threads=4, **kw):
+    return CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
+                             mode="incremental", chunk_size=512,
+                             chunking=chunking, io_threads=io_threads,
+                             keepalive_s=60.0, **kw)
+
+
+def _manifest_path(root: Path, step: int) -> Path:
+    return root / f"step_{step:08d}" / atomic.MANIFEST
+
+
+def _cdc_records(manifest):
+    return [s for rec in manifest["leaves"].values()
+            for s in rec["shards"]
+            if s.get("chunking") == "cdc"]
+
+
+# ---------------------------------------------------------------------------
+# v5 writer output
+# ---------------------------------------------------------------------------
+
+def test_v5_writer_emits_chunk_len_lists(tmp_path):
+    mgr = _mgr(tmp_path)
+    state = _state()
+    mgr.save(state, 1)
+    m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
+    assert m["format"] == FORMAT_VERSION == 5
+    assert m["chunk_bounds"] == [mgr._chunker.min_size,
+                                 mgr._chunker.avg_size,
+                                 mgr._chunker.max_size]
+    recs = _cdc_records(m)
+    assert recs
+    for s in recs:
+        assert len(s["chunk_lens"]) == len(s["chunks"])
+        assert sum(s["chunk_lens"]) == s["payload_bytes"]
+        assert all(n > 0 for n in s["chunk_lens"])
+
+
+def test_v5_serial_writer_also_emits_chunk_lens(tmp_path):
+    """The serial engine records the same metadata (its IO behaviour is
+    unchanged — lengths fall out of the chunk loop it already runs)."""
+    mgr = _mgr(tmp_path, io_threads=1)
+    mgr.save(_state(), 1)
+    m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
+    for s in _cdc_records(m):
+        assert sum(s["chunk_lens"]) == s["payload_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# direct placement on restore
+# ---------------------------------------------------------------------------
+
+def test_v5_cdc_restore_uses_direct_placement(tmp_path, monkeypatch):
+    """Acceptance: same-topology CDC restores must take the fixed-offset
+    read path — the join-copy reassembly is asserted unreachable."""
+    mgr = _mgr(tmp_path)
+    state = _state()
+    mgr.save(state, 1)
+
+    calls = {"direct": 0}
+    real_direct = ChunkStore.read_payload_direct
+
+    def counting_direct(self, *a, **kw):
+        calls["direct"] += 1
+        return real_direct(self, *a, **kw)
+
+    def forbidden_join(self, *a, **kw):
+        raise AssertionError("join-path read_payload used for a v5 CDC "
+                             "record on the pipelined engine")
+
+    monkeypatch.setattr(ChunkStore, "read_payload_direct", counting_direct)
+    monkeypatch.setattr(ChunkStore, "read_payload", forbidden_join)
+    restored, _ = mgr.restore(_abstract(state))
+    assert calls["direct"] > 0
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.asarray(restored["params"]["w"]))
+
+
+def test_v5_direct_placement_damage_falls_back_and_heals(tmp_path):
+    """A corrupted primary object fails the crc gate; the read drops back
+    to the verified join path and heals through the buddy replica."""
+    mgr = _mgr(tmp_path, replicas=2)
+    state = _state()
+    mgr.save(state, 1)
+    m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
+    digest = _cdc_records(m)[0]["chunks"][0]
+    obj = mgr.store.fast.root / cas.object_rel(digest)
+    obj.write_bytes(b"\x00" * obj.stat().st_size)      # torn primary
+    restored, _ = mgr.restore(_abstract(state))
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.asarray(restored["params"]["w"]))
+
+
+def test_v5_direct_placement_rejects_inconsistent_lens(tmp_path, rng):
+    """A length list that disagrees with the digest list (or payload size)
+    must not be trusted for placement — the verified path arbitrates."""
+    store = _store(tmp_path)
+    cs = ChunkStore(store, chunk_size=128, io_threads=4)
+    payload = rng.bytes(1000)
+    digests, _ = cs.put_payload(payload)
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    good_lens = [128] * 7 + [104]
+    got = cs.read_payload_direct(digests, len(payload), crc, good_lens)
+    assert bytes(got) == payload
+    for bad in ([128] * 8,                 # sum > payload
+                good_lens[:-1],            # count mismatch
+                [1000] + [0] * 7):         # zero-length entries
+        got = cs.read_payload_direct(digests, len(payload), crc, bad)
+        assert bytes(got) == payload       # verified join path served it
+
+
+# ---------------------------------------------------------------------------
+# cross-version history
+# ---------------------------------------------------------------------------
+
+def _downgrade(root: Path, step: int, fmt: int):
+    """Rewrite a committed v5 manifest as its older-writer equivalent."""
+    mpath = _manifest_path(root, step)
+    m = json.loads(mpath.read_text())
+    assert m["format"] == FORMAT_VERSION
+    m["format"] = fmt
+    m.pop("chunk_bounds", None)
+    for rec in m["leaves"].values():
+        for s in rec["shards"]:
+            s.pop("chunk_lens", None)
+            if fmt < 4:
+                s.pop("chunking", None)
+    if fmt < 4:
+        m.pop("chunking", None)
+    mpath.write_text(json.dumps(m))
+
+
+def test_v5_reader_restores_v4_history(tmp_path):
+    """v5↔v4 round trip: a v4-written CDC step (no length lists) restores
+    bit-exact under the v5 reader — through the join path, since offsets
+    are unknowable — and a v5 step written on top restores too."""
+    mgr = _mgr(tmp_path, retain=4)
+    s1, s2 = _state(1), _state(2)
+    mgr.save(s1, 1)
+    _downgrade(mgr.store.root, 1, 4)
+    mgr2 = _mgr(tmp_path, retain=4)
+    assert mgr2.load_manifest(1)["format"] == 4
+    r1, _ = mgr2.restore(_abstract(s1), step=1)
+    np.testing.assert_array_equal(np.asarray(s1["params"]["w"]),
+                                  np.asarray(r1["params"]["w"]))
+    mgr2.save(s2, 2)
+    assert mgr2.load_manifest(2)["format"] == 5
+    for step, expect in ((1, s1), (2, s2)):
+        r, _ = mgr2.restore(_abstract(expect), step=step)
+        np.testing.assert_array_equal(np.asarray(expect["params"]["w"]),
+                                      np.asarray(r["params"]["w"]))
+
+
+def test_gc_over_mixed_v3_v4_v5_history_leaks_nothing(tmp_path):
+    """Mark-and-sweep over a store holding v3 + v4 + v5 steps: every
+    version's chunks stay live (no sweep of referenced objects), orphans
+    are reclaimed, and every step still restores."""
+    mgr = _mgr(tmp_path, retain=8)
+    states = {s: _state(s) for s in (1, 2, 3)}
+    for step, st in states.items():
+        mgr.save(st, step)
+    _downgrade(mgr.store.root, 1, 3)
+    _downgrade(mgr.store.root, 2, 4)
+    mgr2 = _mgr(tmp_path, retain=8)
+    # an unreferenced orphan object for the sweep to prove itself on
+    orphan = mgr2.store.fast.root / cas.object_rel("ff" * 16)
+    orphan.parent.mkdir(parents=True, exist_ok=True)
+    orphan.write_bytes(b"junk")
+    mgr2.gc()
+    assert not orphan.exists()
+    assert mgr2.chunks.fsck(mgr2._live_chunk_refs())["ok"]
+    for step, st in states.items():
+        assert mgr2.load_manifest(step)["format"] == {1: 3, 2: 4, 3: 5}[step]
+        r, _ = mgr2.restore(_abstract(st), step=step)
+        np.testing.assert_array_equal(np.asarray(st["params"]["w"]),
+                                      np.asarray(r["params"]["w"]))
+
+
+def test_v6_manifest_rejected(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(_state(), 1)
+    mpath = _manifest_path(mgr.store.root, 1)
+    m = json.loads(mpath.read_text())
+    m["format"] = FORMAT_VERSION + 1
+    mpath.write_text(json.dumps(m))
+    from repro.core.errors import CkptError
+    with pytest.raises(CkptError):
+        _mgr(tmp_path).load_manifest(1)

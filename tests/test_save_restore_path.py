@@ -75,6 +75,38 @@ def test_session_pipelines_across_payload_boundaries(tmp_path, rng):
     cs.close()
 
 
+def test_session_scan_ahead_defers_and_matches_serial(tmp_path, rng):
+    """With an accelerated CDC scanner, a payload's scan dispatches at
+    submit time but its chunks only feed the pool when the next payload
+    arrives (or at flush) — and the digests/lens/crc are identical to the
+    serial engine's."""
+    from repro.core.cdc import GearChunker
+    from repro.core.cdc_scan import MIN_ACCEL_BYTES
+    payloads = [rng.bytes(MIN_ACCEL_BYTES + 13), rng.bytes(MIN_ACCEL_BYTES)]
+    ck = GearChunker(1 << 18, scan_backend="jnp")
+
+    ref = _chunks(tmp_path / "ref", io_threads=1, chunk_size=1 << 18)
+    want = []
+    for p in payloads:
+        lens: list = []
+        digests, new = ref.put_payload(p, chunker=ck, lens_out=lens)
+        want.append((digests, lens, zlib.crc32(p) & 0xFFFFFFFF))
+
+    cs = _chunks(tmp_path / "ses", io_threads=4, chunk_size=1 << 18)
+    session = SaveSession(cs, chunker=ck)
+    t1 = session.submit_payload(payloads[0])
+    assert not t1.submitted                # queued behind its async scan
+    t2 = session.submit_payload(payloads[1])
+    assert t1.submitted                    # depth-1 scan-ahead kicked it in
+    session.barrier()
+    for t, (digests, lens, crc) in zip((t1, t2), want):
+        d, _, c = session.result(t)
+        assert (d, t.lens, c) == (digests, lens, crc)
+    assert sum(t1.lens) == len(payloads[0])
+    cs.close()
+    ref.close()
+
+
 def test_session_serial_engine_is_put_payload(tmp_path, rng):
     """io_threads=1 must stay byte-for-byte the PR-1 engine: the session
     degrades to inline put_payload calls, tickets resolve immediately."""
