@@ -58,8 +58,9 @@ import numpy as np
 
 from repro.core.checkpoint import CheckpointManager
 
-from .common import (abstract, bb_store, bench_record, cleanup, emit,
-                     io_sweep_compare, scratch_store, synth_state)
+from .common import (abstract, bb_store, bench_policy, bench_record,
+                     cleanup, emit, io_sweep_compare, scratch_store,
+                     synth_state)
 
 RANKS = (4, 8, 16, 32, 64)
 BYTES_PER_RANK = 12 << 20  # aggregate grows with ranks (ADH-style)
@@ -86,8 +87,8 @@ def run(tiny=False):
         for tier_name, store in (("bb", bb_store(f"fig2-{ranks}")),
                                  ("scratch",
                                   scratch_store(f"fig2-{ranks}", tmp))):
-            mgr = CheckpointManager(store, n_writers=min(ranks, 16),
-                                    codec="raw", retain=1)
+            mgr = CheckpointManager(store, policy=bench_policy(
+                n_writers=min(ranks, 16), codec="raw", retain=1))
             t0 = time.monotonic()
             rep = mgr.save(state, 1)
             times[tier_name] = time.monotonic() - t0
@@ -129,9 +130,9 @@ def dedup_sweep(mode: str, *, chunking="fixed", io_threads=4, tiny=False):
     rng = np.random.default_rng(0)
     state = _sweep_state(rng, tiny)
     store = bb_store(f"dedup-{mode}-{chunking}")
-    mgr = CheckpointManager(store, n_writers=4, codec="raw", retain=2,
-                            mode=mode, chunk_size=1 << 20,
-                            chunking=chunking, io_threads=io_threads)
+    mgr = CheckpointManager(store, policy=bench_policy(
+        n_writers=4, codec="raw", retain=2, mode=mode,
+        chunk_size=1 << 20, chunking=chunking, io_threads=io_threads))
     written = []
     for step in range(1, SWEEP_STEPS + 1):
         if step > 1:
@@ -231,9 +232,9 @@ def overlap_bench(io_threads=8, tiny=False, reps=5):
     sync_s = []
     tmp = Path(tempfile.mkdtemp())
     store = TieredStore(Tier("disk", tmp / "overlap"))
-    mgr = CheckpointManager(store, n_writers=1, codec="raw", retain=2,
-                            mode="incremental", chunk_size=1 << 20,
-                            io_threads=io_threads, keepalive_s=120.0)
+    mgr = CheckpointManager(store, policy=bench_policy(
+        n_writers=1, codec="raw", retain=2, mode="incremental",
+        chunk_size=1 << 20, io_threads=io_threads))
     step = 0
     for rep in range(-1, reps):               # rep -1 = untimed warmup
         step += 1
@@ -280,6 +281,104 @@ def overlap_bench(io_threads=8, tiny=False, reps=5):
     })
     return {"blocking_s": med_block, "persist_s": med_persist,
             "blocking_frac": frac}
+
+
+def overlap_queue_sweep(io_threads=8, tiny=False, bursts=4,
+                        depths=(1, 2, 3)):
+    """Bursty checkpoint cadence vs the persist queue depth.
+
+    The queue exists to decouple checkpoint CADENCE from persist LATENCY:
+    steady-state throughput is still one persist worker (the disk is the
+    disk), but a burst of saves — or a persist stretched by a slow-fsync
+    phase — must not block the train thread. Protocol, per burst: TWO
+    ``save(blocking=False)`` calls back-to-back, then simulated training
+    compute until the queue drains. At depth 1 the second save of every
+    burst drains the first round before it may snapshot (the PR-3
+    behaviour), so the train thread eats ~the whole persist; at depth ≥ 2
+    it is ADMITTED while round one persists and pays only its snapshot.
+
+    Reported per depth: the second-save blocking median, the train-thread
+    blocking fraction (Σ save() blocking ÷ batch wall-clock), and how
+    many second saves were admitted while a prior round was still
+    persisting (the queue genuinely overlapping, not just configured)."""
+    import shutil
+    import statistics
+    import tempfile
+
+    from repro.core.storage import Tier, TieredStore
+
+    agg = OVERLAP_BYTES // (16 if tiny else 2)
+    bursts = 2 if tiny else bursts
+    tmp = Path(tempfile.mkdtemp())
+    sweep = {}
+    for depth in depths:
+        store = TieredStore(Tier("disk", tmp / f"q{depth}"))
+        mgr = CheckpointManager(store, policy=bench_policy(
+            n_writers=1, codec="raw", retain=2, mode="incremental",
+            chunk_size=1 << 20, io_threads=io_threads,
+            persist_queue_depth=depth))
+        mgr.save(synth_state(agg, shards=12, seed=9), 1, blocking=False)
+        mgr.wait()                                  # warmup round
+        blocking, second_blk = [], []
+        overlapped = 0
+        step = 1
+        t0 = time.monotonic()
+        for b in range(bursts):
+            for pos in range(2):                    # the burst: 2 rounds
+                step += 1
+                state = synth_state(agg, shards=12,  # fresh: no dedup
+                                    seed=1000 * depth + step)
+                rep = mgr.save(state, step, blocking=False)
+                if mgr._persist.inflight >= 2:
+                    # admitted while a prior round persists — the queue
+                    # is genuinely overlapping rounds
+                    overlapped += 1
+                blocking.append(rep["blocking_s"])
+                if pos == 1:
+                    second_blk.append(rep["blocking_s"])
+            # simulated training compute until the burst drains — short
+            # sleeps, like XLA compute that has released the GIL
+            while mgr._persist.active:
+                time.sleep(0.005)
+        tw = time.monotonic()
+        mgr.wait()
+        drain_s = time.monotonic() - tw
+        wall = time.monotonic() - t0
+        frac = sum(blocking) / max(wall, 1e-9)
+        sweep[str(depth)] = {
+            "bursts": bursts,
+            "blocking_s_median": round(statistics.median(blocking), 4),
+            "second_save_blocking_s":
+                round(statistics.median(second_blk), 4),
+            "blocking_frac": round(frac, 4),
+            "wall_s": round(wall, 4),
+            "final_drain_s": round(drain_s, 4),
+            "rounds_admitted_while_persisting": overlapped,
+        }
+        emit(f"overlap_queue_depth{depth}",
+             statistics.median(second_blk) * 1e6,
+             f"agg_mib={agg / 2**20:.0f};bursts={bursts};"
+             f"second_save_blocking_s="
+             f"{statistics.median(second_blk):.3f};"
+             f"blocking_frac={frac:.3f};"
+             f"admitted_while_persisting={overlapped}")
+        mgr.close()
+        shutil.rmtree(tmp / f"q{depth}", ignore_errors=True)
+    shutil.rmtree(tmp, ignore_errors=True)
+    d1 = sweep.get("1", {}).get("blocking_frac")
+    d2 = sweep.get("2", {}).get("blocking_frac")
+    bench_record("overlap_queue", {
+        "agg_mib": agg / 2**20, "io_threads": io_threads, "tiny": tiny,
+        "depths": sweep,
+        "depth1_blocking_frac": d1, "depth2_blocking_frac": d2,
+        "depth2_rounds_overlapped":
+            sweep.get("2", {}).get("rounds_admitted_while_persisting"),
+    })
+    emit("overlap_queue_summary", 0,
+         f"depth1_frac={d1};depth2_frac={d2};"
+         f"depth2_overlapped="
+         f"{sweep.get('2', {}).get('rounds_admitted_while_persisting')}")
+    return sweep
 
 
 # ---------------------------------------------------------------------------
@@ -382,9 +481,9 @@ def cdc_churn(tiny=False, steps=4):
         store = bb_store(f"churn-{chunking}")
         # 256 KiB average: enough chunks per blob that "only chunks
         # overlapping the edit" is visible even in --tiny mode
-        mgr = CheckpointManager(store, n_writers=2, codec="raw", retain=2,
-                                mode="incremental", chunk_size=256 << 10,
-                                chunking=chunking, keepalive_s=120.0)
+        mgr = CheckpointManager(store, policy=bench_policy(
+            n_writers=2, codec="raw", retain=2, mode="incremental",
+            chunk_size=256 << 10, chunking=chunking))
         buf = bytes(base)
         written = []
         for step in range(1, steps + 1):
@@ -442,6 +541,7 @@ def main(argv=None):
         chunk_scan(tiny=args.tiny)
     elif args.mode == "overlap":
         overlap_bench(io_threads=args.io_threads, tiny=args.tiny)
+        overlap_queue_sweep(io_threads=args.io_threads, tiny=args.tiny)
     else:
         dedup_sweep(args.mode, chunking=args.chunking,
                     io_threads=args.io_threads, tiny=args.tiny)

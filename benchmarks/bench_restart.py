@@ -20,8 +20,8 @@ from pathlib import Path
 
 from repro.core.checkpoint import CheckpointManager
 
-from .common import (abstract, bb_store, cleanup, emit, io_sweep_compare,
-                     scratch_store, synth_state)
+from .common import (abstract, bb_store, bench_policy, cleanup, emit,
+                     io_sweep_compare, scratch_store, synth_state)
 
 AGG = 256 << 20  # scaled-down 5.8 TB stand-in
 
@@ -33,7 +33,8 @@ def run(tiny=False):
     out = {}
     for tier_name, store in (("bb", bb_store("hpcg")),
                              ("scratch", scratch_store("hpcg", tmp))):
-        mgr = CheckpointManager(store, n_writers=8, codec="raw", retain=1)
+        mgr = CheckpointManager(store, policy=bench_policy(
+            n_writers=8, codec="raw", retain=1))
         t0 = time.monotonic()
         mgr.save(state, 1)
         ckpt_s = time.monotonic() - t0

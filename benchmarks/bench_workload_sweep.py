@@ -16,7 +16,7 @@ from repro.core.split_state import init_train_state
 from repro.models import Model
 from repro.optim import make_optimizer
 
-from .common import abstract, bb_store, cleanup, emit
+from .common import abstract, bb_store, bench_policy, cleanup, emit
 
 
 def run():
@@ -27,7 +27,8 @@ def run():
         opt = make_optimizer(cfg)
         state = init_train_state(model, opt, jax.random.PRNGKey(0))
         store = bb_store(f"zoo-{arch}")
-        mgr = CheckpointManager(store, n_writers=2, retain=1)
+        mgr = CheckpointManager(store, policy=bench_policy(n_writers=2,
+                                                           retain=1))
         t0 = time.monotonic()
         rep = mgr.save(state, 1)
         save_s = time.monotonic() - t0

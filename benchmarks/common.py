@@ -23,6 +23,16 @@ from repro.core.storage import Tier, TieredStore  # noqa: E402
 LUSTRE_BW = 200e6  # simulated shared-filesystem aggregate bandwidth
 
 
+def bench_policy(**flat):
+    """Shared benchmark ``CheckpointPolicy``: a generous coordinator
+    keepalive (this box's bimodal fsync stalls must not read as dead
+    writer ranks) plus flat overrides — the benches' one construction
+    idiom, mirroring the tests' shared fixture."""
+    from repro.core.policy import CheckpointPolicy
+    flat.setdefault("keepalive_s", 120.0)
+    return CheckpointPolicy().with_overrides(**flat)
+
+
 def bb_store(tag: str) -> TieredStore:
     root = Path("/dev/shm") if os.access("/dev/shm", os.W_OK) \
         else Path(tempfile.gettempdir())
@@ -111,10 +121,10 @@ def io_sweep_compare(prefix: str, *, agg: int, shards: int, seed: int,
         for threads in (1, io_threads):
             tmp = Path(tempfile.mkdtemp())
             store = TieredStore(Tier("disk", tmp / f"io{threads}"))
-            mgr = CheckpointManager(store, n_writers=1, codec="raw",
-                                    retain=retain, mode="incremental",
-                                    chunk_size=chunk_size, chunking=chunking,
-                                    io_threads=threads, keepalive_s=120.0)
+            mgr = CheckpointManager(store, policy=bench_policy(
+                n_writers=1, codec="raw", retain=retain,
+                mode="incremental", chunk_size=chunk_size,
+                chunking=chunking, io_threads=threads))
             t0 = time.monotonic()
             mgr.save(state, 1)
             save_s = time.monotonic() - t0

@@ -15,6 +15,8 @@ from .drain import DrainCounters, quiesce_device_state
 from .errors import (AbortedError, CASError, CkptError, CodecUnavailableError,
                      CorruptShardError, MissingShardError, NamespaceError,
                      NoCheckpointError, RegistryMismatchError, SpaceError)
+from .policy import (CheckpointPolicy, ChunkingPolicy, CodecPolicy,
+                     DurabilityPolicy, PipelinePolicy)
 from .preempt import PreemptionGuard, PreemptQueue
 from .restore_path import ReadCache, RestorePlan, RestoreSession
 from .save_path import PersistStage, SavePlan, SaveSession
@@ -25,11 +27,13 @@ from .storage import Tier, TieredStore, default_store
 
 __all__ = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
-    "ChunkIOExecutor", "ChunkStore", "CkptError", "CodecUnavailableError",
+    "CheckpointPolicy", "ChunkIOExecutor", "ChunkStore", "ChunkingPolicy",
+    "CkptError", "CodecPolicy", "CodecUnavailableError",
     "CorruptShardError", "CrashInjector", "CrashPoint",
-    "DrainCounters", "GearChunker", "GearScanner", "MissingShardError",
-    "NamespaceError",
-    "NoCheckpointError", "PersistStage", "PreemptQueue", "PreemptionGuard",
+    "DrainCounters", "DurabilityPolicy", "GearChunker", "GearScanner",
+    "MissingShardError", "NamespaceError",
+    "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
+    "PreemptionGuard",
     "ReadCache", "RegistryMismatchError", "RestorePlan", "RestoreSession",
     "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
     "abstract_train_state", "config_digest", "default_store",

@@ -119,6 +119,15 @@ class ChunkStore:
         # benchmark baseline.
         self._exec = ChunkIOExecutor(io_threads)
 
+    @classmethod
+    def from_policy(cls, store: TieredStore, policy) -> "ChunkStore":
+        """The chunk store a ``CheckpointPolicy`` describes: chunk size
+        from the chunking section, buddy replicas from durability, pool
+        width from the pipeline section."""
+        return cls(store, chunk_size=int(policy.chunking.chunk_size),
+                   replicas=policy.durability.replicas,
+                   io_threads=policy.pipeline.io_threads)
+
     # ------------------------------------------------------------------
     # objects
     # ------------------------------------------------------------------

@@ -89,6 +89,17 @@ class GearChunker:
                                    int(self.mask_loose),
                                    backend=scan_backend)
 
+    @classmethod
+    def from_policy(cls, chunking, *, serial: bool = False):
+        """The chunker a ``ChunkingPolicy`` describes — ``None`` for the
+        fixed scheme. The serial engine pins the numpy oracle scan (it IS
+        the PR-1 baseline; accelerated scans must not leak into it)."""
+        if chunking.scheme != "cdc":
+            return None
+        return cls(int(chunking.chunk_size),
+                   min_size=chunking.min_size, max_size=chunking.max_size,
+                   scan_backend="numpy" if serial else chunking.scan_backend)
+
     # ------------------------------------------------------------------
     def _candidates(self, payload):
         """All candidate cut *end offsets* (strict set, loose set)."""

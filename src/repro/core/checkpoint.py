@@ -22,15 +22,18 @@ overlap subsequent training steps; a preemption signal can request a
 fast-flush (skip stage-3 maintenance, never the commit or the drain) so
 the round lands and the process exits promptly.
 
-Save modes (``mode=``): ``full`` writes every shard inline (v2 layout);
-``incremental`` chunks encoded payloads into the content-addressed store
-(``core.cas``) — unchanged chunks dedup to zero write cost. Chunking
-schemes (``chunking=``): ``fixed`` or ``cdc`` (FastCDC-style,
-``core.cdc``, with a selectable candidate-scan backend ``scan_backend=``
-— numpy oracle / XLA / Pallas, ``core.cdc_scan``). Manifest format v5
-(CDC shard records carry their chunk length lists, so restore places
-every scheme's reads directly); v4/v3/v2 stay fully readable, including
-mixed histories.
+Configuration is a composed, frozen ``CheckpointPolicy`` (``core.policy``):
+``mode="full"`` writes every shard inline (v2 layout); ``incremental``
+chunks encoded payloads into the content-addressed store (``core.cas``) —
+unchanged chunks dedup to zero write cost. The chunking section picks
+``fixed`` or ``cdc`` (FastCDC-style, ``core.cdc``, with a selectable
+candidate-scan backend — numpy oracle / XLA / Pallas, ``core.cdc_scan``);
+the pipeline section sizes the chunk pool and the bounded multi-round
+persist queue (``persist_queue_depth``, ``host_bytes_budget``). Manifest
+format v6 embeds the writer's effective policy, so restore and the
+inspector adopt the writer's chunking/scan/codec settings with zero
+caller configuration; v5 (chunk length lists for direct placement),
+v4, v3 and v2 stay fully readable, including mixed histories.
 
 Restore pipeline (elastic, P2/P6): manifest → RestorePlan (per-leaf jobs
 against the CURRENT sharding, ``elastic.plan_reads``) → RestoreSession
@@ -45,20 +48,22 @@ import json
 import shutil
 import time
 from collections import Counter
+from dataclasses import replace
 from pathlib import Path
 
 import jax
 import numpy as np
 
-from . import atomic, cas, cdc, cdc_scan
+from . import atomic, cas, cdc
 from . import codec as codec_mod
 from . import save_path
 from .atomic import NO_CRASH, CrashInjector
-from .chunk_exec import DEFAULT_IO_THREADS, ChunkIOExecutor, cpu_cap
+from .chunk_exec import ChunkIOExecutor, cpu_cap
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
-from .errors import (AbortedError, CkptError, CodecUnavailableError,
-                     NoCheckpointError)
+from .errors import (AbortedError, CkptError, NoCheckpointError, warn)
+from .policy import (CHUNKINGS, MODES, CheckpointPolicy,
+                     policy_from_manifest)
 from .registry import build_registry, registry_json, validate_against
 from .restore_path import (ReadCache, RestorePlan, RestoreSession,
                            unpack_shard)
@@ -66,14 +71,15 @@ from .save_path import PersistStage, pack_shard, write_shards
 from .split_state import leaf_paths
 from .storage import TieredStore
 
-FORMAT_VERSION = 5
+FORMAT_VERSION = 6
 # v2 = full-mode inline shards only; v3 = chunked records, implicitly
 # fixed-size chunking (no per-record scheme field); v4 = chunking scheme
 # per shard record; v5 = CDC shard records additionally carry their chunk
-# LENGTH list (restore-side direct placement for content-defined chunks)
-READABLE_FORMATS = (2, 3, 4, 5)
-MODES = ("full", "incremental")
-CHUNKINGS = ("fixed", "cdc")
+# LENGTH list (restore-side direct placement for content-defined chunks);
+# v6 = the manifest embeds the writer's effective CheckpointPolicy, so
+# restore and the inspector adopt the writer's chunking/scan/codec
+# settings with zero caller configuration
+READABLE_FORMATS = (2, 3, 4, 5, 6)
 
 # inspector/test compatibility: the shard codecs live with their pipeline
 # stages now, but these names have external users
@@ -82,71 +88,38 @@ _unpack_shard = unpack_shard
 
 
 class CheckpointManager:
-    def __init__(self, store: TieredStore, *, n_writers: int = 4,
-                 codec: str | None = None, params_codec: str | None = None,
-                 replicas: int = 1, retain: int = 3,
-                 keepalive_s: float = 10.0, save_timeout_s: float = 600.0,
-                 max_retries: int = 1, async_drain_to_slow: bool = True,
-                 mode: str = "full",
-                 chunk_size: int = cas.DEFAULT_CHUNK_SIZE,
-                 chunking: str = "fixed",
-                 scan_backend: str = "auto",
-                 io_threads: int = DEFAULT_IO_THREADS):
-        if mode not in MODES:
-            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
-        if chunking not in CHUNKINGS:
-            raise ValueError(f"chunking must be one of {CHUNKINGS}, "
-                             f"got {chunking!r}")
-        if scan_backend not in cdc_scan.BACKENDS:
-            raise ValueError(
-                f"scan_backend must be one of {cdc_scan.BACKENDS}, "
-                f"got {scan_backend!r}")
+    """``CheckpointManager(store, policy=CheckpointPolicy(...))`` is the
+    canonical constructor; every historical flat kwarg still works behind
+    a single ``DeprecationWarning`` (``CheckpointPolicy.from_legacy_kwargs``
+    maps each onto its policy field with identical validation)."""
+
+    def __init__(self, store: TieredStore,
+                 policy: CheckpointPolicy | None = None, **legacy):
+        if legacy:
+            if policy is not None:
+                raise TypeError(
+                    "pass either policy=CheckpointPolicy(...) or legacy "
+                    "flat kwargs, not both")
+            policy = CheckpointPolicy.from_legacy_kwargs(**legacy)
+        elif policy is None:
+            policy = CheckpointPolicy()
         self.store = store
-        self.n_writers = n_writers
-        self.mode = mode
-        self.chunking = chunking
-        # chunking="cdc": chunk_size becomes the content-defined AVERAGE
-        # (min/avg/max = size/4, size, size*4 — FastCDC normalization);
-        # the chunker is stateless and shared by every writer rank.
-        # scan_backend picks the candidate-scan engine (core.cdc_scan);
-        # the serial engine is pinned to the numpy oracle — it IS the
-        # PR-1 baseline, and accelerated scans must not leak into it
-        self._chunker = (cdc.GearChunker(
-            chunk_size,
-            scan_backend="numpy" if io_threads <= 1 else scan_backend)
-            if chunking == "cdc" else None)
-        # None → best codec the environment supports (zstd needs the
-        # optional `zstandard` package; raw always works)
-        self.codec = codec or codec_mod.default_codec()
-        self.params_codec = params_codec or self.codec  # int8 opt-in
-        for c in {self.codec, self.params_codec}:
-            if c not in codec_mod.CODECS:
-                raise ValueError(f"unknown codec {c!r}")
-            if not codec_mod.available(c):
-                # fail fast with the real cause — otherwise every writer
-                # rank dies on encode and the save aborts with an opaque
-                # "no surviving writer ranks"
-                raise CodecUnavailableError(
-                    "codec requires the optional `zstandard` package "
-                    "(pip install 'repro[compress]')", codec=c)
-        self.replicas = replicas                    # 2 = buddy redundancy
-        self.retain = retain
-        self.save_timeout_s = save_timeout_s
-        # node-failure recovery: a failed/dead writer rank is excluded and
-        # its shards are redistributed to survivors, up to max_retries times
-        self.max_retries = max_retries
-        self.coordinator = CheckpointCoordinator(n_writers,
-                                                 keepalive_s=keepalive_s)
+        self.policy = policy
+        io_threads = policy.pipeline.io_threads
+        # retain is the one knob operators tune at runtime (drop history
+        # before an explicit gc()), so it stays a plain mutable attribute
+        self.retain = policy.durability.retain
+        self.coordinator = CheckpointCoordinator(
+            policy.n_writers, keepalive_s=policy.durability.keepalive_s)
         self.counters = DrainCounters()
         # always constructed: a full-mode manager must still RESTORE
         # checkpoints written incrementally (and vice versa)
-        self.chunks = cas.ChunkStore(store, chunk_size=chunk_size,
-                                     replicas=replicas,
-                                     io_threads=io_threads)
+        self.chunks = cas.ChunkStore.from_policy(store, policy)
         # background drains reuse the chunk pool so fast-tier reads overlap
         # throttled slow-tier writes (first manager on a store wins)
         if getattr(store, "io_executor", None) is None:
             store.io_executor = self.chunks.executor
+        store.apply_pipeline_policy(policy.pipeline)
         # leaf-level restore fan-out runs on its OWN pool: leaf tasks block
         # on chunk-prefetch futures, so sharing the chunk pool could
         # deadlock with every worker parked on a nested wait. Capped at
@@ -154,13 +127,73 @@ class CheckpointManager:
         # CPU/bandwidth bound, where extra threads only contend
         self._restore_exec = ChunkIOExecutor(
             min(io_threads, cpu_cap()) if io_threads > 1 else io_threads)
-        self._persist = PersistStage()
-        self._cache = ReadCache()
+        # the multi-round persist queue: the serial engine is pinned to
+        # depth 1 (it IS the PR-1 baseline)
+        self._persist = PersistStage(
+            depth=policy.pipeline.effective_queue_depth,
+            host_bytes_budget=policy.pipeline.host_bytes_budget)
+        self._cache = ReadCache(policy.pipeline.read_cache_bytes)
         self._restore = RestoreSession(store, self.chunks,
                                        self._restore_exec, self._cache)
         self._manifest_refs_cache: dict = {}   # (tier, step) → Counter
         self.last_report: dict = {}
         self.last_gc_report: dict = {}
+        self._bind_write_policy(policy)
+
+    def _bind_write_policy(self, policy: CheckpointPolicy):
+        """(Re)bind the write-side engines — codec resolution and the CDC
+        chunker — to `policy`. Called at construction and by manifest-v6
+        policy adoption on restore (pipeline/durability are never adopted:
+        pool widths and failure clocks belong to THIS process). Atomic:
+        every engine is built before anything is assigned, so a policy
+        that parses but can't build (cdc below the scan window, an
+        unavailable codec) leaves the manager exactly as it was."""
+        # None → best codec the environment supports (zstd needs the
+        # optional `zstandard` package; raw always works); resolution
+        # fails fast with the real cause — otherwise every writer rank
+        # dies on encode and the save aborts with an opaque "no surviving
+        # writer ranks"
+        codec, params_codec = policy.codec.resolved()
+        # chunking="cdc": chunk_size becomes the content-defined AVERAGE
+        # (min/avg/max = size/4, size, size*4 — FastCDC normalization);
+        # the chunker is stateless and shared by every writer rank.
+        # scan_backend picks the candidate-scan engine (core.cdc_scan);
+        # the serial engine is pinned to the numpy oracle — it IS the
+        # PR-1 baseline, and accelerated scans must not leak into it
+        chunker = cdc.GearChunker.from_policy(
+            policy.chunking, serial=policy.pipeline.serial)
+        self.policy = policy
+        self.codec, self.params_codec = codec, params_codec
+        self._chunker = chunker
+        self.chunks.chunk_size = int(policy.chunking.chunk_size)
+
+    # ---- policy-backed views (the pre-policy attribute surface) ----
+    @property
+    def mode(self) -> str:
+        return self.policy.mode
+
+    @property
+    def chunking(self) -> str:
+        return self.policy.chunking.scheme
+
+    @property
+    def n_writers(self) -> int:
+        return self.policy.n_writers
+
+    @property
+    def replicas(self) -> int:
+        return self.policy.durability.replicas
+
+    @property
+    def max_retries(self) -> int:
+        """Node-failure recovery: a failed/dead writer rank is excluded
+        and its shards redistributed to survivors, up to this many
+        times."""
+        return self.policy.durability.max_retries
+
+    @property
+    def save_timeout_s(self) -> float:
+        return self.policy.durability.save_timeout_s
 
     def close(self):
         """Drain async work and tear down the IO pools (idempotent)."""
@@ -175,18 +208,51 @@ class CheckpointManager:
     def save(self, state, step: int, *, extra: dict | None = None,
              blocking: bool = True, crash: CrashInjector = NO_CRASH) -> dict:
         """Checkpoint `state` at `step`. With blocking=False only the
-        device→host snapshot is synchronous; chunk/hash/write/2PC-COMMIT
-        run on the persist stage and overlap subsequent training steps
-        (the drain protocol guarantees quiescence before the next round)."""
+        device→host snapshot (plus queue admission, at
+        ``persist_queue_depth>1``) is synchronous; chunk/hash/write/
+        2PC-COMMIT run on the persist stage and overlap subsequent
+        training steps. At depth 1 the drain protocol guarantees
+        quiescence before the next round; deeper queues admit round N+1's
+        snapshot while round N persists, gated by the host byte budget."""
         t0 = time.monotonic()
-        # P4: quiescence before snapshot
-        self.wait()                                  # previous round drained
-        wait_s = quiesce_device_state(state)
-        registry = build_registry(state)
-        items = self._snapshot(state)
-        snap_s = time.monotonic() - t0
-        total = sum(a.nbytes for _, _, a in items)
-        self.store.fast.preflight(total // max(self._est_ratio(), 1))
+        queued = (not blocking) and self._persist.depth > 1
+        est = 0
+        admit_s = 0.0
+        if queued:
+            # multi-round persist queue: block only for ADMISSION — a free
+            # in-flight slot under the host byte budget — so round N+1
+            # snapshots while round N persists. Estimated from device
+            # metadata because the budget gate must run BEFORE this
+            # round's host copy exists. A failed earlier round surfaces
+            # HERE (depth-1 parity: its wait() raises on the next save) —
+            # never silently, checkpoints after it would be a lie.
+            self._persist.raise_pending()
+            est = save_path.estimate_snapshot_bytes(state)
+            admit_s = self._persist.admit(est)
+        else:
+            # P4: quiescence before snapshot (depth-1 behaviour — and the
+            # serial engine's only path: byte-for-byte the PR-1 baseline)
+            self.wait()                              # previous round drained
+        try:
+            wait_s = quiesce_device_state(state)
+            registry = build_registry(state)
+            items = self._snapshot(state)
+            snap_s = time.monotonic() - t0
+            total = sum(a.nbytes for _, _, a in items)
+            # P8 preflight must see the WHOLE queue's unwritten footprint:
+            # earlier admitted rounds' chunks may not have hit the tier
+            # yet, so their snapshot bytes (minus this round's own
+            # reservation) are added to the requirement
+            pending = max(self._persist.inflight_bytes - est, 0) \
+                if queued else 0
+            self.store.fast.preflight(
+                (total + pending) // max(self._est_ratio(), 1))
+        except BaseException:
+            if queued:
+                # the admission reservation must not leak — a stuck slot
+                # would wedge every later admit() at the depth bound
+                self._persist.release(est)
+            raise
         self.counters.enqueue(total)
 
         # exactly-once counter drain for this round: the abort path inside
@@ -215,12 +281,85 @@ class CheckpointManager:
         self._persist.submit(
             lambda: self._write_round(*args, overlapped=True),
             # counters must still drain or the trainer deadlocks
-            on_error=lambda e: commit_total())
+            on_error=lambda e: commit_total(),
+            nbytes=est, reserved=queued)
         return {"step": step, "async": True, "snapshot_s": snap_s,
+                "admit_s": admit_s,
                 "blocking_s": time.monotonic() - t0, "bytes": total}
 
     def _est_ratio(self):
         return 2 if self.codec != "raw" else 1
+
+    def _effective_policy_dict(self) -> dict:
+        """The policy block a v6 manifest embeds: ``self.policy`` with the
+        codec section pinned to the RESOLVED codecs (a reader must see
+        what was written, not this writer's "best available")."""
+        pd = self.policy.to_dict()
+        pd["codec"] = {"codec": self.codec,
+                       "params_codec": self.params_codec}
+        return pd
+
+    def _maybe_adopt_manifest_policy(self, manifest: dict, step: int):
+        """Manifest-v6 policy reconciliation: when the caller's
+        chunking/codec config differs from what the checkpoint's writer
+        recorded, the MANIFEST wins — restore itself is record-driven
+        either way, but a drifted caller would silently mis-deduplicate
+        every FUTURE save against the restored history (new chunk grid →
+        zero dedup). A corrupted policy block degrades to a warning, never
+        a failed restore."""
+        if int(manifest.get("format", 0)) < 6:
+            return
+        try:
+            written = policy_from_manifest(manifest)
+        except Exception as e:  # noqa — untrusted block, any shape
+            warn("CKPT_W_POLICY",
+                 "manifest carries an unreadable policy block; restoring "
+                 "on the caller's policy (shard records are "
+                 "self-describing)", step=step,
+                 error=f"{type(e).__name__}: {e}")
+            return
+        if written is None:
+            return
+        adopted = []
+        new_chunking = self.policy.chunking
+        if written.chunking != new_chunking:
+            new_chunking = written.chunking
+            adopted.append("chunking")
+        new_codec = self.policy.codec
+        wc, wp = written.codec.codec, written.codec.params_codec
+        if wc is not None and \
+                (wc, wp or wc) != (self.codec, self.params_codec):
+            if all(codec_mod.available(c) for c in {wc, wp or wc}):
+                new_codec = written.codec
+                adopted.append("codec")
+            else:
+                warn("CKPT_W_POLICY",
+                     "checkpoint writer's codec is unavailable in this "
+                     "environment; keeping the caller's codec",
+                     writer_codec=wc, step=step)
+        if not adopted:
+            return
+        warn("CKPT_W_POLICY",
+             "caller policy differs from the checkpoint writer's; "
+             "adopting the manifest's settings so future saves keep "
+             "deduplicating against this history",
+             adopted=adopted, step=step)
+        # queued persist rounds read the live chunker/chunk_size: quiesce
+        # them before the rebind, or an in-flight round would chunk on two
+        # grids and record bounds its records weren't produced with
+        self.wait()
+        try:
+            self._bind_write_policy(replace(self.policy,
+                                            chunking=new_chunking,
+                                            codec=new_codec))
+        except Exception as e:  # noqa — e.g. bounds GearChunker rejects
+            # a block that PARSES but can't build an engine (cdc with a
+            # sub-window average, min > avg, …) must also degrade to a
+            # warning — restore never depends on the write-side engines
+            warn("CKPT_W_POLICY",
+                 "writer policy is unusable in this process; keeping the "
+                 "caller's policy", step=step,
+                 error=f"{type(e).__name__}: {e}")
 
     def wait(self):
         """Drain the persist stage (two-counter equality, P4)."""
@@ -290,6 +429,10 @@ class CheckpointManager:
                               self._chunker.max_size]
                              if incremental and self._chunker is not None
                              else None),
+            # v6: the writer's EFFECTIVE policy (codec resolved) rides the
+            # manifest, so a restarted job adopts the writer's
+            # chunking/scan/codec settings with zero caller configuration
+            "policy": self._effective_policy_dict(),
             "leaves": leaves,
             "registry": registry_json(registry),
             "extra": extra,
@@ -429,6 +572,9 @@ class CheckpointManager:
             raise NoCheckpointError("no committed checkpoint found",
                                     root=str(self.store.root))
         manifest = self.load_manifest(step)
+        # v6: the writer's recorded policy wins over a mismatched caller —
+        # logged reconciliation, and future saves dedup against history
+        self._maybe_adopt_manifest_policy(manifest, step)
         step_dir = atomic.committed_dir(Path("."), step).name
 
         flat, treedef = jax.tree_util.tree_flatten(abstract_state)

@@ -103,9 +103,14 @@ class RestorePlan:
     numpy dtype (resolved on the main thread — pool workers never touch
     JAX dtype machinery)."""
 
-    def __init__(self, jobs: list, step_dir: str):
+    def __init__(self, jobs: list, step_dir: str,
+                 written_policy: dict | None = None):
         self.jobs = jobs        # (name, rec, sds, sharding, np_dtype)
         self.step_dir = step_dir
+        # manifest v6: the writer's recorded policy block rides the plan
+        # (restore itself is record-driven; the manager adopts this for
+        # FUTURE saves so dedup survives a config-drifted restart)
+        self.written_policy = written_policy
 
     @classmethod
     def build(cls, manifest: dict, step_dir: str, names: list, flat: list,
@@ -120,7 +125,9 @@ class RestorePlan:
                                         leaf=name, step=step)
             np_dtype = np.asarray(jnp.zeros((), sds.dtype)).dtype
             jobs.append((name, rec, sds, sharding, np_dtype))
-        return cls(jobs, step_dir)
+        pol = manifest.get("policy")
+        return cls(jobs, step_dir,
+                   written_policy=pol if isinstance(pol, dict) else None)
 
     @staticmethod
     def leaf_ranges(shape, sharding) -> list:

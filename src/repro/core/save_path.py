@@ -28,6 +28,7 @@ degrades to the original chunk-at-a-time ``put_payload`` calls.
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from collections import Counter, deque
 from concurrent.futures import wait as futures_wait
@@ -505,13 +506,13 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
 # snapshot stage (stage 0 — the only blocking part of an overlapped save)
 # ---------------------------------------------------------------------------
 
-def snapshot_items(state, pool) -> list:
-    """Device → host copy; one entry per unique logical shard range.
-    The pipelined engine fans the per-shard host copies out over `pool`
-    (the save-time idle restore pool); the serial engine keeps the
-    original inline copies."""
+def iter_snapshot_shards(state):
+    """One (name, range, device_data) entry per unique logical shard range
+    of `state` (replicated copies save once) — THE enumeration both the
+    snapshot copy and the byte-budget estimate consume: admission must
+    account exactly the bytes the snapshot will pin, so there is one
+    dedup rule, not two that can drift."""
     from .split_state import leaf_paths
-    pending = []
     for name, leaf in leaf_paths(state):
         if hasattr(leaf, "addressable_shards"):
             seen = set()
@@ -522,11 +523,27 @@ def snapshot_items(state, pool) -> list:
                 if key in seen:
                     continue               # replicated copy — save once
                 seen.add(key)
-                pending.append((name, rng, sh.data))
+                yield name, rng, sh.data
         else:
             arr = np.asarray(leaf)
-            rng = ShardRange((0,) * arr.ndim, arr.shape)
-            pending.append((name, rng, arr))
+            yield name, ShardRange((0,) * arr.ndim, arr.shape), arr
+
+
+def estimate_snapshot_bytes(state) -> int:
+    """Host bytes ONE snapshot of `state` will pin. The persist queue's
+    byte-budget admission must run BEFORE the host copy exists, so it
+    gates on this metadata-only walk of ``iter_snapshot_shards`` (exact
+    for the snapshot: same entries, same nbytes)."""
+    return sum(int(data.nbytes)
+               for _, _, data in iter_snapshot_shards(state))
+
+
+def snapshot_items(state, pool) -> list:
+    """Device → host copy of every ``iter_snapshot_shards`` entry. The
+    pipelined engine fans the per-shard host copies out over `pool` (the
+    save-time idle restore pool); the serial engine keeps the original
+    inline copies."""
+    pending = list(iter_snapshot_shards(state))
     hosts = pool.map_ordered(np.asarray, [d for _, _, d in pending])
     return [(name, rng, arr)
             for (name, rng, _), arr in zip(pending, hosts)]
@@ -651,8 +668,16 @@ def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
 class PersistStage:
     """Owns the overlapped persist: ``save(blocking=False)`` hands the
     snapshotted round here and returns; chunk/hash/write/2PC-COMMIT run on
-    this thread while training continues. One round in flight at a time
-    (the drain protocol serializes successive saves).
+    ONE worker thread, in submission order, while training continues.
+
+    ``depth`` bounds how many rounds may be admitted at once (the
+    multi-round persist queue: snapshot round N+1 while round N persists
+    — checkpoint cadence decoupled from persist latency). ``depth=1`` is
+    the PR-3 behaviour, and the serial engine is always pinned there.
+    ``host_bytes_budget`` caps the aggregate host snapshot bytes admitted
+    rounds may pin: ``admit()`` blocks the NEXT snapshot (before its
+    device→host copy exists) rather than letting two full snapshots OOM
+    the host; a lone over-budget round still admits (never deadlocks).
 
     ``request_fast_flush()`` is the preemption hook: a SIGTERM handler (via
     ``PreemptionGuard.add_callback``) flips a flag the in-flight round
@@ -660,21 +685,41 @@ class PersistStage:
     the round commits and the process can exit promptly — the commit
     itself, refcount publication and the slow-tier drain are never
     skipped (durability is the point of the final checkpoint). The flag
-    clears when the flushed round ends. A request with NO round in flight
+    covers every round queued at request time and clears when the queue
+    drains (per-request, not a latch). A request with NO round in flight
     deliberately applies to the next overlapped round (the signal may land
-    during the snapshot, before the persist thread exists); if the process
+    during the snapshot, before the persist worker runs); if the process
     then survives the preemption, the cost is one skipped maintenance
     round — self-healing, since the following round (or an explicit gc())
     retires everything that accumulated."""
 
-    def __init__(self):
+    def __init__(self, depth: int = 1, host_bytes_budget: int | None = None):
+        self.depth = max(int(depth or 1), 1)
+        self.host_bytes_budget = (int(host_bytes_budget)
+                                  if host_bytes_budget else None)
+        self._cv = threading.Condition()
+        self._q: deque = deque()            # (fn, on_error, nbytes)
         self._thread: threading.Thread | None = None
         self._err: BaseException | None = None
+        self._inflight = 0                  # admitted rounds not yet done
+        self._inflight_bytes = 0
         self._fast_flush = threading.Event()
 
     @property
     def active(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        with self._cv:
+            return self._inflight > 0 or bool(self._q)
+
+    @property
+    def inflight(self) -> int:
+        """Rounds currently admitted (reserved + queued + running)."""
+        with self._cv:
+            return self._inflight
+
+    @property
+    def inflight_bytes(self) -> int:
+        with self._cv:
+            return self._inflight_bytes
 
     @property
     def fast_flush_requested(self) -> bool:
@@ -683,30 +728,100 @@ class PersistStage:
     def request_fast_flush(self):
         self._fast_flush.set()
 
-    def submit(self, fn, on_error):
-        """Run ``fn`` on the persist thread; ``on_error(exc)`` runs there
+    def raise_pending(self):
+        """Surface (and clear) a failed round's error NOW. The queued
+        save path calls this before admitting the next round — at depth 1
+        the drain-before-snapshot wait() surfaces persist failures on the
+        very next save, and a deeper queue must not turn that into
+        checkpoints silently failing for the rest of the run."""
+        if self._err is not None:
+            e, self._err = self._err, None
+            raise e
+
+    # -- admission -----------------------------------------------------
+    def admit(self, nbytes: int = 0) -> float:
+        """Block until a queue slot AND the host byte budget admit a round
+        of `nbytes`, then RESERVE both — the caller's snapshot counts
+        against the budget from this moment. Hand the reservation to the
+        queue with ``submit(..., reserved=True)`` or cancel it with
+        ``release()`` if the snapshot fails. An empty stage always admits
+        (a single round larger than the whole budget must run, not
+        deadlock). Returns seconds spent blocked."""
+        nbytes = max(int(nbytes), 0)
+        t0 = time.monotonic()
+        with self._cv:
+            while self._inflight >= self.depth or (
+                    self.host_bytes_budget is not None
+                    and self._inflight > 0
+                    and self._inflight_bytes + nbytes
+                    > self.host_bytes_budget):
+                self._cv.wait()
+            self._inflight += 1
+            self._inflight_bytes += nbytes
+        return time.monotonic() - t0
+
+    def release(self, nbytes: int = 0):
+        """Return an admitted round's slot + bytes (round done, or its
+        snapshot failed before submission)."""
+        with self._cv:
+            self._inflight -= 1
+            self._inflight_bytes -= max(int(nbytes), 0)
+            self._cv.notify_all()
+
+    # -- execution -----------------------------------------------------
+    def submit(self, fn, on_error, nbytes: int = 0, reserved: bool = False):
+        """Queue ``fn`` for the persist worker (FIFO — rounds always
+        commit in submission order); ``on_error(exc)`` runs on the worker
         on failure (the manager uses it to keep the drain counters moving —
-        a stuck counter would deadlock the trainer)."""
-        def entry():
+        a stuck counter would deadlock the trainer). ``reserved=True``
+        consumes an ``admit()`` reservation instead of taking a new
+        slot."""
+        with self._cv:
+            if not reserved:
+                self._inflight += 1
+                self._inflight_bytes += max(int(nbytes), 0)
+            self._q.append((fn, on_error, max(int(nbytes), 0)))
+            if self._thread is None:
+                self._thread = threading.Thread(target=self._run,
+                                                daemon=True)
+                self._thread.start()
+            self._cv.notify_all()
+
+    def _run(self):
+        while True:
+            with self._cv:
+                if not self._q:
+                    # worker retires under the lock — a concurrent submit
+                    # either sees the queue non-empty (we loop) or
+                    # _thread=None (it starts a fresh worker): no round
+                    # can be stranded between the two
+                    self._thread = None
+                    # fast-flush is per-request, not a latch: once every
+                    # flushed round has landed (or died) the next round
+                    # must run full maintenance again, or a survived
+                    # preemption request would disable GC for the rest of
+                    # the process lifetime
+                    self._fast_flush.clear()
+                    self._cv.notify_all()
+                    return
+                fn, on_error, nbytes = self._q.popleft()
             try:
                 fn()
             except BaseException as e:  # noqa — propagated via wait()
-                self._err = e
+                if self._err is None:   # first failure wins
+                    self._err = e
                 on_error(e)
             finally:
-                # fast-flush is per-request, not a latch: once the flushed
-                # round lands (or dies) the next round must run full
-                # maintenance again, or a survived preemption request
-                # would disable GC for the rest of the process lifetime
-                self._fast_flush.clear()
-
-        self._thread = threading.Thread(target=entry, daemon=True)
-        self._thread.start()
+                self.release(nbytes)
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Drain every admitted round, then surface the first error."""
+        with self._cv:
+            while self._inflight > 0 or self._q:
+                self._cv.wait()
+            t = self._thread
+        if t is not None:
+            t.join()
         if self._err is not None:
             e, self._err = self._err, None
             raise e

@@ -142,6 +142,16 @@ class TieredStore:
     def root(self) -> Path:
         return self.fast.root
 
+    def apply_pipeline_policy(self, pipeline) -> "TieredStore":
+        """Adopt a ``PipelinePolicy``'s drain mode. ``async_drain=None``
+        (the default) leaves the store as constructed — the policy only
+        overrides what it explicitly sets, so a store built with
+        ``drain_async=False`` isn't silently flipped by a default
+        policy."""
+        if getattr(pipeline, "async_drain", None) is not None:
+            self.drain_async = bool(pipeline.async_drain)
+        return self
+
     def tiers(self):
         return [t for t in (self.fast, self.slow) if t is not None]
 

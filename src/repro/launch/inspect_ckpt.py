@@ -175,6 +175,40 @@ def _chunk_histogram(root: Path, manifest: dict, deep: bool = False) -> dict:
     return out
 
 
+def _policy_block(manifest: dict, report: dict, out) -> None:
+    """Print the policy a v6 manifest embeds (the writer's effective
+    configuration — what a zero-config restart will adopt). A corrupted
+    block degrades to a WARNING, never a crash: restore does not depend
+    on it (shard records are self-describing), so the inspector must not
+    either. v≤5 manifests simply predate the block."""
+    fmt = int(manifest.get("format", 0))
+    if fmt < 6:
+        out("  policy: not recorded (v≤5)")
+        return
+    try:
+        from ..core.policy import CheckpointPolicy
+        block = manifest.get("policy")
+        if not isinstance(block, dict):
+            raise ValueError("policy block missing or not a mapping")
+        p = CheckpointPolicy.from_dict(block)
+        report["policy"] = p.to_dict()
+        ck, pl, du, co = p.chunking, p.pipeline, p.durability, p.codec
+        out(f"  policy: mode={p.mode} writers={p.n_writers} "
+            f"codec={co.codec or 'auto'}/{co.params_codec or 'auto'}")
+        out(f"    chunking={ck.scheme}@{ck.chunk_size/2**10:.0f}K "
+            f"scan={ck.scan_backend}  io_threads={pl.io_threads} "
+            f"persist_queue={pl.persist_queue_depth}"
+            + (f" host_budget={pl.host_bytes_budget/2**20:.0f}M"
+               if pl.host_bytes_budget else "")
+            + f"  replicas={du.replicas} retain={du.retain}")
+    except Exception as e:  # noqa — untrusted manifest content, any shape
+        report["policy_error"] = f"{type(e).__name__}: {e}"
+        out(f"  ! policy block unreadable ({type(e).__name__}: {e}) — "
+            f"restore is unaffected (shard records are self-describing); "
+            f"zero-config restarts will NOT auto-adopt the writer's "
+            f"settings for this step")
+
+
 def _pending_rounds(root: Path, staging: list) -> list:
     """In-flight (pending-stage) rounds: staging dirs whose PENDING marker
     still parses. An overlapped save(blocking=False) legitimately keeps
@@ -235,6 +269,7 @@ def inspect(root: Path, step=None, verify=False, out=print):
         f"mode={manifest.get('mode', 'full')}  "
         f"arch={extra.get('arch', '?')}  "
         f"config={extra.get('config_digest', '?')[:12]}")
+    _policy_block(manifest, report, out)
     lh = extra.get("lower_half", {})
     if lh:
         out(f"  lower half at save (informational): mesh="

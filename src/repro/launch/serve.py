@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config, reduced
 from ..core.checkpoint import CheckpointManager
+from ..core.policy import CheckpointPolicy
 from ..core.storage import default_store
 from ..models import Model
 from ..train.steps import make_serve_fns
@@ -45,7 +46,7 @@ def run(arch: str, *, n_requests=8, prompt_len=32, gen_len=32,
     prefill_fn = jax.jit(prefill_fn, static_argnames=('cache_len',))
     decode_fn = jax.jit(decode_fn)
     manager = CheckpointManager(default_store(f"{workdir}/{arch}"),
-                                n_writers=2)
+                                policy=CheckpointPolicy(n_writers=2))
 
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (n_requests, prompt_len),

@@ -41,6 +41,14 @@ def main(argv=None):
                          "for large payloads, numpy oracle below)")
     ap.add_argument("--io-threads", type=int, default=4,
                     help="chunk-IO pipeline width (1 = serial engine)")
+    ap.add_argument("--persist-queue-depth", type=int, default=1,
+                    help="async checkpoint rounds in flight at once "
+                         "(>1 = snapshot round N+1 while round N "
+                         "persists)")
+    ap.add_argument("--host-bytes-budget", type=int, default=None,
+                    help="cap on aggregate host snapshot bytes queued "
+                         "rounds may pin (admission blocks instead of "
+                         "OOMing the host)")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--writers", type=int, default=4)
     ap.add_argument("--grad-accum", type=int, default=1)
@@ -71,7 +79,9 @@ def main(argv=None):
         params_codec=args.params_codec, ckpt_mode=args.ckpt_mode,
         chunk_size=args.chunk_size, chunking=args.chunking,
         scan_backend=args.scan_backend,
-        io_threads=args.io_threads, replicas=args.replicas,
+        io_threads=args.io_threads,
+        persist_queue_depth=args.persist_queue_depth,
+        host_bytes_budget=args.host_bytes_budget, replicas=args.replicas,
         n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed)
     trainer = Trainer(cfg, tcfg).init_or_restore()
     report = trainer.fit(args.steps)

@@ -17,6 +17,7 @@ import jax
 import numpy as np
 
 from ..core.checkpoint import CheckpointManager
+from ..core.policy import CheckpointPolicy
 from ..core.preempt import PreemptionGuard
 from ..core.split_state import (abstract_train_state, config_digest,
                                 init_train_state, lower_half_descriptor,
@@ -49,6 +50,8 @@ class TrainerConfig:
     chunking: str = "fixed"         # "cdc" = content-defined (shift-tolerant)
     scan_backend: str = "auto"      # cdc candidate scan engine (cdc_scan)
     io_threads: int = 4             # chunk-IO pipeline width (1 = serial)
+    persist_queue_depth: int = 1    # async rounds in flight (>1 = queue)
+    host_bytes_budget: int | None = None  # cap on queued snapshot bytes
     replicas: int = 1
     seed: int = 0
     log_every: int = 10
@@ -79,12 +82,20 @@ class Trainer:
         store = store or default_store(tcfg.workdir,
                                        burst_buffer=tcfg.burst_buffer,
                                        lustre_bw=tcfg.lustre_bw)
-        self.manager = CheckpointManager(
-            store, n_writers=tcfg.n_writers, codec=tcfg.codec,
-            params_codec=tcfg.params_codec, replicas=tcfg.replicas,
-            retain=tcfg.retain, mode=tcfg.ckpt_mode,
+        # TrainerConfig's flat checkpoint fields compose into the policy
+        # object (the canonical constructor), with REPRO_CKPT_* env
+        # overrides merged last — an operator can retune a queued job's
+        # checkpoint pipeline without editing launch scripts
+        policy = CheckpointPolicy().with_overrides(
+            mode=tcfg.ckpt_mode, n_writers=tcfg.n_writers,
+            codec=tcfg.codec, params_codec=tcfg.params_codec,
+            replicas=tcfg.replicas, retain=tcfg.retain,
             chunk_size=tcfg.chunk_size, chunking=tcfg.chunking,
-            scan_backend=tcfg.scan_backend, io_threads=tcfg.io_threads)
+            scan_backend=tcfg.scan_backend, io_threads=tcfg.io_threads,
+            persist_queue_depth=tcfg.persist_queue_depth,
+            host_bytes_budget=tcfg.host_bytes_budget)
+        self.manager = CheckpointManager(
+            store, policy=CheckpointPolicy.from_env(base=policy))
         # ---- upper half ----
         self.state = None
         self.data_state: DataState | None = None

@@ -12,6 +12,25 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def make_ckpt_policy(**flat):
+    """The tests' shared CheckpointPolicy factory: keepalive_s=60 by
+    default — suite-wide fsync stalls on this box's bimodal-latency 9p
+    filesystem can exceed the production 10 s keepalive, and a spurious
+    keepalive abort is not what any of these tests probe. Flat overrides
+    use the legacy kwarg names (plus the newer pipeline knobs), so direct
+    construction sites migrate one-for-one:
+    ``CheckpointManager(store, policy=make_ckpt_policy(mode=...))``."""
+    from repro.core.policy import CheckpointPolicy
+    flat.setdefault("keepalive_s", 60.0)
+    return CheckpointPolicy().with_overrides(**flat)
+
+
+@pytest.fixture()
+def ckpt_policy():
+    """Fixture form of ``make_ckpt_policy`` for test-function sites."""
+    return make_ckpt_policy
+
+
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,94 @@
+"""Public-API snapshot: the exported names and the signatures of the
+policy objects and ``CheckpointManager`` are pinned here so future kwarg
+creep (the 14-kwarg soup this redesign replaced) fails loudly in CI
+instead of accreting silently. Changing the public surface is allowed —
+but it must be a deliberate edit to THIS file, reviewed as such."""
+import inspect
+
+import repro.core as core
+from repro.core.chunk_exec import DEFAULT_IO_THREADS
+from repro.core.policy import (CheckpointPolicy, ChunkingPolicy,
+                               CodecPolicy, DurabilityPolicy,
+                               LEGACY_KWARGS, PipelinePolicy)
+
+EXPORTED = [
+    "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
+    "CheckpointPolicy", "ChunkIOExecutor", "ChunkStore", "ChunkingPolicy",
+    "CkptError", "CodecPolicy", "CodecUnavailableError",
+    "CorruptShardError", "CrashInjector", "CrashPoint",
+    "DrainCounters", "DurabilityPolicy", "GearChunker", "GearScanner",
+    "MissingShardError", "NamespaceError",
+    "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
+    "PreemptionGuard",
+    "ReadCache", "RegistryMismatchError", "RestorePlan", "RestoreSession",
+    "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
+    "abstract_train_state", "config_digest", "default_store",
+    "init_train_state", "leaf_paths", "lower_half_descriptor",
+    "quiesce_device_state", "state_shardings",
+]
+
+
+def test_core_exports_are_pinned():
+    assert sorted(core.__all__) == sorted(EXPORTED)
+    for name in EXPORTED:
+        assert hasattr(core, name), name
+
+
+def test_checkpoint_manager_signature_is_policy_first():
+    """The canonical constructor is (store, policy=None, **legacy) — a new
+    flat kwarg can only arrive via the legacy shim, which this test and
+    the LEGACY_KWARGS freeze below make a deliberate act."""
+    params = list(inspect.signature(
+        core.CheckpointManager.__init__).parameters.values())
+    names = [p.name for p in params]
+    assert names == ["self", "store", "policy", "legacy"]
+    assert params[2].default is None
+    assert params[3].kind is inspect.Parameter.VAR_KEYWORD
+
+
+def test_legacy_kwargs_are_frozen():
+    assert LEGACY_KWARGS == (
+        "n_writers", "codec", "params_codec", "replicas", "retain",
+        "keepalive_s", "save_timeout_s", "max_retries",
+        "async_drain_to_slow", "mode", "chunk_size", "chunking",
+        "scan_backend", "io_threads")
+
+
+def _fields(cls):
+    return {p.name: p.default
+            for p in inspect.signature(cls).parameters.values()}
+
+
+def test_policy_fields_and_defaults_are_pinned():
+    assert _fields(ChunkingPolicy) == {
+        "scheme": "fixed", "chunk_size": 1 << 20, "min_size": None,
+        "max_size": None, "scan_backend": "auto"}
+    assert _fields(PipelinePolicy) == {
+        "io_threads": DEFAULT_IO_THREADS, "persist_queue_depth": 1,
+        "host_bytes_budget": None, "read_cache_bytes": 1 << 30,
+        "async_drain": None}
+    assert _fields(DurabilityPolicy) == {
+        "replicas": 1, "retain": 3, "keepalive_s": 10.0,
+        "save_timeout_s": 600.0, "max_retries": 1}
+    assert _fields(CodecPolicy) == {"codec": None, "params_codec": None}
+    top = _fields(CheckpointPolicy)
+    assert list(top) == ["mode", "n_writers", "chunking", "pipeline",
+                         "durability", "codec"]
+    assert top["mode"] == "full" and top["n_writers"] == 4
+
+
+def test_manager_config_surface_reads_from_policy(tmp_path):
+    """The pre-policy attribute surface (mode/chunking/replicas/…) stays
+    readable but is a VIEW of the policy — not independently assignable
+    state that could drift from it."""
+    from repro.core.storage import Tier, TieredStore
+    mgr = core.CheckpointManager(
+        TieredStore(Tier("f", tmp_path)),
+        policy=CheckpointPolicy(mode="incremental",
+                                durability=DurabilityPolicy(
+                                    keepalive_s=60.0, replicas=2)))
+    assert (mgr.mode, mgr.chunking, mgr.replicas) == \
+        ("incremental", "fixed", 2)
+    assert mgr.n_writers == 4 and mgr.max_retries == 1
+    assert mgr.save_timeout_s == 600.0
+    mgr.close()

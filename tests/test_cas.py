@@ -10,6 +10,7 @@ import pytest
 from repro.core import cas
 from repro.core import codec as codec_mod
 from repro.core.cas import ChunkStore, chunk_digest, object_rel, split_payload
+from conftest import make_ckpt_policy
 from repro.core.checkpoint import CheckpointManager
 from repro.core.errors import CorruptShardError, MissingShardError
 from repro.core.storage import Tier, TieredStore
@@ -27,8 +28,9 @@ def _mgr(tmp_path, **kw):
     kw.setdefault("codec", "raw")
     kw.setdefault("n_writers", 3)
     kw.setdefault("chunk_size", 512)
-    kw.setdefault("keepalive_s", 60.0)   # CI fsync stalls ≠ dead ranks
-    return CheckpointManager(_store(tmp_path), mode="incremental", **kw)
+    kw.setdefault("mode", "incremental")
+    # shared test policy: keepalive_s=60 (CI fsync stalls ≠ dead ranks)
+    return CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(**kw))
 
 
 def _state(dtype=jnp.float32):
@@ -196,9 +198,10 @@ def test_cdc_mode_dedups_byte_shifted_leaf_fixed_does_not(tmp_path):
     results = {}
     for chunking in ("fixed", "cdc"):
         mgr = CheckpointManager(
-            _store(tmp_path, chunking), mode="incremental", codec="raw",
-            n_writers=2, chunk_size=1024, chunking=chunking,
-            keepalive_s=60.0)
+            _store(tmp_path, chunking),
+            policy=make_ckpt_policy(mode="incremental", codec="raw",
+                                    n_writers=2, chunk_size=1024,
+                                    chunking=chunking))
         mgr.save(state_of(base), 1)
         rep = mgr.save(state_of(shifted), 2)
         results[chunking] = rep["new_object_bytes"]
@@ -276,9 +279,9 @@ def test_fast_tier_eviction_bounds_burst_buffer_growth(tmp_path):
     the last copy). Without eviction the burst buffer grows O(history)."""
     store = TieredStore(Tier("fast", tmp_path / "fast"),
                         Tier("slow", tmp_path / "slow"), drain_async=False)
-    mgr = CheckpointManager(store, mode="incremental", codec="raw",
-                            n_writers=2, chunk_size=512, retain=1,
-                            keepalive_s=60.0)
+    mgr = CheckpointManager(store, policy=make_ckpt_policy(
+        mode="incremental", codec="raw", n_writers=2, chunk_size=512,
+        retain=1))
     state = _state()
     fast_counts = []
     for s in (1, 2, 3, 4, 5):

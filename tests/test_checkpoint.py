@@ -12,6 +12,7 @@ import pytest
 from repro.core import atomic, cas
 from repro.core import codec as codec_mod
 from repro.core.atomic import CrashInjector, CrashPoint
+from conftest import make_ckpt_policy
 from repro.core.checkpoint import FORMAT_VERSION, CheckpointManager
 from repro.core.elastic import ShardRange, assemble, plan_reads
 from repro.core.errors import (AbortedError, CodecUnavailableError,
@@ -299,15 +300,13 @@ def test_v3_chunked_manifest_restores_and_gcs_under_v4_reader(tmp_path):
     """A v3 incremental checkpoint (chunked records without a chunking
     scheme field) must stay bit-exact restorable AND keep participating in
     the CAS mark set — mixed-history GC must not sweep its chunks."""
-    mgr = CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
-                            mode="incremental", chunk_size=512,
-                            keepalive_s=60.0)
+    mgr = CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        codec="raw", n_writers=2, mode="incremental", chunk_size=512))
     state = _state()
     mgr.save(state, 1)
     _rewrite_manifest_as_v3(mgr.store.root, 1)
-    mgr2 = CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
-                             mode="incremental", chunk_size=512,
-                             keepalive_s=60.0)
+    mgr2 = CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        codec="raw", n_writers=2, mode="incremental", chunk_size=512))
     assert mgr2.load_manifest(1)["format"] == 3
     restored, _ = mgr2.restore(_abstract(state))
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
@@ -327,10 +326,9 @@ def test_mixed_chunking_history_restores_and_gcs(tmp_path):
     """fixed- and cdc-chunked steps interleaved in one store: both restore
     bit-exact, GC keeps both alive, and a fresh save still commits."""
     def mk(chunking):
-        return CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
-                                 mode="incremental", chunk_size=512,
-                                 chunking=chunking, retain=4,
-                                 keepalive_s=60.0)
+        return CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+            codec="raw", n_writers=2, mode="incremental", chunk_size=512,
+            chunking=chunking, retain=4))
 
     s1, s2 = _state(), _state()
     s2["params"]["w"] = s2["params"]["w"] + 1.0
@@ -358,9 +356,10 @@ def test_parallel_restore_matches_serial(tmp_path):
     for mode in ("full", "incremental"):
         root = tmp_path / mode
         state = _state()
-        CheckpointManager(TieredStore(Tier("fast", root)), codec="raw",
-                          n_writers=3, mode=mode, chunk_size=512,
-                          keepalive_s=60.0).save(state, 1)
+        CheckpointManager(TieredStore(Tier("fast", root)),
+                          policy=make_ckpt_policy(
+                              codec="raw", n_writers=3, mode=mode,
+                              chunk_size=512)).save(state, 1)
         serial, _ = CheckpointManager(
             TieredStore(Tier("fast", root)), io_threads=1).restore(
             _abstract(state))

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import make_ckpt_policy
 from repro.core import atomic
 from repro.core.atomic import CrashInjector, CrashPoint
 from repro.core.checkpoint import CheckpointManager
@@ -108,11 +109,10 @@ def test_crash_matrix(tmp_path, mode, chunking, point):
         # is probing. retain=1 so the second save actually drops a step —
         # the per-save path only runs the destructive sweep on retirement,
         # and the GC injection points must fire inside a real sweep.
-        return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
-                                 mode=mode, chunk_size=512,
-                                 chunking=chunking, retain=1,
-                                 max_retries=0, keepalive_s=60.0,
-                                 io_threads=IO_THREADS, **kw)
+        return CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+            n_writers=2, codec="raw", mode=mode, chunk_size=512,
+            chunking=chunking, retain=1, max_retries=0,
+            io_threads=IO_THREADS, **kw))
 
     states = {1: _state(1), 2: _state(2)}
     mk().save(states[1], 1)
@@ -165,11 +165,10 @@ def test_repeated_crashes_then_recovery(tmp_path, mode, chunking):
     must stay consistent through an arbitrary crash history, not just one
     isolated fault."""
     def mk():
-        return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
-                                 mode=mode, chunk_size=512,
-                                 chunking=chunking, retain=2,
-                                 max_retries=0, keepalive_s=60.0,
-                                 io_threads=IO_THREADS)
+        return CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+            n_writers=2, codec="raw", mode=mode, chunk_size=512,
+            chunking=chunking, retain=2, max_retries=0,
+            io_threads=IO_THREADS))
 
     state = _state(0)
     mk().save(state, 1)
@@ -220,10 +219,11 @@ OVERLAP_POINTS = [
 
 
 def _mk_overlap(tmp_path, **kw):
-    return CheckpointManager(_store(tmp_path), n_writers=2, codec="raw",
-                             mode="incremental", chunk_size=512,
-                             retain=1, max_retries=0, keepalive_s=60.0,
-                             io_threads=IO_THREADS, **kw)
+    kw.setdefault("retain", 1)
+    kw.setdefault("io_threads", IO_THREADS)
+    return CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        n_writers=2, codec="raw", mode="incremental", chunk_size=512,
+        max_retries=0, **kw))
 
 
 @pytest.mark.parametrize("point", OVERLAP_POINTS)
@@ -265,6 +265,67 @@ def test_crash_matrix_overlapped_persist(tmp_path, point):
     states[nxt] = _state(nxt)
     assert rec.save(states[nxt], nxt)["step"] == nxt
     _assert_restores(rec, nxt, states[nxt])
+    assert rec.chunks.fsck(rec._live_chunk_refs())["ok"]
+
+
+def test_crash_in_queued_round_leaks_nothing_and_later_round_lands(
+        tmp_path):
+    """Multi-round persist queue axis: round 2 crashes on the persist
+    worker while round 3 is already admitted behind it. The crash must
+    surface on wait() (first error wins), round 3 must still commit
+    (rounds are independent), counters must drain exactly once per round,
+    and recovery GC must find zero leaked CAS objects.
+
+    Queue-specific: the serial engine pins depth to 1 (covered by
+    test_serial_engine_policy_pins_queue_depth_to_one), so this point
+    always runs the pipelined engine even on the CI serial axis."""
+    import threading
+
+    from repro.core import cas as cas_mod
+    mgr = _mk_overlap(tmp_path, persist_queue_depth=2, retain=8,
+                      io_threads=max(IO_THREADS, 2))
+    states = {1: _state(1), 2: _state(2), 3: _state(3)}
+    mgr.save(states[1], 1)
+    # park round 2 inside its persist until round 3 is admitted — the
+    # crash must deterministically fire with a round QUEUED behind it
+    gate = threading.Event()
+    orig = mgr.chunks.store_chunk
+
+    def slow(digest, data, crash=None, dirs=None, dirs_lock=None):
+        gate.wait(10)
+        return orig(digest, data, crash or cas_mod.NO_CRASH, dirs,
+                    dirs_lock)
+
+    mgr.chunks.store_chunk = slow
+    mgr.save(states[2], 2, blocking=False,
+             crash=CrashInjector("before_manifest"))
+    mgr.save(states[3], 3, blocking=False)      # queued behind the crash
+    gate.set()
+    with pytest.raises(CrashPoint):
+        mgr.wait()
+    mgr.wait()                                  # second wait: clean
+    assert mgr.counters.drained()
+    # depth-1 parity: the NEXT queued save surfaces a failed round's
+    # error instead of letting checkpoints silently fail forever
+    mgr2 = _mk_overlap(tmp_path / "p", persist_queue_depth=2,
+                       io_threads=max(IO_THREADS, 2))
+    mgr2.save(states[1], 1)
+    mgr2.save(states[2], 2, blocking=False,
+              crash=CrashInjector("before_manifest"))
+    import time as _time
+    deadline = _time.monotonic() + 10           # let round 2 die quietly
+    while mgr2._persist.active and _time.monotonic() < deadline:
+        _time.sleep(0.01)
+    with pytest.raises(CrashPoint):             # the next save raises
+        mgr2.save(states[3], 3, blocking=False)
+
+    rec = _mk_overlap(tmp_path, persist_queue_depth=2, retain=8)
+    rec.gc()                                    # staging litter + sweep
+    committed = atomic.list_committed_steps(rec.store.root)
+    assert committed == [1, 3]                  # 2 died, 3 landed anyway
+    assert rec.latest_step() == 3
+    for s in committed:
+        _assert_restores(rec, s, states[s])
     assert rec.chunks.fsck(rec._live_chunk_refs())["ok"]
 
 

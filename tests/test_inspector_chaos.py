@@ -121,6 +121,69 @@ def test_inspector_chunk_histogram_vs_cdc_bounds(tmp_path):
     assert any("cdc chunk sizes:" in ln for ln in lines)
 
 
+def test_inspector_prints_v6_policy_block(tmp_path):
+    from conftest import make_ckpt_policy
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)),
+                            policy=make_ckpt_policy(
+                                n_writers=2, mode="incremental",
+                                codec="raw", chunking="cdc",
+                                chunk_size=1024, io_threads=4,
+                                persist_queue_depth=2))
+    mgr.save(_state(), 1)
+    lines = []
+    rep = inspect(mgr.store.root,
+                  out=lambda *a: lines.append(" ".join(str(x) for x in a)))
+    assert rep["ok"]
+    assert rep["policy"]["chunking"]["scheme"] == "cdc"
+    assert rep["policy"]["pipeline"]["persist_queue_depth"] == 2
+    assert any("policy: mode=incremental" in ln for ln in lines)
+    assert any("chunking=cdc@1K" in ln and "persist_queue=2" in ln
+               for ln in lines)
+
+
+def test_inspector_policy_not_recorded_for_old_manifests(tmp_path):
+    """A pre-v6 manifest has no policy block — the inspector says so
+    instead of implying damage."""
+    import json
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2,
+                            mode="incremental", codec="raw", chunk_size=512)
+    mgr.save(_state(), 1)
+    mpath = mgr.store.root / "step_00000001" / atomic.MANIFEST
+    m = json.loads(mpath.read_text())
+    m["format"] = 5
+    m.pop("policy")
+    mpath.write_text(json.dumps(m))
+    lines = []
+    rep = inspect(mgr.store.root,
+                  out=lambda *a: lines.append(" ".join(str(x) for x in a)))
+    assert rep["ok"]
+    assert "policy" not in rep
+    assert any("policy: not recorded (v≤5)" in ln for ln in lines)
+
+
+def test_inspector_corrupted_policy_block_warns_not_crashes(tmp_path):
+    """Chaos: garbage policy blocks of several shapes. The inspector must
+    finish (report, exit-0 semantics unchanged — restore does not depend
+    on the block), surface a warning line, and still verify shards."""
+    import json
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), n_writers=2,
+                            mode="incremental", codec="raw", chunk_size=512)
+    mgr.save(_state(), 1)
+    mpath = mgr.store.root / "step_00000001" / atomic.MANIFEST
+    for garbage in ({"mode": "bogus"}, [1, 2, 3], "zzz",
+                    {"chunking": {"chunk_size": -5}}, None):
+        m = json.loads(mpath.read_text())
+        m["policy"] = garbage
+        mpath.write_text(json.dumps(m))
+        lines = []
+        rep = inspect(mgr.store.root, verify=True,
+                      out=lambda *a: lines.append(" ".join(
+                          str(x) for x in a)))
+        assert rep["ok"] and rep["shards_bad"] == 0
+        assert "policy_error" in rep
+        assert any("policy block unreadable" in ln for ln in lines)
+
+
 def test_verify_deep_pass_skips_step_covered_digests(tmp_path):
     """--verify used to read every chunk the inspected step references
     TWICE (deep CAS pass + per-shard crc/decode pass). The deep pass must

@@ -15,6 +15,7 @@ import jax
 import numpy as np
 import pytest
 
+from conftest import make_ckpt_policy
 from repro.core import atomic, cas
 from repro.core.cas import ChunkStore
 from repro.core.checkpoint import FORMAT_VERSION, CheckpointManager
@@ -38,10 +39,9 @@ def _abstract(state):
 
 
 def _mgr(tmp_path, chunking="cdc", io_threads=4, **kw):
-    return CheckpointManager(_store(tmp_path), codec="raw", n_writers=2,
-                             mode="incremental", chunk_size=512,
-                             chunking=chunking, io_threads=io_threads,
-                             keepalive_s=60.0, **kw)
+    return CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        codec="raw", n_writers=2, mode="incremental", chunk_size=512,
+        chunking=chunking, io_threads=io_threads, **kw))
 
 
 def _manifest_path(root: Path, step: int) -> Path:
@@ -63,7 +63,7 @@ def test_v5_writer_emits_chunk_len_lists(tmp_path):
     state = _state()
     mgr.save(state, 1)
     m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
-    assert m["format"] == FORMAT_VERSION == 5
+    assert m["format"] == FORMAT_VERSION
     assert m["chunk_bounds"] == [mgr._chunker.min_size,
                                  mgr._chunker.avg_size,
                                  mgr._chunker.max_size]
@@ -158,10 +158,14 @@ def _downgrade(root: Path, step: int, fmt: int):
     m = json.loads(mpath.read_text())
     assert m["format"] == FORMAT_VERSION
     m["format"] = fmt
-    m.pop("chunk_bounds", None)
+    if fmt < 6:
+        m.pop("policy", None)
+    if fmt < 5:
+        m.pop("chunk_bounds", None)
     for rec in m["leaves"].values():
         for s in rec["shards"]:
-            s.pop("chunk_lens", None)
+            if fmt < 5:
+                s.pop("chunk_lens", None)
             if fmt < 4:
                 s.pop("chunking", None)
     if fmt < 4:
@@ -183,7 +187,7 @@ def test_v5_reader_restores_v4_history(tmp_path):
     np.testing.assert_array_equal(np.asarray(s1["params"]["w"]),
                                   np.asarray(r1["params"]["w"]))
     mgr2.save(s2, 2)
-    assert mgr2.load_manifest(2)["format"] == 5
+    assert mgr2.load_manifest(2)["format"] == FORMAT_VERSION
     for step, expect in ((1, s1), (2, s2)):
         r, _ = mgr2.restore(_abstract(expect), step=step)
         np.testing.assert_array_equal(np.asarray(expect["params"]["w"]),
@@ -200,6 +204,7 @@ def test_gc_over_mixed_v3_v4_v5_history_leaks_nothing(tmp_path):
         mgr.save(st, step)
     _downgrade(mgr.store.root, 1, 3)
     _downgrade(mgr.store.root, 2, 4)
+    _downgrade(mgr.store.root, 3, 5)
     mgr2 = _mgr(tmp_path, retain=8)
     # an unreferenced orphan object for the sweep to prove itself on
     orphan = mgr2.store.fast.root / cas.object_rel("ff" * 16)
@@ -210,12 +215,13 @@ def test_gc_over_mixed_v3_v4_v5_history_leaks_nothing(tmp_path):
     assert mgr2.chunks.fsck(mgr2._live_chunk_refs())["ok"]
     for step, st in states.items():
         assert mgr2.load_manifest(step)["format"] == {1: 3, 2: 4, 3: 5}[step]
+        assert "policy" not in mgr2.load_manifest(step)
         r, _ = mgr2.restore(_abstract(st), step=step)
         np.testing.assert_array_equal(np.asarray(st["params"]["w"]),
                                       np.asarray(r["params"]["w"]))
 
 
-def test_v6_manifest_rejected(tmp_path):
+def test_future_manifest_format_rejected(tmp_path):
     mgr = _mgr(tmp_path)
     mgr.save(_state(), 1)
     mpath = _manifest_path(mgr.store.root, 1)

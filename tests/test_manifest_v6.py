@@ -1,0 +1,211 @@
+"""Manifest v6: the writer's effective CheckpointPolicy rides the
+manifest, so a zero-config restart adopts the writer's chunking/scan/
+codec settings — a config-drifted caller restores byte-identically AND
+keeps deduplicating future saves against the restored history. A
+corrupted policy block degrades to a warning (shard records are
+self-describing); v≤5 manifests simply predate the block."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_ckpt_policy
+from repro.core import atomic
+from repro.core.checkpoint import FORMAT_VERSION, CheckpointManager
+from repro.core.policy import CheckpointPolicy
+from repro.core.storage import Tier, TieredStore
+
+
+def _store(tmp_path):
+    return TieredStore(Tier("fast", tmp_path / "fast"))
+
+
+def _state(seed=0, n=40_000):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(
+        rng.standard_normal((n,), dtype=np.float32))}}
+
+
+def _abstract(state):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+
+
+def _manifest_path(root, step):
+    return root / f"step_{step:08d}" / atomic.MANIFEST
+
+
+def _writer(tmp_path, **kw):
+    kw.setdefault("codec", "raw")
+    kw.setdefault("n_writers", 2)
+    kw.setdefault("mode", "incremental")
+    kw.setdefault("chunking", "cdc")
+    kw.setdefault("chunk_size", 1024)
+    kw.setdefault("io_threads", 4)
+    return CheckpointManager(_store(tmp_path),
+                             policy=make_ckpt_policy(**kw))
+
+
+def test_v6_manifest_round_trips_the_writing_policy(tmp_path):
+    mgr = _writer(tmp_path)
+    mgr.save(_state(), 1)
+    m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
+    assert m["format"] == FORMAT_VERSION == 6
+    embedded = CheckpointPolicy.from_dict(m["policy"])
+    assert embedded.chunking == mgr.policy.chunking
+    assert embedded.mode == "incremental"
+    # the embedded codec is the RESOLVED one, not the writer's "auto"
+    assert embedded.codec.codec == mgr.codec == "raw"
+    assert embedded.codec.params_codec == mgr.params_codec
+    # and the block is a faithful to_dict of the effective policy
+    assert m["policy"] == mgr._effective_policy_dict()
+
+
+def test_mismatched_caller_adopts_writer_policy_and_keeps_dedup(tmp_path):
+    """The regression this redesign exists for: history written cdc@1K,
+    restarted with a fixed@4K caller config. Restore must be
+    byte-identical, the manager must adopt the writer's chunking/codec
+    (logged reconciliation), and the NEXT save of unchanged state must
+    dedup to zero new object bytes — without adoption the drifted chunk
+    grid re-writes the entire model."""
+    state = _state(7)
+    _writer(tmp_path).save(state, 1)
+
+    caller = CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        codec="raw", n_writers=2, mode="incremental",
+        chunking="fixed", chunk_size=4096, io_threads=4))
+    restored, _ = caller.restore(_abstract(state))
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert caller.policy.chunking.scheme == "cdc"
+    assert caller.policy.chunking.chunk_size == 1024
+    assert caller.chunks.chunk_size == 1024
+    assert caller._chunker is not None and \
+        caller._chunker.avg_size == 1024
+    rep = caller.save(state, 2)
+    assert rep["new_object_bytes"] == 0         # full dedup vs step 1
+    # the adopted policy is what step 2's manifest records
+    m2 = CheckpointPolicy.from_dict(caller.load_manifest(2)["policy"])
+    assert m2.chunking == caller.policy.chunking
+
+
+def test_matched_caller_adopts_nothing(tmp_path):
+    mgr = _writer(tmp_path)
+    mgr.save(_state(), 1)
+    before = mgr.policy
+    mgr.restore(_abstract(_state()))
+    assert mgr.policy is before                 # no rebind, no churn
+
+
+def test_corrupted_policy_block_degrades_to_warning(tmp_path):
+    """Garbage in the policy block must not take restore down — the shard
+    records are self-describing; the caller keeps its own policy."""
+    state = _state(3)
+    mgr = _writer(tmp_path)
+    mgr.save(state, 1)
+    mpath = _manifest_path(mgr.store.root, 1)
+    for garbage in ({"mode": "bogus"}, "not-a-mapping",
+                    {"chunking": {"scheme": 999}},
+                    # parses as a valid-looking policy but can't BUILD a
+                    # write engine (cdc average below the scan window) —
+                    # must degrade exactly like unparseable garbage
+                    {"mode": "incremental",
+                     "chunking": {"scheme": "cdc", "chunk_size": 100}}):
+        m = json.loads(mpath.read_text())
+        m["policy"] = garbage
+        mpath.write_text(json.dumps(m))
+        caller = CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+            codec="raw", n_writers=2, mode="incremental",
+            chunking="fixed", chunk_size=4096))
+        restored, _ = caller.restore(_abstract(state))
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]),
+            np.asarray(state["params"]["w"]))
+        assert caller.policy.chunking.scheme == "fixed"  # nothing adopted
+
+
+def test_unavailable_writer_codec_is_not_adopted(tmp_path):
+    """A manifest recording a codec this environment can't decode-encode
+    with (e.g. zstd without the package) must not poison the caller's
+    write path — chunking still adopts, codec stays the caller's."""
+    from repro.core import codec as codec_mod
+    state = _state(5)
+    mgr = _writer(tmp_path)
+    mgr.save(state, 1)
+    mpath = _manifest_path(mgr.store.root, 1)
+    m = json.loads(mpath.read_text())
+    m["policy"]["codec"] = {"codec": "zstd", "params_codec": "zstd"}
+    mpath.write_text(json.dumps(m))
+    caller = CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        codec="raw", n_writers=2, mode="incremental",
+        chunking="fixed", chunk_size=4096))
+    caller.restore(_abstract(state))            # records still say raw
+    assert caller.policy.chunking.scheme == "cdc"      # adopted
+    if codec_mod.HAVE_ZSTD:
+        assert caller.codec == "zstd"           # available → adopted too
+    else:
+        assert caller.codec == "raw"            # unavailable → kept
+
+
+def test_restore_plan_carries_the_written_policy(tmp_path):
+    from repro.core.restore_path import RestorePlan
+    mgr = _writer(tmp_path)
+    state = _state()
+    mgr.save(state, 1)
+    manifest = mgr.load_manifest(1)
+    flat, _ = jax.tree_util.tree_flatten(_abstract(state))
+    plan = RestorePlan.build(manifest, "step_00000001",
+                             ["params/w"], flat, [None], 1)
+    assert plan.written_policy == manifest["policy"]
+    # a v5 manifest (no block) yields None, not a crash
+    manifest.pop("policy")
+    plan = RestorePlan.build(manifest, "step_00000001",
+                             ["params/w"], flat, [None], 1)
+    assert plan.written_policy is None
+
+
+def test_v6_step_in_mixed_history_gc_leaks_nothing(tmp_path):
+    """A v6 step alongside a policy-less (v5-style) step: the mark set
+    spans both, the sweep reclaims an injected orphan, and both steps
+    restore."""
+    from repro.core import cas
+    mgr = _writer(tmp_path, retain=8)
+    s1, s2 = _state(1), _state(2)
+    mgr.save(s1, 1)
+    # strip step 1 down to a v5 manifest (older-writer history)
+    mpath = _manifest_path(mgr.store.root, 1)
+    m = json.loads(mpath.read_text())
+    m["format"] = 5
+    m.pop("policy")
+    mpath.write_text(json.dumps(m))
+    mgr2 = _writer(tmp_path, retain=8)
+    mgr2.save(s2, 2)
+    orphan = mgr2.store.fast.root / cas.object_rel("ee" * 16)
+    orphan.parent.mkdir(parents=True, exist_ok=True)
+    orphan.write_bytes(b"junk")
+    mgr2.gc()
+    assert not orphan.exists()
+    assert mgr2.chunks.fsck(mgr2._live_chunk_refs())["ok"]
+    for step, st in ((1, s1), (2, s2)):
+        r, _ = mgr2.restore(_abstract(st), step=step)
+        np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                      np.asarray(st["params"]["w"]))
+
+
+def test_serial_engine_still_writes_v6_with_numpy_scan_pinned(tmp_path):
+    """The PR-1 baseline purity rule survives the redesign: io_threads=1
+    pins the numpy scan and queue depth 1 whatever the policy asks."""
+    mgr = CheckpointManager(_store(tmp_path), policy=make_ckpt_policy(
+        codec="raw", n_writers=1, mode="incremental", chunking="cdc",
+        chunk_size=1024, scan_backend="auto", io_threads=1,
+        persist_queue_depth=4))
+    assert mgr._chunker.scan_backend == "numpy"
+    assert mgr._persist.depth == 1
+    state = _state()
+    mgr.save(state, 1)
+    assert mgr.load_manifest(1)["format"] == FORMAT_VERSION
+    r, _ = mgr.restore(_abstract(state))
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))

@@ -1,0 +1,226 @@
+"""CheckpointPolicy config objects: legacy-kwarg parity (every historical
+flat ``CheckpointManager`` kwarg maps onto the identical policy field,
+with the same validation errors and the same resolved defaults, behind
+exactly one ``DeprecationWarning``), dict round-tripping, and CLI/env
+override merging."""
+import warnings
+
+import pytest
+
+from conftest import make_ckpt_policy
+from repro.core.checkpoint import CheckpointManager
+from repro.core.policy import (CheckpointPolicy, ChunkingPolicy,
+                               CodecPolicy, DurabilityPolicy, FLAT_FIELDS,
+                               LEGACY_KWARGS, PipelinePolicy)
+from repro.core.storage import Tier, TieredStore
+
+
+def _store(tmp_path):
+    return TieredStore(Tier("fast", tmp_path / "fast"))
+
+
+def _get(policy, path):
+    obj = policy
+    for part in path:
+        obj = getattr(obj, part)
+    return obj
+
+
+# one (kwarg, non-default value) probe per legacy kwarg — the value must
+# differ from the field's default so the mapping is actually observable
+LEGACY_PROBES = {
+    "n_writers": 7,
+    "codec": "raw",
+    "params_codec": "int8",
+    "replicas": 2,
+    "retain": 5,
+    "keepalive_s": 33.0,
+    "save_timeout_s": 12.0,
+    "max_retries": 0,
+    "async_drain_to_slow": False,
+    "mode": "incremental",
+    "chunk_size": 2048,
+    "chunking": "cdc",
+    "scan_backend": "numpy",
+    "io_threads": 2,
+}
+
+
+def test_every_legacy_kwarg_has_a_probe_and_a_field():
+    assert sorted(LEGACY_PROBES) == sorted(LEGACY_KWARGS)
+    assert set(LEGACY_KWARGS) <= set(FLAT_FIELDS)
+
+
+@pytest.mark.parametrize("kwarg", sorted(LEGACY_PROBES))
+def test_legacy_kwarg_maps_to_identical_policy_field(kwarg, tmp_path):
+    value = LEGACY_PROBES[kwarg]
+    with pytest.warns(DeprecationWarning) as rec:
+        policy = CheckpointPolicy.from_legacy_kwargs(**{kwarg: value})
+    assert len(rec) == 1                       # exactly one, per call
+    path = FLAT_FIELDS[kwarg]
+    assert _get(policy, path) == value
+    # every OTHER field keeps its resolved default
+    default = CheckpointPolicy()
+    rebuilt = policy.to_dict()
+    expect = default.to_dict()
+    node = expect
+    for part in path[:-1]:
+        node = node[part]
+    node[path[-1]] = value
+    assert rebuilt == expect
+
+    # the manager's legacy constructor takes the same path: one warning,
+    # and the composed policy is what policy= would have received
+    with pytest.warns(DeprecationWarning) as rec:
+        mgr = CheckpointManager(_store(tmp_path), **{kwarg: value})
+    assert len(rec) == 1
+    assert _get(mgr.policy, path) == value
+    mgr.close()
+
+
+def test_legacy_defaults_equal_policy_defaults():
+    with pytest.warns(DeprecationWarning):
+        assert CheckpointPolicy.from_legacy_kwargs() == CheckpointPolicy()
+
+
+@pytest.mark.parametrize("bad_kwargs,match", [
+    ({"mode": "bogus"}, r"mode must be one of"),
+    ({"chunking": "bogus"}, r"chunking must be one of"),
+    ({"scan_backend": "bogus"}, r"scan_backend must be one of"),
+    ({"codec": "bogus"}, r"unknown codec"),
+    ({"chunk_size": 0}, r"chunk_size must be positive"),
+])
+def test_validation_error_parity(bad_kwargs, match, tmp_path):
+    """The legacy path and the policy constructor reject bad values with
+    the SAME ValueError."""
+    with pytest.raises(ValueError, match=match), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        CheckpointManager(_store(tmp_path), **bad_kwargs)
+    with pytest.raises(ValueError, match=match):
+        CheckpointPolicy().with_overrides(**bad_kwargs)
+
+
+def test_unknown_legacy_kwarg_rejected(tmp_path):
+    with pytest.raises(TypeError, match="nonsense"):
+        CheckpointManager(_store(tmp_path), nonsense=1)
+
+
+def test_policy_and_legacy_kwargs_are_mutually_exclusive(tmp_path):
+    with pytest.raises(TypeError, match="not both"):
+        CheckpointManager(_store(tmp_path), policy=CheckpointPolicy(),
+                          retain=2)
+
+
+def test_policy_constructor_emits_no_deprecation(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        mgr = CheckpointManager(_store(tmp_path),
+                                policy=make_ckpt_policy(codec="raw"))
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# section validation and composition
+# ---------------------------------------------------------------------------
+
+def test_new_pipeline_knob_validation():
+    with pytest.raises(ValueError, match="persist_queue_depth"):
+        PipelinePolicy(persist_queue_depth=0)
+    with pytest.raises(ValueError, match="host_bytes_budget"):
+        PipelinePolicy(host_bytes_budget=-1)
+    assert PipelinePolicy(io_threads=1,
+                          persist_queue_depth=4).effective_queue_depth == 1
+    assert PipelinePolicy(io_threads=8,
+                          persist_queue_depth=4).effective_queue_depth == 4
+
+
+def test_sections_accept_plain_dicts():
+    p = CheckpointPolicy(mode="incremental",
+                         chunking={"scheme": "cdc", "chunk_size": 4096},
+                         pipeline={"io_threads": 2})
+    assert isinstance(p.chunking, ChunkingPolicy)
+    assert p.chunking.scheme == "cdc" and p.pipeline.io_threads == 2
+    assert isinstance(p.durability, DurabilityPolicy)
+    assert isinstance(p.codec, CodecPolicy)
+    with pytest.raises(TypeError, match="chunking"):
+        CheckpointPolicy(chunking=42)
+
+
+# ---------------------------------------------------------------------------
+# dict round trip (the manifest-v6 embedding contract)
+# ---------------------------------------------------------------------------
+
+def test_to_dict_from_dict_round_trip():
+    p = make_ckpt_policy(mode="incremental", chunking="cdc",
+                         chunk_size=4096, io_threads=2,
+                         persist_queue_depth=3, host_bytes_budget=1 << 20,
+                         replicas=2, codec="raw", params_codec="int8")
+    assert CheckpointPolicy.from_dict(p.to_dict()) == p
+
+
+def test_from_dict_ignores_unknown_keys():
+    d = CheckpointPolicy().to_dict()
+    d["future_field"] = {"x": 1}
+    d["chunking"]["future_knob"] = 99
+    assert CheckpointPolicy.from_dict(d) == CheckpointPolicy()
+
+
+def test_from_dict_rejects_garbage():
+    with pytest.raises((TypeError, ValueError)):
+        CheckpointPolicy.from_dict("not a mapping")
+    with pytest.raises((TypeError, ValueError)):
+        CheckpointPolicy.from_dict({"mode": "bogus"})
+    with pytest.raises((TypeError, ValueError)):
+        CheckpointPolicy.from_dict({"chunking": "not a mapping"})
+
+
+# ---------------------------------------------------------------------------
+# override merging (CLI flags, env vars)
+# ---------------------------------------------------------------------------
+
+def test_with_overrides_skips_none_and_rejects_unknown():
+    base = make_ckpt_policy(io_threads=2)
+    merged = base.with_overrides(codec=None, retain=9)
+    assert merged.codec.codec is None           # None never clobbers
+    assert merged.durability.retain == 9
+    assert merged.pipeline.io_threads == 2      # base preserved
+    with pytest.raises(TypeError, match="unknown checkpoint policy"):
+        base.with_overrides(frobnicate=1)
+
+
+def test_from_env_merges_typed_overrides():
+    env = {"REPRO_CKPT_IO_THREADS": "6",
+           "REPRO_CKPT_PERSIST_QUEUE_DEPTH": "2",
+           "REPRO_CKPT_HOST_BYTES_BUDGET": str(64 << 20),
+           "REPRO_CKPT_KEEPALIVE_S": "45.5",
+           "REPRO_CKPT_ASYNC_DRAIN_TO_SLOW": "false",
+           "REPRO_CKPT_CHUNKING": "cdc",
+           "REPRO_CKPT_MODE": "",               # empty = unset
+           "UNRELATED": "zzz"}
+    p = CheckpointPolicy.from_env(env, base=make_ckpt_policy(retain=7))
+    assert p.pipeline.io_threads == 6
+    assert p.pipeline.persist_queue_depth == 2
+    assert p.pipeline.host_bytes_budget == 64 << 20
+    assert p.pipeline.async_drain is False
+    assert p.durability.keepalive_s == 45.5
+    assert p.chunking.scheme == "cdc"
+    assert p.mode == "full"                     # empty var ignored
+    assert p.durability.retain == 7             # base preserved
+
+
+def test_async_drain_policy_controls_store_drain_mode(tmp_path):
+    """async_drain=None leaves the store as constructed; an explicit
+    value overrides it (the legacy ``async_drain_to_slow`` kwarg was a
+    dead parameter before the policy redesign — now it is real)."""
+    store = TieredStore(Tier("fast", tmp_path / "f"),
+                        Tier("slow", tmp_path / "s"), drain_async=False)
+    mgr = CheckpointManager(store, policy=make_ckpt_policy(codec="raw"))
+    assert store.drain_async is False           # None = hands off
+    mgr.close()
+    store2 = TieredStore(Tier("fast", tmp_path / "f2"),
+                         Tier("slow", tmp_path / "s2"), drain_async=False)
+    mgr2 = CheckpointManager(store2, policy=make_ckpt_policy(
+        codec="raw", async_drain_to_slow=True))
+    assert store2.drain_async is True
+    mgr2.close()

@@ -95,10 +95,12 @@ def test_exit_restores_previous_handlers():
 def test_manager_fast_flush_callback(tmp_path):
     """The trainer wires guard → manager.request_fast_flush; a signal must
     flip the persist stage's fast-flush flag."""
+    from conftest import make_ckpt_policy
     from repro.core.checkpoint import CheckpointManager
     from repro.core.storage import Tier, TieredStore
     mgr = CheckpointManager(TieredStore(Tier("fast", tmp_path / "f")),
-                            codec="raw", n_writers=1, keepalive_s=60.0)
+                            policy=make_ckpt_policy(codec="raw",
+                                                    n_writers=1))
     guard = PreemptionGuard()
     guard.add_callback(mgr.request_fast_flush)
     assert not mgr._persist.fast_flush_requested

@@ -308,3 +308,195 @@ def test_persist_stage_fast_flush_flag():
 def test_payload_ticket_empty_payload():
     t = PayloadTicket(0, 0)
     assert t.done and t.digests == [] and t.crc == 0
+
+
+# ---------------------------------------------------------------------------
+# PersistStage: bounded multi-round queue + byte-budget admission
+# ---------------------------------------------------------------------------
+
+def test_persist_stage_runs_queued_rounds_in_order():
+    import time
+    stage = PersistStage(depth=3)
+    order = []
+    gate = threading.Event()
+    stage.submit(lambda: (gate.wait(10), order.append(1)), on_error=print)
+    stage.submit(lambda: order.append(2), on_error=print)
+    stage.submit(lambda: order.append(3), on_error=print)
+    assert stage.inflight == 3 and stage.active
+    time.sleep(0.05)
+    assert order == []                  # all parked behind round 1
+    gate.set()
+    stage.wait()
+    assert order == [1, 2, 3]           # FIFO: commits stay ordered
+    assert stage.inflight == 0 and not stage.active
+
+
+def test_persist_stage_depth_bounds_admission():
+    stage = PersistStage(depth=2)
+    gate = threading.Event()
+    stage.admit()
+    stage.submit(lambda: gate.wait(10), on_error=print, reserved=True)
+    stage.admit()
+    stage.submit(lambda: None, on_error=print, reserved=True)
+    blocked = []
+    t = threading.Thread(target=lambda: (stage.admit(),
+                                         blocked.append(True)),
+                         daemon=True)
+    t.start()
+    t.join(0.2)
+    assert t.is_alive() and not blocked         # third admit parked
+    gate.set()
+    t.join(5)
+    assert blocked
+    stage.release()                             # the probe's reservation
+    stage.wait()
+
+
+def test_persist_stage_byte_budget_blocks_third_round():
+    """Two rounds fill the budget; the third's admit() must park until a
+    round lands — and a lone over-budget round still admits (an empty
+    stage never deadlocks)."""
+    stage = PersistStage(depth=8, host_bytes_budget=200)
+    gate = threading.Event()
+    for _ in range(2):
+        stage.admit(100)
+        stage.submit(lambda: gate.wait(10), on_error=print, nbytes=100,
+                     reserved=True)
+    assert stage.inflight_bytes == 200
+    blocked = []
+    t = threading.Thread(target=lambda: (stage.admit(100),
+                                         blocked.append(True),
+                                         stage.release(100)),
+                         daemon=True)
+    t.start()
+    t.join(0.2)
+    assert t.is_alive() and not blocked         # budget full → parked
+    gate.set()
+    t.join(5)
+    assert blocked
+    stage.wait()
+    # empty stage: a round bigger than the whole budget still admits
+    assert stage.admit(10_000) == pytest.approx(0.0, abs=0.2)
+    stage.release(10_000)
+
+
+def test_persist_stage_release_on_failed_snapshot_frees_the_slot():
+    stage = PersistStage(depth=1)
+    stage.admit(50)
+    stage.release(50)                   # snapshot died before submit
+    assert stage.admit(50) < 0.1        # slot is free again, no deadlock
+    stage.release(50)
+
+
+def _queue_mgr(tmp_path, **kw):
+    from conftest import make_ckpt_policy
+    from repro.core.checkpoint import CheckpointManager
+    kw.setdefault("codec", "raw")
+    kw.setdefault("n_writers", 1)
+    kw.setdefault("mode", "incremental")
+    kw.setdefault("chunk_size", 4096)
+    kw.setdefault("io_threads", 4)
+    return CheckpointManager(TieredStore(Tier("fast", tmp_path / "q")),
+                             policy=make_ckpt_policy(**kw))
+
+
+def _np_state(seed, kib=64):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(
+        rng.standard_normal((kib * 256,), dtype=np.float32))}}
+
+
+def test_manager_queue_depth2_admits_round_while_prior_persists(tmp_path):
+    """The ROADMAP's multi-round persist queue: with depth 2 the second
+    async save must be ADMITTED (snapshot taken, control returned) while
+    round 1 is still persisting — and both rounds must commit and restore
+    bit-exact."""
+    import time
+
+    import jax
+
+    from repro.core import cas as cas_mod
+    mgr = _queue_mgr(tmp_path, persist_queue_depth=2)
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = mgr.chunks.store_chunk
+
+    def slow(digest, data, crash=None, dirs=None, dirs_lock=None):
+        entered.set()
+        gate.wait(10)                   # round 1 parks inside its persist
+        return orig(digest, data, crash or cas_mod.NO_CRASH, dirs,
+                    dirs_lock)
+
+    mgr.chunks.store_chunk = slow
+    s1, s2 = _np_state(1), _np_state(2)
+    mgr.save(s1, 1, blocking=False)
+    assert entered.wait(5)
+    t0 = time.monotonic()
+    mgr.save(s2, 2, blocking=False)     # must NOT wait for round 1
+    assert time.monotonic() - t0 < 5.0
+    assert mgr._persist.inflight == 2   # genuinely overlapped
+    gate.set()
+    mgr.wait()
+    for step, st in ((1, s1), (2, s2)):
+        restored, _ = mgr.restore(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         st), step=step)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]),
+            np.asarray(st["params"]["w"]))
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    mgr.close()
+
+
+def test_manager_byte_budget_blocks_third_snapshot(tmp_path):
+    """Crash-matrix-style budget probe: depth 3 but a budget sized for two
+    rounds — the third save must park in admission BEFORE its snapshot is
+    taken (two full snapshots may pin host memory, a third may not), then
+    proceed once a round lands. Everything still commits and fscks."""
+    import time
+
+    from repro.core import cas as cas_mod
+    from repro.core.save_path import estimate_snapshot_bytes
+    s = {n: _np_state(n) for n in (1, 2, 3)}
+    per_round = estimate_snapshot_bytes(s[1])
+    mgr = _queue_mgr(tmp_path, persist_queue_depth=3,
+                     host_bytes_budget=2 * per_round)
+    snapshots = []
+    orig_snap = mgr._snapshot
+    mgr._snapshot = lambda state: (snapshots.append(1),
+                                   orig_snap(state))[1]
+    gate = threading.Event()
+    orig = mgr.chunks.store_chunk
+
+    def slow(digest, data, crash=None, dirs=None, dirs_lock=None):
+        gate.wait(10)
+        return orig(digest, data, crash or cas_mod.NO_CRASH, dirs,
+                    dirs_lock)
+
+    mgr.chunks.store_chunk = slow
+    mgr.save(s[1], 1, blocking=False)
+    mgr.save(s[2], 2, blocking=False)
+    assert len(snapshots) == 2
+    third_done = threading.Event()
+    t = threading.Thread(
+        target=lambda: (mgr.save(s[3], 3, blocking=False),
+                        third_done.set()), daemon=True)
+    t.start()
+    t.join(0.3)
+    assert t.is_alive() and len(snapshots) == 2     # snapshot 3 blocked
+    gate.set()
+    assert third_done.wait(30)
+    assert len(snapshots) == 3
+    mgr.wait()
+    assert sorted(s_ for s_ in (1, 2, 3)
+                  if (mgr.store.root / f"step_{s_:08d}").exists()) == \
+        [1, 2, 3]
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    mgr.close()
+
+
+def test_serial_engine_policy_pins_queue_depth_to_one(tmp_path):
+    mgr = _queue_mgr(tmp_path, io_threads=1, persist_queue_depth=4)
+    assert mgr._persist.depth == 1
+    mgr.close()
