@@ -10,20 +10,39 @@ chunk-at-a-time, digest-re-hash-every-chunk path) and by the pipelined
 engine (``--io-threads N``: leaf-level fan-out, chunk prefetch, payload
 crc32 as the end-to-end integrity gate). Save wall-clock for both engines
 is reported alongside, writing to separate stores.
-"""
+
+``--mode restore-stream`` attacks TIME-TO-FIRST-STEP (the MANA-2.0
+lesson: the number a production redeploy feels is when step 0 runs, not
+when the last byte lands): a cold restart whose only copy of the
+checkpoint lives on the remote object-store tier, restored blocking
+(full restore, then the step-0 frontier compute) vs STREAMING
+(``restore_streaming``: fetches in first-use order, step-0 frontier
+compute as soon as the frontier is resident, tail layers streaming in
+behind the completion gate). Restored state is asserted bit-exact
+leaf-by-leaf between the two engines every rep."""
 from __future__ import annotations
 
 import argparse
+import shutil
+import statistics
 import tempfile
 import time
 from pathlib import Path
 
-from repro.core.checkpoint import CheckpointManager
+import jax.numpy as jnp
+import numpy as np
 
-from .common import (abstract, bb_store, bench_policy, cleanup, emit,
-                     io_sweep_compare, scratch_store, synth_state)
+from repro.core.checkpoint import CheckpointManager
+from repro.core.storage import (RemoteTier, Tier, TieredStore,
+                                mirror_to_tier)
+
+from .common import (abstract, bb_store, bench_policy, bench_record,
+                     cleanup, emit, io_sweep_compare, scratch_store,
+                     synth_state)
 
 AGG = 256 << 20  # scaled-down 5.8 TB stand-in
+STREAM_AGG = 192 << 20          # the cold-remote restore-stream workload
+REMOTE_LATENCY_S = 0.0005       # per ranged-GET request latency
 
 
 def run(tiny=False):
@@ -64,9 +83,126 @@ def io_sweep(io_threads=8, chunking="fixed", tiny=False, reps=5):
                             retain=1, primary="restore")
 
 
+def layered_state(total_bytes: int, *, layers: int = 12, seed: int = 0):
+    """Transformer-shaped synthetic state: embedding and LM head (2 units
+    each) around `layers` indexed blocks (1 unit each) — the leaf names
+    carry the first-use structure ``elastic.leaf_first_use_class`` reads."""
+    units = layers + 4
+    per = max(total_bytes // (4 * units), 4)
+    side = max(int(per ** 0.5), 2)
+    rng = np.random.default_rng(seed)
+
+    def w(scale=1):
+        return jnp.asarray(rng.standard_normal(
+            (side * scale, side), dtype=np.float32))
+
+    params = {"embed": w(2), "lm_head": w(2)}
+    for k in range(layers):
+        params[f"stage_0/b{k:02d}/w"] = w()
+    return {"params": params, "step": jnp.asarray(1, jnp.int32)}
+
+
+def _first_step_compute(names, leaf_of) -> float:
+    """The step-0 stand-in: touch the frontier leaves the way a forward
+    pass does (embedding + block 0), forcing materialization."""
+    acc = 0.0
+    for name in names:
+        leaf = leaf_of(name)
+        acc += float(jnp.sum(jnp.ravel(leaf)[:64]))
+    return acc
+
+
+def restore_stream(io_threads=8, tiny=False, reps=3):
+    """Blocking vs streaming cold-remote restore; records ttfs_speedup."""
+    agg = STREAM_AGG // (16 if tiny else 1)
+    reps = 1 if tiny else reps
+    state = layered_state(agg, seed=2)
+    names = [f"params/{k}" for k in state["params"]] + ["step"]
+    ab = abstract(state)
+    remote_bw = float(agg)      # full remote transfer ≈ 1 s at any scale
+    tmp = Path(tempfile.mkdtemp())
+
+    # one checkpoint, written locally then mirrored to the "object store"
+    # (the out-of-band `aws s3 sync` a production redeploy restores from)
+    writer = TieredStore(Tier("writer", tmp / "writer"))
+    mgr = CheckpointManager(writer, policy=bench_policy(
+        n_writers=4, codec="raw", retain=1, mode="incremental",
+        chunking="fixed", io_threads=io_threads))
+    mgr.save(state, 1)
+    mgr.close()
+    mirror_to_tier(writer.fast, RemoteTier("upload", tmp / "remote"))
+
+    def cold_mgr(tag, streaming):
+        """Fresh empty fast tier + throttled remote = a true cold restart
+        (fresh token bucket per rep, so the engines compare fairly)."""
+        store = TieredStore(
+            Tier("fast", tmp / tag),
+            remote=RemoteTier("object-store", tmp / "remote",
+                              bw_bytes_per_s=remote_bw,
+                              request_latency_s=REMOTE_LATENCY_S))
+        return CheckpointManager(store, policy=bench_policy(
+            n_writers=4, codec="raw", retain=1, mode="incremental",
+            chunking="fixed", io_threads=io_threads,
+            streaming_restore=streaming))
+
+    samples = []
+    for rep in range(reps):
+        m1 = cold_mgr(f"cold-b{rep}", False)
+        t0 = time.monotonic()
+        full, _ = m1.restore(ab)
+        t_full = time.monotonic() - t0
+        flat = dict(zip(names, [full["params"][k] for k in full["params"]]
+                        + [full["step"]]))
+        _first_step_compute([n for n in names
+                             if "embed" in n or "/b00/" in n],
+                            flat.__getitem__)
+        t_first_blocking = time.monotonic() - t0
+        m1.close()
+
+        m2 = cold_mgr(f"cold-s{rep}", True)
+        t0 = time.monotonic()
+        stream, _ = m2.restore_streaming(ab)
+        stream.wait_frontier()
+        _first_step_compute(stream.frontier_names, stream.leaf)
+        t_first_stream = time.monotonic() - t0
+        streamed = stream.state()
+        t_complete = time.monotonic() - t0
+        m2.close()
+        # bit-exact: streaming must place exactly the blocking bytes
+        for k in full["params"]:
+            np.testing.assert_array_equal(
+                np.asarray(full["params"][k]),
+                np.asarray(streamed["params"][k]))
+        samples.append((t_full, t_first_blocking, t_first_stream,
+                        t_complete))
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    med = [statistics.median(s[i] for s in samples) for i in range(4)]
+    t_full, t_first_blocking, t_first_stream, t_complete = med
+    ttfs_speedup = t_first_blocking / max(t_first_stream, 1e-9)
+    emit("restore_stream", t_first_stream * 1e6,
+         f"agg_mib={agg/2**20:.0f};io_threads={io_threads};reps={reps};"
+         f"full_restore_s={t_full:.3f};ttfs_blocking_s={t_first_blocking:.3f};"
+         f"ttfs_stream_s={t_first_stream:.3f};"
+         f"stream_complete_s={t_complete:.3f};"
+         f"ttfs_speedup={ttfs_speedup:.2f}x")
+    bench_record("restore_stream", {
+        "agg_mib": agg / 2**20, "io_threads": io_threads, "reps": reps,
+        "tiny": tiny, "remote_bw_mib_s": remote_bw / 2**20,
+        "full_restore_s": round(t_full, 4),
+        "ttfs_blocking_s": round(t_first_blocking, 4),
+        "ttfs_stream_s": round(t_first_stream, 4),
+        "stream_complete_s": round(t_complete, 4),
+        "ttfs_speedup": round(ttfs_speedup, 3),
+    })
+    return {"ttfs_speedup": ttfs_speedup, "full_restore_s": t_full,
+            "ttfs_stream_s": t_first_stream}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="tiers", choices=["tiers", "io-sweep"])
+    ap.add_argument("--mode", default="tiers",
+                    choices=["tiers", "io-sweep", "restore-stream"])
     ap.add_argument("--chunking", default="fixed",
                     choices=["fixed", "cdc"])
     ap.add_argument("--io-threads", type=int, default=8)
@@ -76,6 +212,8 @@ def main(argv=None):
     if args.mode == "io-sweep":
         io_sweep(io_threads=args.io_threads, chunking=args.chunking,
                  tiny=args.tiny)
+    elif args.mode == "restore-stream":
+        restore_stream(io_threads=args.io_threads, tiny=args.tiny)
     else:
         run(tiny=args.tiny)
     return 0

@@ -16,14 +16,15 @@ from .errors import (AbortedError, CASError, CkptError, CodecUnavailableError,
                      CorruptShardError, MissingShardError, NamespaceError,
                      NoCheckpointError, RegistryMismatchError, SpaceError)
 from .policy import (CheckpointPolicy, ChunkingPolicy, CodecPolicy,
-                     DurabilityPolicy, PipelinePolicy)
+                     DurabilityPolicy, PipelinePolicy, RestorePolicy)
 from .preempt import PreemptionGuard, PreemptQueue
-from .restore_path import ReadCache, RestorePlan, RestoreSession
+from .restore_path import (ReadCache, RestorePlan, RestoreSession,
+                           RestoreStream)
 from .save_path import PersistStage, SavePlan, SaveSession
 from .split_state import (abstract_train_state, config_digest,
                           init_train_state, leaf_paths,
                           lower_half_descriptor, state_shardings)
-from .storage import Tier, TieredStore, default_store
+from .storage import RemoteTier, Tier, TieredStore, default_store
 
 __all__ = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
@@ -34,7 +35,8 @@ __all__ = [
     "MissingShardError", "NamespaceError",
     "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
     "PreemptionGuard",
-    "ReadCache", "RegistryMismatchError", "RestorePlan", "RestoreSession",
+    "ReadCache", "RegistryMismatchError", "RemoteTier", "RestorePlan",
+    "RestorePolicy", "RestoreSession", "RestoreStream",
     "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
     "abstract_train_state", "config_digest", "default_store",
     "init_train_state", "leaf_paths", "lower_half_descriptor",

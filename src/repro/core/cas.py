@@ -421,15 +421,19 @@ class ChunkStore:
             offsets.append(offsets[-1] + n)
         buf = bytearray(payload_bytes)
         mv = memoryview(buf)
-        fast = self.store.fast
+        tiers = self.store.tiers()
 
         def _fill(i: int):
             dest = mv[offsets[i]:offsets[i + 1]]
-            try:
-                if fast.read_into(object_rel(digests[i]), dest):
+            rel = object_rel(digests[i])
+            # direct placement walks the full hierarchy — fast, slow, then
+            # the cold remote tier's multipart ranged GETs — so a restart
+            # with an empty burst buffer still lands chunks straight in
+            # the payload buffer with no staged local copy. read_into
+            # returns False (never raises) on a missing/short object.
+            for tier in tiers:
+                if tier.read_into(rel, dest):
                     return
-            except OSError:
-                pass           # evicted/missing primary: verified fallback
             data = self.get(digests[i], verify=True)
             if len(data) != len(dest):
                 raise CorruptShardError(

@@ -66,7 +66,7 @@ from .policy import (CHUNKINGS, MODES, CheckpointPolicy,
                      policy_from_manifest)
 from .registry import build_registry, registry_json, validate_against
 from .restore_path import (ReadCache, RestorePlan, RestoreSession,
-                           unpack_shard)
+                           RestoreStream, unpack_shard)
 from .save_path import PersistStage, pack_shard, write_shards
 from .split_state import leaf_paths
 from .storage import TieredStore
@@ -120,6 +120,8 @@ class CheckpointManager:
         if getattr(store, "io_executor", None) is None:
             store.io_executor = self.chunks.executor
         store.apply_pipeline_policy(policy.pipeline)
+        if hasattr(store, "apply_restore_policy"):
+            store.apply_restore_policy(policy.restore)
         # leaf-level restore fan-out runs on its OWN pool: leaf tasks block
         # on chunk-prefetch futures, so sharing the chunk pool could
         # deadlock with every worker parked on a nested wait. Capped at
@@ -556,17 +558,10 @@ class CheckpointManager:
                             readable=list(READABLE_FORMATS), step=step)
         return manifest
 
-    def restore(self, abstract_state, shardings=None, *, step: int | None = None,
-                validate: bool = True):
-        """Restore onto the CURRENT topology. `abstract_state`: pytree of
-        ShapeDtypeStruct (or arrays — shapes/dtypes used); `shardings`:
-        matching tree of Shardings or None for single-device.
-
-        Two phases: (1) every leaf's host-side data (read → chunk
-        prefetch → crc → decode → assemble) is fetched with leaf-level
-        fan-out across the restore pool; (2) device arrays are built on
-        the calling thread — JAX array construction never runs on pool
-        workers."""
+    def _plan_restore(self, abstract_state, shardings, step):
+        """Shared restore prelude: resolve the step, load + reconcile the
+        manifest, and build the per-leaf plan against the CURRENT
+        topology. Returns (step, manifest, step_dir, plan, treedef)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise NoCheckpointError("no committed checkpoint found",
@@ -576,21 +571,90 @@ class CheckpointManager:
         # logged reconciliation, and future saves dedup against history
         self._maybe_adopt_manifest_policy(manifest, step)
         step_dir = atomic.committed_dir(Path("."), step).name
-
         flat, treedef = jax.tree_util.tree_flatten(abstract_state)
         shard_flat = (treedef.flatten_up_to(shardings)
                       if shardings is not None else [None] * len(flat))
         names = [n for n, _ in leaf_paths(abstract_state)]
         plan = RestorePlan.build(manifest, step_dir, names, flat,
                                  shard_flat, step)
-        prefetched = self._restore.prefetch(plan)
-        out = [self._restore.leaf_to_device(step_dir, job, pre)
-               for job, pre in zip(plan.jobs, prefetched)]
+        return step, manifest, step_dir, plan, treedef
+
+    @staticmethod
+    def _drain_futures(futures):
+        """After a failed leaf: absorb the in-flight siblings so no pool
+        worker is left running against a caller that has moved on."""
+        for f in futures:
+            if f is not None and not f.done():
+                try:
+                    f.result()
+                except BaseException:  # noqa — surfaced by the first
+                    pass
+
+    def restore(self, abstract_state, shardings=None, *, step: int | None = None,
+                validate: bool = True, leaf_priority=None):
+        """Restore onto the CURRENT topology. `abstract_state`: pytree of
+        ShapeDtypeStruct (or arrays — shapes/dtypes used); `shardings`:
+        matching tree of Shardings or None for single-device.
+
+        Pipelined engine: per-leaf host fetches are dispatched in
+        FIRST-USE order (``elastic.leaf_first_use_class``, or a
+        model-supplied `leaf_priority`) and each leaf releases to device
+        placement as it lands — placement of early leaves overlaps the
+        fetches still streaming behind them, no ``map_ordered`` barrier.
+        The serial engine keeps the original two-phase path byte-for-byte
+        (it is the PR-1 baseline). Device arrays are built on the calling
+        thread either way — JAX array construction never runs on pool
+        workers."""
+        step, manifest, step_dir, plan, treedef = self._plan_restore(
+            abstract_state, shardings, step)
+        if self._restore_exec.serial:
+            prefetched = self._restore.prefetch(plan)
+            out = [self._restore.leaf_to_device(step_dir, job, pre)
+                   for job, pre in zip(plan.jobs, prefetched)]
+        else:
+            schedule, _ = plan.first_use_schedule(
+                leaf_priority, self.policy.restore.frontier_classes)
+            futures = self._restore.prefetch_async(plan, schedule)
+            try:
+                out = [self._restore.leaf_to_device(step_dir, job,
+                                                    futures[i].result())
+                       for i, job in enumerate(plan.jobs)]
+            except BaseException:
+                self._drain_futures(futures)
+                raise
         state = jax.tree_util.tree_unflatten(treedef, out)
         if validate:
             validate_against(state, manifest["leaves"])
         self._cache.clear()
         return state, manifest.get("extra", {})
+
+    def restore_streaming(self, abstract_state, shardings=None, *,
+                          step: int | None = None, validate: bool = True,
+                          leaf_priority=None):
+        """Streaming restore-behind: returns ``(RestoreStream, extra)``
+        with every per-leaf host fetch already in flight in first-use
+        order. ``stream.wait_frontier()`` blocks only until the leading
+        first-use classes (``policy.restore.frontier_classes``) are
+        resident, so the caller begins step-0 preparation while tail
+        leaves stream in; any touch of an un-landed leaf — including the
+        final ``stream.state()`` completion gate — blocks on that leaf's
+        future, so the restored state is bit-exact with the blocking path
+        by construction. Registry validation and the read-cache release
+        run once, inside the completion gate."""
+        _, manifest, _, plan, treedef = self._plan_restore(
+            abstract_state, shardings, step)
+        schedule, frontier = plan.first_use_schedule(
+            leaf_priority, self.policy.restore.frontier_classes)
+        futures = self._restore.prefetch_async(plan, schedule)
+
+        def finalize(state):
+            if validate:
+                validate_against(state, manifest["leaves"])
+            self._cache.clear()
+
+        stream = RestoreStream(self._restore, plan, futures, treedef,
+                               schedule, frontier, finalize=finalize)
+        return stream, manifest.get("extra", {})
 
     # ------------------------------------------------------------------
     # compatibility shims: tests and operator tooling reach these names

@@ -10,6 +10,7 @@ checkpointed under", strengthened to arbitrary re-sharding.
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass
 
 import numpy as np
@@ -124,3 +125,54 @@ def plan_reads(target: ShardRange, available: list) -> list:
         remaining -= fresh
         picks.append((rng, handle))
     return picks
+
+
+# ---------------------------------------------------------------------------
+# first-use ordering (streaming restore-behind)
+# ---------------------------------------------------------------------------
+# A forward pass touches the embedding first, then transformer blocks in
+# index order, then the final norm / LM head; optimizer slots follow their
+# layer. Streaming restore orders the fetch schedule by that first use so
+# step 0 can begin once the leading classes are resident while tail layers
+# stream in behind the completion gate.
+
+_EMBED_RE = re.compile(
+    r"(?:^|[/._-])(?:embed\w*|wte|wpe|tok_emb\w*|pos_emb\w*)")
+_TAIL_RE = re.compile(
+    r"(?:^|[/._-])(?:lm_head|head|final\w*|ln_f|out_norm)")
+_BLOCK_RE = re.compile(
+    r"(?:^|[/._-])(?:layers?|blocks?|stages?|h|b)_?(\d+)")
+
+FIRST_USE_DEFAULT = 1 << 61      # unclassified: after all indexed blocks
+FIRST_USE_TAIL = 1 << 62         # final norm / head: touched last
+
+
+def leaf_first_use_class(name: str) -> int:
+    """Config-derived first-use class of one leaf path (lower = touched
+    earlier in step 0). Class 0 = embeddings and step counters; class
+    1+k = the k-th indexed block, composing nested indices
+    (``stage_1/b2`` orders after every block of ``stage_0``); tail heads
+    and norms come last; unrecognized names land just before the tail —
+    correctness never depends on this (an early touch of a late-classed
+    leaf just blocks on its future), only time-to-first-step does."""
+    n = name.lower()
+    blocks = [int(m) for m in _BLOCK_RE.findall(n)]
+    if blocks:
+        cls = 1
+        for b in blocks:
+            cls = cls * 4096 + b
+        return cls
+    if _EMBED_RE.search(n):
+        return 0
+    if _TAIL_RE.search(n):
+        return FIRST_USE_TAIL
+    if any(tok in n for tok in ("step", "count", "rng", "key")):
+        return 0                 # tiny scalars the loop needs immediately
+    return FIRST_USE_DEFAULT
+
+
+def first_use_order(names, priority=None) -> list:
+    """Indices of `names` sorted by first-use class (stable within a
+    class, so equal-class leaves keep manifest order)."""
+    pr = priority or leaf_first_use_class
+    return sorted(range(len(names)), key=lambda i: (pr(names[i]), i))

@@ -35,6 +35,7 @@ from . import codec as codec_mod
 from .cas import DEFAULT_CHUNK_SIZE
 from .chunk_exec import DEFAULT_IO_THREADS
 from .errors import CodecUnavailableError
+from .storage import DEFAULT_REMOTE_PART_BYTES
 
 MODES = ("full", "incremental")
 CHUNKINGS = ("fixed", "cdc")
@@ -148,8 +149,35 @@ class CodecPolicy:
         return codec, params
 
 
+@dataclass(frozen=True)
+class RestorePolicy:
+    """Read-side behaviour — reader-LOCAL, like pipeline/durability: the
+    manifest adoption path never takes these from a writer's embedded
+    policy, because the writer's streaming choice must not change a
+    reader's restore semantics.
+
+    ``streaming=True`` makes the trainer restore through
+    ``CheckpointManager.restore_streaming``: leaves release to device
+    placement as they land (first-use order) and step 0 begins once the
+    frontier — the first ``frontier_classes`` distinct first-use classes,
+    embedding + block 0 by default — is resident, with every later touch
+    of an un-landed leaf blocking on its future (bit-exact by
+    construction). ``remote_part_bytes`` sizes the remote tier's
+    multipart ranged GETs."""
+    streaming: bool = False
+    frontier_classes: int = 2
+    remote_part_bytes: int = DEFAULT_REMOTE_PART_BYTES
+
+    def __post_init__(self):
+        if int(self.frontier_classes) < 1:
+            raise ValueError("frontier_classes must be >= 1")
+        if int(self.remote_part_bytes) <= 0:
+            raise ValueError("remote_part_bytes must be positive")
+
+
 _SECTIONS = {"chunking": ChunkingPolicy, "pipeline": PipelinePolicy,
-             "durability": DurabilityPolicy, "codec": CodecPolicy}
+             "durability": DurabilityPolicy, "codec": CodecPolicy,
+             "restore": RestorePolicy}
 
 # flat-name → policy-field map: the legacy CheckpointManager kwargs plus
 # the newer pipeline knobs, shared by the legacy shim, CLI merging and
@@ -174,6 +202,9 @@ FLAT_FIELDS = {
     "max_retries": ("durability", "max_retries"),
     "codec": ("codec", "codec"),
     "params_codec": ("codec", "params_codec"),
+    "streaming_restore": ("restore", "streaming"),
+    "restore_frontier_classes": ("restore", "frontier_classes"),
+    "remote_part_bytes": ("restore", "remote_part_bytes"),
 }
 
 # exactly the pre-policy CheckpointManager.__init__ kwargs, in their
@@ -187,9 +218,10 @@ LEGACY_KWARGS = (
 
 _ENV_INT = {"n_writers", "chunk_size", "min_chunk_size", "max_chunk_size",
             "io_threads", "persist_queue_depth", "host_bytes_budget",
-            "read_cache_bytes", "replicas", "retain", "max_retries"}
+            "read_cache_bytes", "replicas", "retain", "max_retries",
+            "restore_frontier_classes", "remote_part_bytes"}
 _ENV_FLOAT = {"keepalive_s", "save_timeout_s"}
-_ENV_BOOL = {"async_drain_to_slow"}
+_ENV_BOOL = {"async_drain_to_slow", "streaming_restore"}
 
 
 @dataclass(frozen=True)
@@ -204,6 +236,7 @@ class CheckpointPolicy:
     pipeline: PipelinePolicy = field(default_factory=PipelinePolicy)
     durability: DurabilityPolicy = field(default_factory=DurabilityPolicy)
     codec: CodecPolicy = field(default_factory=CodecPolicy)
+    restore: RestorePolicy = field(default_factory=RestorePolicy)
 
     def __post_init__(self):
         if self.mode not in MODES:

@@ -32,7 +32,8 @@ import msgpack
 import numpy as np
 
 from . import codec as codec_mod
-from .elastic import ShardRange, assemble, normalize_index, plan_reads
+from .elastic import (ShardRange, assemble, leaf_first_use_class,
+                      normalize_index, plan_reads)
 from .errors import CorruptShardError, MissingShardError, warn
 
 
@@ -52,7 +53,14 @@ def unpack_shard(data: bytes):
 class ReadCache:
     """LRU, byte-budgeted shard cache, safe under concurrent leaf fan-out.
     Re-inserting a key never double-counts its bytes, and a hit refreshes
-    recency (LRU, not FIFO)."""
+    recency (LRU, not FIFO).
+
+    A SINGLE entry larger than ``limit`` stays resident (eviction stops at
+    one entry, deliberately): the freshly-inserted array is about to be
+    consumed by the leaf that fetched it, and evicting it would only turn
+    the next overlapping range read into a full re-fetch — an always-miss
+    cache with extra copies. The budget bounds steady-state growth, not
+    the instantaneous high-water mark of one oversized shard."""
 
     def __init__(self, limit: int = 1 << 30):
         self.limit = limit
@@ -129,6 +137,22 @@ class RestorePlan:
         return cls(jobs, step_dir,
                    written_policy=pol if isinstance(pol, dict) else None)
 
+    def first_use_schedule(self, priority=None,
+                           frontier_classes: int = 2) -> tuple:
+        """(schedule, frontier): `schedule` is job indices in first-use
+        order (``elastic.leaf_first_use_class`` unless a model supplies
+        `priority`); `frontier` is the leading indices — the first
+        `frontier_classes` DISTINCT classes (embedding + block 0 by
+        default) that must be resident before step 0 begins."""
+        pr = priority or leaf_first_use_class
+        classes = [pr(job[0]) for job in self.jobs]
+        schedule = sorted(range(len(self.jobs)),
+                          key=lambda i: (classes[i], i))
+        lead = sorted(set(classes))[:max(int(frontier_classes), 1)]
+        lead = set(lead)
+        frontier = [i for i in schedule if classes[i] in lead]
+        return schedule, frontier
+
     @staticmethod
     def leaf_ranges(shape, sharding) -> list:
         """Index ranges THIS PROCESS needs from one leaf — what the
@@ -165,17 +189,35 @@ class RestoreSession:
         self.cache = cache
 
     # -- leaf-level ----------------------------------------------------
-    def prefetch(self, plan: RestorePlan) -> list:
-        """Phase 1: fan the per-leaf host fetches out across the restore
-        pool; returns, per job, {range key → host array}."""
-        def host(job):
-            name, rec, sds, sharding, np_dtype = job
-            fetch = self.leaf_fetcher(plan.step_dir, name, rec, np_dtype)
-            shape = tuple(sds.shape)
-            return {(rng.start, rng.stop): fetch(rng)
-                    for rng in RestorePlan.leaf_ranges(shape, sharding)}
+    def fetch_host(self, step_dir: str, job) -> dict:
+        """One leaf's host-side fetch: {range key → host array} for every
+        range THIS process needs. Pool-worker safe (pure numpy + IO)."""
+        name, rec, sds, sharding, np_dtype = job
+        fetch = self.leaf_fetcher(step_dir, name, rec, np_dtype)
+        shape = tuple(sds.shape)
+        return {(rng.start, rng.stop): fetch(rng)
+                for rng in RestorePlan.leaf_ranges(shape, sharding)}
 
-        return self.executor.map_ordered(host, plan.jobs)
+    def prefetch(self, plan: RestorePlan) -> list:
+        """Phase 1 (blocking): fan the per-leaf host fetches out across
+        the restore pool; returns, per job, {range key → host array}."""
+        return self.executor.map_ordered(
+            lambda job: self.fetch_host(plan.step_dir, job), plan.jobs)
+
+    def prefetch_async(self, plan: RestorePlan, schedule=None) -> list:
+        """Phase 1, streaming: dispatch every per-leaf host fetch and
+        return its future — indexed by JOB position, submitted in
+        `schedule` order (first-use), so pool workers drain the frontier
+        first and each leaf releases to device placement as it lands
+        instead of barriering on ``map_ordered``. On the serial engine
+        ``submit`` runs inline, so the futures come back already resolved
+        in schedule order — same bytes, no overlap."""
+        futures: list = [None] * len(plan.jobs)
+        for i in (schedule if schedule is not None
+                  else range(len(plan.jobs))):
+            futures[i] = self.executor.submit(
+                self.fetch_host, plan.step_dir, plan.jobs[i])
+        return futures
 
     def leaf_to_device(self, step_dir, job, prefetched):
         """Phase 2 (MAIN thread only): device array from prefetched host
@@ -300,3 +342,112 @@ class RestoreSession:
                                srec["dtype"], srec.get("meta", {}))
         self.cache.put(key, arr)
         return arr
+
+
+class RestoreStream:
+    """Streaming restore-behind handle (``CheckpointManager.
+    restore_streaming``): every leaf's host fetch is already in flight,
+    submitted in first-use order; this object releases each leaf to device
+    placement as it lands.
+
+    The contract callers rely on:
+
+      * ``wait_frontier()`` blocks only until the first-use frontier
+        (embedding + block 0 by default) is RESIDENT — host data landed
+        and placed on device — so step-0 preparation can begin while tail
+        layers stream in behind;
+      * any touch of an un-landed leaf (``leaf(name)`` or the full
+        ``state()``) blocks on that leaf's future — the completion gate.
+        Restored values are therefore bit-exact by construction: the same
+        host fetch and the same device placement as the blocking path,
+        only ordered differently;
+      * device placement happens on the CALLING thread, never pool
+        workers, and each leaf is placed exactly once (touches are
+        memoized). The object is NOT thread-safe — one consumer thread
+        drives it, like the blocking restore it replaces.
+    """
+
+    def __init__(self, session: RestoreSession, plan: RestorePlan,
+                 futures: list, treedef, schedule: list, frontier: list,
+                 finalize=None):
+        self._session = session
+        self._plan = plan
+        self._futures = futures
+        self._treedef = treedef
+        self._schedule = schedule
+        self._frontier = frontier
+        self._finalize = finalize      # validation + cache clear, once
+        self._placed: dict = {}
+        self._state = None
+
+    # -- introspection -------------------------------------------------
+    @property
+    def names(self) -> list:
+        return [job[0] for job in self._plan.jobs]
+
+    @property
+    def frontier_names(self) -> list:
+        return [self._plan.jobs[i][0] for i in self._frontier]
+
+    def landed(self, name: str) -> bool:
+        """True iff this leaf's host fetch has completed (placement may
+        still be pending) — a touch of it would not block."""
+        return self._futures[self._index(name)].done()
+
+    def landed_count(self) -> int:
+        return sum(1 for f in self._futures if f.done())
+
+    # -- the stream ----------------------------------------------------
+    def _index(self, name: str) -> int:
+        for i, job in enumerate(self._plan.jobs):
+            if job[0] == name:
+                return i
+        raise KeyError(name)
+
+    def _place(self, i: int):
+        if i not in self._placed:
+            pre = self._futures[i].result()     # the completion gate
+            self._placed[i] = self._session.leaf_to_device(
+                self._plan.step_dir, self._plan.jobs[i], pre)
+        return self._placed[i]
+
+    def wait_frontier(self):
+        """Block until the first-use frontier is resident on device;
+        returns self (``stream.wait_frontier().leaf(...)``)."""
+        for i in self._frontier:
+            self._place(i)
+        return self
+
+    def leaf(self, name: str):
+        """Device array for ONE leaf — blocks only on that leaf's future.
+        Step-0 compute walks leaves in first-use order through this, so
+        each touch overlaps the fetches still streaming behind it."""
+        return self._place(self._index(name))
+
+    def state(self):
+        """Drain the stream: place every remaining leaf in first-use
+        order as it lands, unflatten, run the finalize hook (registry
+        validation + read-cache release). Idempotent — the gate that
+        makes the restored state whole and bit-exact."""
+        if self._state is not None:
+            return self._state
+        try:
+            for i in self._schedule:
+                self._place(i)
+        except BaseException:
+            # one failed leaf must not leave siblings running against a
+            # caller that has moved on to raise/retry
+            for f in self._futures:
+                if f is not None and not f.done():
+                    try:
+                        f.result()
+                    except BaseException:  # noqa — surfaced by the first
+                        pass
+            raise
+        out = [self._placed[i] for i in range(len(self._plan.jobs))]
+        import jax
+        state = jax.tree_util.tree_unflatten(self._treedef, out)
+        if self._finalize is not None:
+            self._finalize(state)
+        self._state = state
+        return state

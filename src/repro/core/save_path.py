@@ -629,10 +629,16 @@ def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
         shutil.rmtree(atomic.committed_dir(store.root, s),
                       ignore_errors=True)
     atomic.gc_staging(store.root)
+    # a crash inside an atomic fast-tier write (committed step dirs,
+    # LATEST, _CAS/refs.json) leaves .tmp-* FILES that neither gc_staging
+    # (whole staging dirs) nor the drain purge (slow-tier step dirs)
+    # revisits — sweep them every round, post-drain so none can be live
+    fast_tmp_removed = store.fast.sweep_tmp_litter()
     no_sweep = {"swept": 0, "swept_bytes": 0, "kept": 0, "kept_bytes": 0,
                 "tmp_removed": 0, "evicted": 0, "evicted_bytes": 0}
     if not (dropped or force_sweep):
-        return {"steps_dropped": [], "cas": dict(no_sweep, skipped=True)}
+        return {"steps_dropped": [], "fast_tmp_removed": fast_tmp_removed,
+                "cas": dict(no_sweep, skipped=True)}
     errors: list = []
     live = collect(errors=errors)
     fast_errors: list = []
@@ -655,9 +661,11 @@ def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
              "the CAS sweep (fail-safe) — repair or remove the damaged "
              "step(s) and rerun gc()", steps=errors[:8])
         return {"steps_dropped": dropped,
+                "fast_tmp_removed": fast_tmp_removed,
                 "cas": dict(no_sweep, skipped=True,
                             unreadable_manifests=errors)}
     return {"steps_dropped": dropped,
+            "fast_tmp_removed": fast_tmp_removed,
             "cas": chunks.sweep(live, crash, fast_live=fast_live)}
 
 

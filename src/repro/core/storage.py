@@ -1,9 +1,14 @@
-"""Two-tier checkpoint storage: burst buffer (fast, node-local) + scratch
-(slow, shared) — the Cori DataWarp-vs-Lustre hierarchy from the paper's Fig 2.
+"""Tiered checkpoint storage: burst buffer (fast, node-local) + scratch
+(slow, shared) — the Cori DataWarp-vs-Lustre hierarchy from the paper's
+Fig 2 — plus an optional cold OBJECT-STORE tier (``RemoteTier``) behind
+S3-style request latency and multipart ranged GETs, so cold restarts can
+pull straight from object storage with no staged local copy.
 
-On this box the "burst buffer" is /dev/shm (RAM-backed, real) and "scratch"
-is disk behind a token-bucket bandwidth throttle, so the paper's measured
-hierarchy (>20× checkpoint, ~2.5× restart) is reproducible deterministically.
+On this box the "burst buffer" is /dev/shm (RAM-backed, real), "scratch"
+is disk behind a token-bucket bandwidth throttle, and the "object store"
+is a local directory behind per-request latency + the same token bucket,
+so the paper's measured hierarchy (>20× checkpoint, ~2.5× restart) is
+reproducible deterministically.
 
 Also implements the paper's P8: capacity preflight with a coded warning/error
 instead of a mid-write failure.
@@ -76,6 +81,14 @@ class Tier:
         path.parent.mkdir(parents=True, exist_ok=True)
         dst = path.with_name(
             path.name + f".tmp-{secrets.token_hex(4)}") if atomic else path
+        try:
+            # overwrite frees the old bytes: charging len(data) on top of
+            # the prior charge would drift _used upward every rewrite
+            # (LATEST, _CAS/refs.json) until a capacity-capped tier hits
+            # false CKPT_W_SPACE warnings and spurious SpaceError preflights
+            prior = path.stat().st_size
+        except OSError:
+            prior = 0
         chunk = 4 << 20
         with open(dst, "wb") as f:
             for i in range(0, len(data), chunk):
@@ -87,7 +100,7 @@ class Tier:
         if atomic:
             os.rename(dst, path)
         with self._lock:
-            self._used += len(data)
+            self._used = max(self._used + len(data) - prior, 0)
         return path
 
     def read_file(self, rel: str) -> bytes:
@@ -99,14 +112,44 @@ class Tier:
     def read_into(self, rel: str, dest: memoryview) -> bool:
         """Direct-placement read: fill `dest` from the file without an
         intermediate bytes object. True iff the file length matched the
-        destination exactly (a mismatch — truncated or over-long object —
-        leaves the caller to fall back to the verified copy path)."""
+        destination exactly; False on a mismatch (truncated or over-long
+        object) AND on any OSError — a vanished/unreadable file must send
+        the caller to the verified-fallback path, never crash a restore
+        pool worker. Bytes actually read pay the token bucket BEFORE the
+        return either way (like ``read_file``), so short reads cannot
+        bypass the bandwidth model the io-sweep A/B depends on."""
         path = self.root / rel
-        with open(path, "rb") as f:
-            n = f.readinto(dest)
-            ok = n == len(dest) and not f.read(1)
-        self._throttle(n or 0)
+        try:
+            with open(path, "rb") as f:
+                n = f.readinto(dest) or 0
+                ok = n == len(dest) and not f.read(1)
+        except OSError:
+            return False
+        self._throttle(n)
         return ok
+
+    def sweep_tmp_litter(self) -> int:
+        """Remove orphaned ``.tmp-*`` FILES under this tier's root — the
+        litter a crash inside an ``atomic=True`` write (or
+        ``atomic_write_bytes``) leaves behind, which no commit path ever
+        revisits. Staging *directories* (``step_*.tmp-*/``) are skipped:
+        ``atomic.gc_staging`` owns those wholesale. Returns files removed.
+
+        Callers must ensure no atomic write is in flight on this tier
+        (``run_maintenance`` runs post-drain on the persist thread)."""
+        removed = 0
+        for p in self.root.rglob("*.tmp-*"):
+            if not p.is_file():
+                continue
+            if any(".tmp-" in part for part in
+                   p.relative_to(self.root).parts[:-1]):
+                continue        # inside a staging dir: gc_staging territory
+            try:
+                p.unlink()
+                removed += 1
+            except OSError:
+                pass
+        return removed
 
     def delete_file(self, rel: str) -> int:
         """Remove a file, returning the bytes freed (0 if absent)."""
@@ -121,15 +164,105 @@ class Tier:
         return nbytes
 
 
+DEFAULT_REMOTE_PART_BYTES = 8 << 20
+DEFAULT_REMOTE_LATENCY_S = 0.0
+
+
+@dataclass
+class RemoteTier(Tier):
+    """S3-style cold object store, simulated on a local directory: every
+    request (GET / ranged GET / HEAD) pays ``request_latency_s`` before any
+    bytes flow, bytes pay the inherited token bucket, and reads larger than
+    ``part_bytes`` are issued as MULTIPART ranged GETs (each part its own
+    request) — the access model of `aws s3api get-object --range` that a
+    cold restart streams against.
+
+    PUTs are always atomic (an object either exists in full or not at
+    all — there are no torn objects in an object store), whatever the
+    caller passed for ``atomic``."""
+    request_latency_s: float = DEFAULT_REMOTE_LATENCY_S
+    part_bytes: int = DEFAULT_REMOTE_PART_BYTES
+
+    def __post_init__(self):
+        super().__post_init__()
+        if int(self.part_bytes) <= 0:
+            raise ValueError("part_bytes must be positive")
+
+    def _request(self):
+        if self.request_latency_s > 0:
+            time.sleep(self.request_latency_s)
+
+    def write_file(self, rel: str, data: bytes, *, atomic: bool = True):
+        self._request()                     # one PUT round-trip
+        return super().write_file(rel, data, atomic=True)
+
+    def read_range(self, rel: str, dest: memoryview, offset: int) -> bool:
+        """ONE ranged GET: fill `dest` from `offset`. False on any OSError
+        or short read (the verified-fallback contract of ``read_into``)."""
+        self._request()
+        try:
+            with open(self.root / rel, "rb") as f:
+                f.seek(offset)
+                n = f.readinto(dest) or 0
+        except OSError:
+            return False
+        self._throttle(n)
+        return n == len(dest)
+
+    def read_into(self, rel: str, dest: memoryview) -> bool:
+        """Whole-object direct placement as multipart ranged GETs. A size
+        mismatch is detected from the object stat (the HEAD every GET
+        response carries) before any part is fetched."""
+        path = self.root / rel
+        try:
+            size = path.stat().st_size
+        except OSError:
+            return False
+        mv = memoryview(dest)
+        if size != len(mv):
+            return False
+        for off in range(0, len(mv), int(self.part_bytes)):
+            if not self.read_range(rel, mv[off:off + int(self.part_bytes)],
+                                   off):
+                return False
+        return True
+
+    def read_file(self, rel: str) -> bytes:
+        size = (self.root / rel).stat().st_size   # raises if absent
+        buf = bytearray(size)
+        if not self.read_into(rel, memoryview(buf)):
+            raise OSError(f"remote object changed mid-read: {rel}")
+        return bytes(buf)
+
+
+def mirror_to_tier(src: Tier, dst: Tier) -> int:
+    """Copy every committed file under `src` to `dst` (atomic writes;
+    ``.tmp-*`` litter and staging dirs skipped) — the stand-in for the
+    out-of-band sync (`aws s3 sync`) that populates a ``RemoteTier`` from
+    a drained checkpoint root. Returns files copied."""
+    copied = 0
+    for p in sorted(src.root.rglob("*")):
+        if not p.is_file() or ".tmp-" in str(p.relative_to(src.root)):
+            continue
+        dst.write_file(str(p.relative_to(src.root)), p.read_bytes(),
+                       atomic=True)
+        copied += 1
+    return copied
+
+
 class TieredStore:
     """Writes land on the fast tier; committed checkpoints drain to the slow
-    tier in the background (real burst-buffer semantics). Reads prefer fast.
-    """
+    tier in the background (real burst-buffer semantics). Reads prefer fast,
+    then slow, then the cold ``remote`` object-store tier — a cold restart
+    with an empty burst buffer resolves every read straight off the remote
+    tier's ranged GETs, no staged local copy."""
 
     def __init__(self, fast: Tier, slow: Tier | None = None,
-                 drain_async: bool = True, io_executor=None):
+                 drain_async: bool = True, io_executor=None,
+                 remote: Tier | None = None):
         self.fast = fast
         self.slow = slow
+        self.remote = remote
         self.drain_async = drain_async
         # optional ChunkIOExecutor: drain copies fan out over it so the
         # read side (fast tier) overlaps the throttled write side (slow
@@ -152,8 +285,17 @@ class TieredStore:
             self.drain_async = bool(pipeline.async_drain)
         return self
 
+    def apply_restore_policy(self, restore) -> "TieredStore":
+        """Adopt a ``RestorePolicy``'s remote-read shape (multipart ranged
+        GET size) onto the remote tier, if one is mounted."""
+        part = getattr(restore, "remote_part_bytes", None)
+        if self.remote is not None and part:
+            self.remote.part_bytes = int(part)
+        return self
+
     def tiers(self):
-        return [t for t in (self.fast, self.slow) if t is not None]
+        return [t for t in (self.fast, self.slow, self.remote)
+                if t is not None]
 
     def drain_step(self, step_dir_name: str, extra_files=()):
         """Copy a committed checkpoint dir fast→slow (throttled) on ONE
@@ -233,8 +375,13 @@ class TieredStore:
 
 
 def default_store(workdir: str | Path, *, burst_buffer: bool = True,
-                  lustre_bw: float | None = 500e6) -> TieredStore:
-    """fast = /dev/shm (if available), slow = <workdir>/scratch (throttled)."""
+                  lustre_bw: float | None = 500e6,
+                  remote_dir: str | Path | None = None,
+                  remote_bw: float | None = None,
+                  remote_latency_s: float = DEFAULT_REMOTE_LATENCY_S) \
+        -> TieredStore:
+    """fast = /dev/shm (if available), slow = <workdir>/scratch (throttled),
+    plus an optional cold object-store tier when `remote_dir` is given."""
     workdir = Path(workdir)
     shm = Path("/dev/shm")
     if burst_buffer and shm.exists() and os.access(shm, os.W_OK):
@@ -243,4 +390,9 @@ def default_store(workdir: str | Path, *, burst_buffer: bool = True,
     else:
         fast = Tier("local", workdir / "bb")
     slow = Tier("scratch-sim", workdir / "scratch", bw_bytes_per_s=lustre_bw)
-    return TieredStore(fast, slow)
+    remote = None
+    if remote_dir is not None:
+        remote = RemoteTier("object-store", Path(remote_dir),
+                            bw_bytes_per_s=remote_bw,
+                            request_latency_s=remote_latency_s)
+    return TieredStore(fast, slow, remote=remote)

@@ -209,6 +209,44 @@ def _policy_block(manifest: dict, report: dict, out) -> None:
             f"settings for this step")
 
 
+def _step_rels(manifest: dict, step_dir: str) -> list:
+    """Every storage-relative path the inspected step depends on: its
+    inline shard files (all replicas) plus the unique chunk objects its
+    chunked shards reference."""
+    rels: list = []
+    digests: set = set()
+    for rec in manifest["leaves"].values():
+        for s in rec["shards"]:
+            if "chunks" in s:
+                digests.update(s["chunks"])
+            else:
+                for fname in s.get("replicas", [s["file"]]):
+                    rels.append(f"{step_dir}/{fname}")
+    rels.extend(cas.object_rel(d) for d in sorted(digests))
+    return rels
+
+
+def _tier_residency(tier_roots: dict, manifest: dict, step_dir: str,
+                    report: dict, out) -> None:
+    """Per-tier residency of the inspected step — how many of its files
+    (shards + chunk objects) each tier holds. The restore hierarchy reads
+    fast → slow → remote, so `fast 0/N, remote N/N` is the cold-restart
+    shape: every byte will stream off the object store's ranged reads."""
+    rels = _step_rels(manifest, step_dir)
+    if not rels:
+        return
+    res = {}
+    for name, root in tier_roots.items():
+        if root is None:
+            continue
+        root = Path(root)
+        present = sum(1 for r in rels if (root / r).exists())
+        res[name] = {"present": present, "total": len(rels)}
+    report["residency"] = res
+    out("    residency: " + "  ".join(
+        f"{name} {v['present']}/{v['total']}" for name, v in res.items()))
+
+
 def _pending_rounds(root: Path, staging: list) -> list:
     """In-flight (pending-stage) rounds: staging dirs whose PENDING marker
     still parses. An overlapped save(blocking=False) legitimately keeps
@@ -233,7 +271,8 @@ def _pending_rounds(root: Path, staging: list) -> list:
                                          -(r["age_s"] or 0)))
 
 
-def inspect(root: Path, step=None, verify=False, out=print):
+def inspect(root: Path, step=None, verify=False, out=print,
+            slow_root: Path | None = None, remote_root: Path | None = None):
     report = {"root": str(root), "ok": True, "problems": []}
     latest = atomic.read_latest(root)
     steps = atomic.list_committed_steps(root)
@@ -286,6 +325,9 @@ def inspect(root: Path, step=None, verify=False, out=print):
     report.update(step=step, leaves=len(manifest["leaves"]),
                   shards=n_shards, mode=manifest.get("mode", "full"),
                   roles={k: v[1] for k, v in by_role.items()})
+    _tier_residency({"fast": root, "slow": slow_root,
+                     "remote": remote_root},
+                    manifest, mdir.name, report, out)
 
     dedup = _step_dedup(root, manifest)
     if dedup is not None:
@@ -407,9 +449,16 @@ def main(argv=None):
     ap.add_argument("--step", type=int, default=None)
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--slow-root", type=Path, default=None,
+                    help="slow (scratch) tier root — adds its per-tier "
+                         "residency column for the inspected step")
+    ap.add_argument("--remote-root", type=Path, default=None,
+                    help="remote object-store tier root — adds its "
+                         "per-tier residency column")
     args = ap.parse_args(argv)
     sink = (lambda *_: None) if args.json else print
-    rep = inspect(args.root, step=args.step, verify=args.verify, out=sink)
+    rep = inspect(args.root, step=args.step, verify=args.verify, out=sink,
+                  slow_root=args.slow_root, remote_root=args.remote_root)
     if args.json:
         print(json.dumps(rep, indent=1, default=str))
     return 0 if rep["ok"] else 1

@@ -49,6 +49,19 @@ def main(argv=None):
                     help="cap on aggregate host snapshot bytes queued "
                          "rounds may pin (admission blocks instead of "
                          "OOMing the host)")
+    ap.add_argument("--streaming-restore", action="store_true",
+                    help="begin step 0 once the first-use frontier "
+                         "(embedding + block 0) is resident; tail layers "
+                         "stream in behind the completion gate")
+    ap.add_argument("--remote-dir", default=None,
+                    help="mount a cold object-store tier (simulated) at "
+                         "this directory — cold restarts pull straight "
+                         "from it via multipart ranged reads")
+    ap.add_argument("--remote-bw", type=float, default=None,
+                    help="remote tier bandwidth in bytes/s "
+                         "(default unthrottled)")
+    ap.add_argument("--remote-latency", type=float, default=0.0,
+                    help="remote tier per-request latency in seconds")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--writers", type=int, default=4)
     ap.add_argument("--grad-accum", type=int, default=1)
@@ -82,7 +95,10 @@ def main(argv=None):
         io_threads=args.io_threads,
         persist_queue_depth=args.persist_queue_depth,
         host_bytes_budget=args.host_bytes_budget, replicas=args.replicas,
-        n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed)
+        n_writers=args.writers, grad_accum=args.grad_accum, seed=args.seed,
+        streaming_restore=args.streaming_restore,
+        remote_dir=args.remote_dir, remote_bw=args.remote_bw,
+        remote_latency_s=args.remote_latency)
     trainer = Trainer(cfg, tcfg).init_or_restore()
     report = trainer.fit(args.steps)
     print(f"status={report['status']} step={report['step']} "

@@ -58,6 +58,10 @@ class TrainerConfig:
     grad_accum: int = 1
     burst_buffer: bool = False      # /dev/shm tier (benchmarks turn this on)
     lustre_bw: float | None = None  # None = unthrottled slow tier
+    streaming_restore: bool = False  # begin step 0 at the first-use frontier
+    remote_dir: str | None = None   # mount a cold object-store tier
+    remote_bw: float | None = None  # None = unthrottled remote tier
+    remote_latency_s: float = 0.0   # per-request latency of the remote tier
 
 
 class Trainer:
@@ -81,7 +85,10 @@ class Trainer:
             donate_argnums=(0,), out_shardings=(self._shardings, None))
         store = store or default_store(tcfg.workdir,
                                        burst_buffer=tcfg.burst_buffer,
-                                       lustre_bw=tcfg.lustre_bw)
+                                       lustre_bw=tcfg.lustre_bw,
+                                       remote_dir=tcfg.remote_dir,
+                                       remote_bw=tcfg.remote_bw,
+                                       remote_latency_s=tcfg.remote_latency_s)
         # TrainerConfig's flat checkpoint fields compose into the policy
         # object (the canonical constructor), with REPRO_CKPT_* env
         # overrides merged last — an operator can retune a queued job's
@@ -93,7 +100,8 @@ class Trainer:
             chunk_size=tcfg.chunk_size, chunking=tcfg.chunking,
             scan_backend=tcfg.scan_backend, io_threads=tcfg.io_threads,
             persist_queue_depth=tcfg.persist_queue_depth,
-            host_bytes_budget=tcfg.host_bytes_budget)
+            host_bytes_budget=tcfg.host_bytes_budget,
+            streaming_restore=tcfg.streaming_restore)
         self.manager = CheckpointManager(
             store, policy=CheckpointPolicy.from_env(base=policy))
         # ---- upper half ----
@@ -102,6 +110,8 @@ class Trainer:
         self.py_step = 0
         self.history: list = []
         self.restored_from = None
+        self._restore_stream = None     # in-flight streaming restore
+        self._pending_batch = None      # step-0 input staged during the tail
 
     # ------------------------------------------------------------------
     def _extra(self) -> dict:
@@ -124,6 +134,18 @@ class Trainer:
             self.data_state = self.pipeline.init_state(self.tcfg.seed)
             self.py_step = 0
             log.info("initialized fresh state (seed=%d)", self.tcfg.seed)
+        elif self.manager.policy.restore.streaming:
+            # streaming restore-behind: every leaf fetch is in flight in
+            # first-use order; fit() begins step 0 once the frontier is
+            # resident and drains the tail behind the completion gate
+            self._restore_stream, extra = self.manager.restore_streaming(
+                self._abstract, self._shardings, step=latest)
+            self.data_state = DataState.from_json(extra["data_state"])
+            self.py_step = int(extra.get("py_step", latest))
+            self.restored_from = latest
+            log.info("restoring step %d STREAMING (%d leaves in flight, "
+                     "frontier %d)", latest, len(self._restore_stream.names),
+                     len(self._restore_stream.frontier_names))
         else:
             self.state, extra = self.manager.restore(
                 self._abstract, self._shardings, step=latest)
@@ -136,15 +158,41 @@ class Trainer:
         return self
 
     def save(self, *, blocking: bool = True):
+        if self._restore_stream is not None:
+            self._finish_streaming_restore()
         return self.manager.save(self.state, self.py_step,
                                  extra=self._extra(), blocking=blocking)
+
+    def _finish_streaming_restore(self):
+        """Begin step 0 at the first-use frontier: once the frontier is
+        resident, stage the step-0 batch (pipeline fetch + host→device
+        transfer overlap the still-streaming tail), then cross the
+        completion gate — every remaining leaf placed as it lands, the
+        full state whole and bit-exact before the first ``step_fn``."""
+        stream, self._restore_stream = self._restore_stream, None
+        t0 = time.monotonic()
+        stream.wait_frontier()
+        t_frontier = time.monotonic() - t0
+        log.info("restore frontier resident in %.3fs (%d/%d leaves "
+                 "landed) — beginning step 0 behind the completion gate",
+                 t_frontier, stream.landed_count(), len(stream.names))
+        batch, next_ds = self.pipeline.next(self.data_state)
+        batch = jax.device_put(batch, batch_spec(batch, self.mesh))
+        self._pending_batch = (batch, next_ds)
+        self.state = stream.state()
+        log.info("restore stream complete in %.3fs (tail %.3fs behind "
+                 "the frontier)", time.monotonic() - t0,
+                 time.monotonic() - t0 - t_frontier)
 
     # ------------------------------------------------------------------
     def fit(self, n_steps: int, *, guard: PreemptionGuard | None = None,
             stop_after: int | None = None) -> dict:
         """Run until `n_steps` total steps (absolute), a preemption signal,
         or `stop_after` additional steps (tests). Returns a status report."""
-        assert self.state is not None, "call init_or_restore() first"
+        assert self.state is not None or self._restore_stream is not None, \
+            "call init_or_restore() first"
+        if self._restore_stream is not None:
+            self._finish_streaming_restore()
         own_guard = guard is None
         guard = guard or PreemptionGuard()
         # SIGTERM mid-persist: flip the manager's fast-flush flag from the
@@ -169,8 +217,14 @@ class Trainer:
                              self.py_step, rep["seconds"])
                     status = "preempted"
                     break
-                batch, next_ds = self.pipeline.next(self.data_state)
-                batch = jax.device_put(batch, batch_spec(batch, self.mesh))
+                if self._pending_batch is not None:
+                    # step-0 input staged while the restore tail streamed
+                    batch, next_ds = self._pending_batch
+                    self._pending_batch = None
+                else:
+                    batch, next_ds = self.pipeline.next(self.data_state)
+                    batch = jax.device_put(batch,
+                                           batch_spec(batch, self.mesh))
                 t0 = time.monotonic()
                 self.state, metrics = self.step_fn(self.state, batch)
                 self.data_state = next_ds
@@ -212,6 +266,8 @@ class Trainer:
     def params_digest(self) -> str:
         """Bit-exactness probe: order-stable hash of all params bytes."""
         import hashlib
+        if self._restore_stream is not None:
+            self._finish_streaming_restore()
         h = hashlib.sha256()
         from ..core.split_state import leaf_paths
         for name, leaf in leaf_paths(self.state["params"]):

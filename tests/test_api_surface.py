@@ -9,7 +9,8 @@ import repro.core as core
 from repro.core.chunk_exec import DEFAULT_IO_THREADS
 from repro.core.policy import (CheckpointPolicy, ChunkingPolicy,
                                CodecPolicy, DurabilityPolicy,
-                               LEGACY_KWARGS, PipelinePolicy)
+                               LEGACY_KWARGS, PipelinePolicy, RestorePolicy)
+from repro.core.storage import DEFAULT_REMOTE_PART_BYTES
 
 EXPORTED = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
@@ -20,7 +21,8 @@ EXPORTED = [
     "MissingShardError", "NamespaceError",
     "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
     "PreemptionGuard",
-    "ReadCache", "RegistryMismatchError", "RestorePlan", "RestoreSession",
+    "ReadCache", "RegistryMismatchError", "RemoteTier", "RestorePlan",
+    "RestorePolicy", "RestoreSession", "RestoreStream",
     "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
     "abstract_train_state", "config_digest", "default_store",
     "init_train_state", "leaf_paths", "lower_half_descriptor",
@@ -71,9 +73,12 @@ def test_policy_fields_and_defaults_are_pinned():
         "replicas": 1, "retain": 3, "keepalive_s": 10.0,
         "save_timeout_s": 600.0, "max_retries": 1}
     assert _fields(CodecPolicy) == {"codec": None, "params_codec": None}
+    assert _fields(RestorePolicy) == {
+        "streaming": False, "frontier_classes": 2,
+        "remote_part_bytes": DEFAULT_REMOTE_PART_BYTES}
     top = _fields(CheckpointPolicy)
     assert list(top) == ["mode", "n_writers", "chunking", "pipeline",
-                         "durability", "codec"]
+                         "durability", "codec", "restore"]
     assert top["mode"] == "full" and top["n_writers"] == 4
 
 

@@ -1,0 +1,173 @@
+"""Streaming restore-behind: first-use ordering, the frontier contract,
+the completion gate's bit-exactness, cold-remote restores, and the
+ReadCache single-oversized-entry pin."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_ckpt_policy
+from repro.core.checkpoint import CheckpointManager
+from repro.core.elastic import (FIRST_USE_DEFAULT, FIRST_USE_TAIL,
+                                first_use_order, leaf_first_use_class)
+from repro.core.restore_path import ReadCache
+from repro.core.storage import RemoteTier, Tier, TieredStore, mirror_to_tier
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _state(layers=4):
+    params = {"embed": jax.random.normal(KEY, (32, 8)),
+              "lm_head": jax.random.normal(KEY, (8, 32))}
+    for k in range(layers):
+        params[f"stage_0/b{k}/w"] = jax.random.normal(
+            jax.random.fold_in(KEY, k), (16, 8))
+    return {"params": params,
+            "opt": {"count": jnp.zeros((), jnp.int32)},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def _abstract(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# first-use ordering
+# ---------------------------------------------------------------------------
+
+def test_leaf_first_use_classes():
+    assert leaf_first_use_class("params/embed") == 0
+    assert leaf_first_use_class("step") == 0
+    assert leaf_first_use_class("opt/count") == 0
+    b0 = leaf_first_use_class("params/stage_0/b0/w")
+    b1 = leaf_first_use_class("params/stage_0/b1/w")
+    assert 0 < b0 < b1 < FIRST_USE_DEFAULT
+    assert leaf_first_use_class("opt/f/something/v") == FIRST_USE_DEFAULT
+    assert leaf_first_use_class("params/lm_head") == FIRST_USE_TAIL
+    assert leaf_first_use_class("params/final_norm/scale") == FIRST_USE_TAIL
+    # blocks order before ANY unclassified or tail leaf
+    assert b1 < leaf_first_use_class("params/final_norm/scale")
+
+
+def test_first_use_order_sorts_like_a_forward_pass():
+    names = ["params/lm_head", "params/stage_0/b1/w", "params/embed",
+             "params/stage_0/b0/w", "opt/f/misc", "step"]
+    assert [names[i] for i in first_use_order(names)] == [
+        "params/embed", "step", "params/stage_0/b0/w",
+        "params/stage_0/b1/w", "opt/f/misc", "params/lm_head"]
+    # a model-supplied priority overrides the heuristic entirely
+    rev = first_use_order(names, priority=lambda n: -names.index(n))
+    assert [names[i] for i in rev] == list(reversed(names))
+
+
+def test_first_use_schedule_frontier(tmp_path):
+    state = _state()
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)),
+                            policy=make_ckpt_policy(mode="incremental"))
+    mgr.save(state, 3)
+    _, _, _, plan, _ = mgr._plan_restore(_abstract(state), None, None)
+    schedule, frontier = plan.first_use_schedule(None, 2)
+    names = [plan.jobs[i][0] for i in schedule]
+    # class 0 (embed + scalars) first, then block 0 — the frontier
+    want_frontier = {"params/embed", "opt/count", "step",
+                     "params/stage_0/b0/w"}
+    assert set(plan.jobs[i][0] for i in frontier) == want_frontier
+    assert set(names[:len(frontier)]) == want_frontier
+    assert names[-1] == "params/lm_head"
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# the stream: frontier, completion gate, bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("io_threads", [1, 4])
+def test_streaming_bit_exact_vs_blocking(tmp_path, io_threads):
+    state = _state()
+    pol = make_ckpt_policy(mode="incremental", io_threads=io_threads,
+                           streaming_restore=True)
+    mgr = CheckpointManager(TieredStore(Tier("f", tmp_path)), policy=pol)
+    mgr.save(state, 3, extra={"tag": "x"})
+    blocking, _ = mgr.restore(_abstract(state))
+
+    stream, extra = mgr.restore_streaming(_abstract(state))
+    assert extra == {"tag": "x"}
+    assert set(stream.names) == set(
+        ["params/embed", "params/lm_head", "opt/count", "step"]
+        + [f"params/stage_0/b{k}/w" for k in range(4)])
+    stream.wait_frontier()
+    for name in stream.frontier_names:
+        assert stream.landed(name)
+        np.testing.assert_array_equal(
+            np.asarray(stream.leaf(name)),
+            np.asarray(stream.leaf(name)))      # memoized touch
+    got = stream.state()
+    assert stream.state() is got                # idempotent gate
+    assert stream.landed_count() == len(stream.names)
+    _assert_tree_equal(blocking, got)
+    _assert_tree_equal(state, got)
+    mgr.close()
+
+
+def test_streaming_restore_cold_remote(tmp_path):
+    """The production redeploy: the only copy of the checkpoint lives on
+    the object-store tier; a cold store (empty fast tier) streams the
+    restore straight off multipart ranged GETs."""
+    state = _state()
+    writer = CheckpointManager(
+        TieredStore(Tier("w", tmp_path / "writer")),
+        policy=make_ckpt_policy(mode="incremental", io_threads=4))
+    writer.save(state, 3)
+    writer.close()
+    mirror_to_tier(Tier("w", tmp_path / "writer"),
+                   RemoteTier("obj", tmp_path / "remote"))
+
+    cold = CheckpointManager(
+        TieredStore(Tier("fast", tmp_path / "cold"),
+                    remote=RemoteTier("obj", tmp_path / "remote",
+                                      part_bytes=256,
+                                      request_latency_s=0.0)),
+        policy=make_ckpt_policy(mode="incremental", io_threads=4,
+                                streaming_restore=True))
+    assert cold.latest_step() == 3
+    stream, _ = cold.restore_streaming(_abstract(state))
+    got = stream.wait_frontier().state()
+    _assert_tree_equal(state, got)
+    cold.close()
+
+
+def test_remote_part_bytes_policy_reaches_the_tier(tmp_path):
+    remote = RemoteTier("obj", tmp_path / "remote")
+    mgr = CheckpointManager(
+        TieredStore(Tier("f", tmp_path / "fast"), remote=remote),
+        policy=make_ckpt_policy(remote_part_bytes=1234))
+    assert remote.part_bytes == 1234
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# ReadCache: the single-oversized-entry pin
+# ---------------------------------------------------------------------------
+
+def test_read_cache_single_over_limit_entry_stays_resident():
+    """Deliberate (docstring-pinned) behaviour: ONE entry larger than the
+    budget stays resident — the leaf that fetched it is about to consume
+    it, and evicting it would only force a full re-fetch. The budget
+    bounds steady-state growth, not the high-water mark of one shard."""
+    cache = ReadCache(limit=100)
+    big = np.zeros(150, np.uint8)
+    cache.put("big", big)
+    assert cache.get("big") is big
+    assert cache.nbytes == 150
+    # the next insert evicts the oversized one (LRU) down to one entry
+    small = np.zeros(60, np.uint8)
+    cache.put("small", small)
+    assert cache.get("small") is small
+    assert len(cache.entries) == 1 and cache.nbytes == 60
+    assert cache.get("big") is None

@@ -1,9 +1,11 @@
-"""Storage tiers: throttling, capacity, tiered drain/evict/locate."""
+"""Storage tiers: throttling, capacity, tiered drain/evict/locate, the
+overwrite accounting regression, remote-tier ranged reads, tmp sweep."""
+import os
 import time
 
 import pytest
 
-from repro.core.storage import Tier, TieredStore
+from repro.core.storage import RemoteTier, Tier, TieredStore
 
 
 def test_throttle_enforces_bandwidth(tmp_path):
@@ -42,3 +44,133 @@ def test_capacity_accounting(tmp_path):
     tier = Tier("t", tmp_path, capacity_bytes=1000)
     tier.write_file("a", b"x" * 600)
     assert tier.free_bytes() == 400
+
+
+def test_overwrite_does_not_double_count_used(tmp_path):
+    """The regression this PR fixes: rewriting the same file (LATEST,
+    _CAS/refs.json — every save) must NOT keep charging `_used`, or a
+    capacity-capped tier drifts into false SpaceError preflights."""
+    tier = Tier("t", tmp_path, capacity_bytes=10_000)
+    for _ in range(20):
+        tier.write_file("LATEST", b"x" * 100)
+    assert tier._used == 100
+    assert tier.free_bytes() == 9_900
+    # shrinking and growing overwrites both settle on the current size
+    tier.write_file("LATEST", b"x" * 40)
+    assert tier._used == 40
+    tier.write_file("LATEST", b"x" * 250, atomic=True)
+    assert tier._used == 250
+    tier.delete_file("LATEST")
+    assert tier._used == 0
+
+
+def test_read_into_missing_file_returns_false(tmp_path):
+    """A vanished object must send the caller to the verified-fallback
+    path, not crash a restore pool worker."""
+    tier = Tier("t", tmp_path)
+    assert tier.read_into("nope.bin", memoryview(bytearray(8))) is False
+    remote = RemoteTier("r", tmp_path / "r")
+    assert remote.read_into("nope.bin", memoryview(bytearray(8))) is False
+    assert remote.read_range("nope.bin", memoryview(bytearray(8)), 0) is False
+
+
+def test_read_into_pays_the_token_bucket(tmp_path):
+    """Bytes read via direct placement pay bandwidth BEFORE the return,
+    same as read_file — short-circuiting would corrupt the io-sweep A/B."""
+    bw = 20e6
+    payload = b"x" * int(10e6)
+    (tmp_path / "f.bin").write_bytes(payload)
+    # construct AFTER the setup write: the token bucket starts accruing
+    # at construction, and a slow 9p write would otherwise pre-fill it
+    tier = Tier("slow", tmp_path, bw_bytes_per_s=bw)
+    buf = bytearray(len(payload))
+    t0 = time.monotonic()
+    assert tier.read_into("f.bin", memoryview(buf)) is True
+    assert time.monotonic() - t0 >= 0.25  # ≥ (10MB - 1s bucket) / 20MB/s
+    assert bytes(buf) == payload
+
+
+def test_read_into_length_mismatch(tmp_path):
+    tier = Tier("t", tmp_path)
+    tier.write_file("f.bin", b"abcdef")
+    assert tier.read_into("f.bin", memoryview(bytearray(4))) is False
+    assert tier.read_into("f.bin", memoryview(bytearray(8))) is False
+    assert tier.read_into("f.bin", memoryview(bytearray(6))) is True
+
+
+def test_remote_tier_multipart_ranged_reads(tmp_path):
+    """A read larger than part_bytes is issued as multipart ranged GETs,
+    each paying the per-request latency; PUTs are always atomic."""
+    payload = os.urandom(10_000)
+    remote = RemoteTier("obj", tmp_path, part_bytes=4096,
+                        request_latency_s=0.01)
+    remote.write_file("o.bin", payload, atomic=False)  # forced atomic anyway
+    assert not list(tmp_path.rglob("*.tmp-*"))
+    buf = bytearray(len(payload))
+    t0 = time.monotonic()
+    assert remote.read_into("o.bin", memoryview(buf)) is True
+    # ceil(10000/4096) = 3 ranged GETs at 10ms each
+    assert time.monotonic() - t0 >= 0.03
+    assert bytes(buf) == payload
+    assert remote.read_file("o.bin") == payload
+    with pytest.raises(ValueError):
+        RemoteTier("bad", tmp_path / "bad", part_bytes=0)
+
+
+def test_tiered_store_reads_fall_through_to_remote(tmp_path):
+    fast = Tier("fast", tmp_path / "fast")
+    remote = RemoteTier("obj", tmp_path / "remote")
+    store = TieredStore(fast, remote=remote)
+    remote.write_file("step_1/a.bin", b"cold")
+    assert store.locate("step_1/a.bin").name == "obj"
+    assert [t.name for t in store.tiers()] == ["fast", "obj"]
+
+
+def test_sweep_tmp_litter_after_crash_in_write(tmp_path, monkeypatch):
+    """Kill inside write_file(atomic=True) → orphan .tmp-* litter that no
+    commit path revisits; sweep_tmp_litter removes exactly those FILES
+    while leaving staging DIRS (gc_staging territory) alone."""
+    tier = Tier("fast", tmp_path)
+    tier.write_file("LATEST", b"ok")
+
+    def boom(src, dst):
+        raise OSError("killed before rename")
+    with monkeypatch.context() as m:
+        m.setattr(os, "rename", boom)
+        with pytest.raises(OSError):
+            tier.write_file("LATEST", b"torn", atomic=True)
+    litter = list(tmp_path.rglob("*.tmp-*"))
+    assert len(litter) == 1 and litter[0].is_file()
+    # a staging DIR and its contents are not this sweep's to remove
+    staging = tmp_path / "step_9.tmp-deadbeef"
+    staging.mkdir()
+    (staging / "shard_0.bin").write_bytes(b"in-flight")
+    (staging / "inner.tmp-1234").write_bytes(b"nested litter")
+    assert tier.sweep_tmp_litter() == 1
+    assert staging.exists()
+    assert (staging / "shard_0.bin").exists()
+    assert (staging / "inner.tmp-1234").exists()
+    assert (tmp_path / "LATEST").read_bytes() == b"ok"
+    assert tier.sweep_tmp_litter() == 0
+
+
+def test_maintenance_sweeps_fast_tier_tmp_litter(tmp_path):
+    """The crash-matrix point: after a kill inside an atomic fast-tier
+    write, the next maintenance round leaves zero orphan tmp files."""
+    import jax.numpy as jnp
+
+    from conftest import make_ckpt_policy
+    from repro.core.checkpoint import CheckpointManager
+
+    fast = Tier("fast", tmp_path / "fast")
+    mgr = CheckpointManager(TieredStore(fast),
+                            policy=make_ckpt_policy(mode="incremental"))
+    mgr.save({"step": jnp.asarray(1, jnp.int32)}, 1)
+    from repro.core.atomic import committed_dir
+    (fast.root / "LATEST.tmp-feed").write_bytes(b"orphan")
+    (committed_dir(fast.root, 1) / "extra.json.tmp-beef").write_bytes(
+        b"orphan")
+    report = mgr.gc()
+    assert report["fast_tmp_removed"] == 2
+    assert not list(fast.root.rglob("*.tmp-*"))
+    mgr.close()

@@ -74,6 +74,31 @@ def test_async_checkpoint_drains_and_is_valid(tmp_path):
     assert t2.params_digest() == t.params_digest()
 
 
+@pytest.mark.slow
+def test_streaming_restore_bit_exact_resume(tmp_path):
+    """Restore-behind through the Trainer: step 0 begins at the first-use
+    frontier, the tail streams in behind the completion gate, and the
+    resumed run is bit-exact with a straight-through run."""
+    tA = Trainer(CFG, _tcfg(tmp_path / "a", ckpt_every=100, seed=5))
+    tA.init_or_restore()
+    tA.fit(8)
+    dA = tA.params_digest()
+
+    tB = Trainer(CFG, _tcfg(tmp_path / "b", ckpt_every=4, seed=5))
+    tB.init_or_restore()
+    tB.fit(8, stop_after=4)
+    del tB  # "node failure"
+    tB2 = Trainer(CFG, _tcfg(tmp_path / "b", ckpt_every=4, seed=5,
+                             streaming_restore=True))
+    tB2.init_or_restore()
+    assert tB2.restored_from == 4
+    assert tB2._restore_stream is not None     # tail still streaming
+    assert tB2.state is None                   # fit() crosses the gate
+    out = tB2.fit(8)
+    assert out["status"] == "completed" and out["step"] == 8
+    assert tB2.params_digest() == dA
+
+
 def test_pipeline_state_restores_exactly():
     pipe = SyntheticPipeline(CFG, batch=4, seq_len=16)
     s0 = pipe.init_state(seed=9)
