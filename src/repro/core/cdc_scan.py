@@ -47,6 +47,7 @@ import threading
 
 import numpy as np
 
+from . import codec as codec_mod
 from .errors import warn
 
 WINDOW = 64          # rolling-hash window (bytes); boundaries depend on
@@ -111,55 +112,102 @@ def scan_candidates_numpy(data: np.ndarray, mask_strict: int,
 # jnp backend — segmented sliding-window lax.scan
 # ---------------------------------------------------------------------------
 
-def _jnp_scan_fn():
-    """Build (once) the jitted segment scan. Static args: the two masks —
-    jax caches one executable per (padded length, mask pair)."""
+def _scan_columns_expr(padded, mask_strict, mask_loose):
+    """Traceable column gear scan — the shared body of the jitted segment
+    scan AND the fused transform+scan dispatch.
+
+    ``padded``: uint8 [WINDOW + nb*BLOCK] — WINDOW halo bytes (previous
+    segment's tail, zeros/garbage for the payload head: every halo byte
+    entering w0 is subtracted back out of the sliding-window algebra
+    before the first valid position), then the span, padded up to a
+    column bucket (tail positions are discarded by extraction)."""
     import jax
     import jax.numpy as jnp
 
-    def scan_impl(padded, mask_strict, mask_loose):
-        # padded: uint8 [WINDOW + nb*BLOCK] — WINDOW halo bytes (previous
-        # segment's tail, zeros for the payload head), then the segment,
-        # zero-padded up to a column bucket.
-        nb = (padded.shape[0] - WINDOW) // BLOCK
-        gear = jnp.asarray(GEAR)
-        # column layout: column b holds payload positions [b*BLOCK,
-        # (b+1)*BLOCK); the scan step advances every column's sliding
-        # window by one byte, so the whole per-step state is one row
-        main = padded[WINDOW:].reshape(nb, BLOCK).T     # entering bytes
-        lead = padded[:-WINDOW].reshape(nb, BLOCK).T    # leaving bytes
-        halo = padded[:-WINDOW].reshape(nb, BLOCK)[:, :WINDOW].T
-        w0 = jnp.sum(gear[halo], axis=0, dtype=jnp.uint32)
+    nb = (padded.shape[0] - WINDOW) // BLOCK
+    gear = jnp.asarray(GEAR)
+    # column layout: column b holds payload positions [b*BLOCK,
+    # (b+1)*BLOCK); the scan step advances every column's sliding
+    # window by one byte, so the whole per-step state is one row
+    main = padded[WINDOW:].reshape(nb, BLOCK).T     # entering bytes
+    lead = padded[:-WINDOW].reshape(nb, BLOCK).T    # leaving bytes
+    halo = padded[:-WINDOW].reshape(nb, BLOCK)[:, :WINDOW].T
+    w0 = jnp.sum(gear[halo], axis=0, dtype=jnp.uint32)
 
-        ms = jnp.uint32(mask_strict)
-        ml = jnp.uint32(mask_loose)
+    ms = jnp.uint32(mask_strict)
+    ml = jnp.uint32(mask_loose)
 
-        def body(w, rows):
-            enter, leave = rows
-            w = w + gear[enter] - gear[leave]
-            # loose mask bits ⊂ strict mask bits, so one AND serves both
-            h = w & ms
-            m = ((h & ml) == 0).astype(jnp.uint8) \
-                + (h == 0).astype(jnp.uint8)
-            return w, m
+    def body(w, rows):
+        enter, leave = rows
+        w = w + gear[enter] - gear[leave]
+        # loose mask bits ⊂ strict mask bits, so one AND serves both
+        h = w & ms
+        m = ((h & ml) == 0).astype(jnp.uint8) \
+            + (h == 0).astype(jnp.uint8)
+        return w, m
 
-        _, out = jax.lax.scan(body, w0, (main, lead))   # [BLOCK, nb]
-        # per-64-block hit bitmap: the host only reads blocks that hit
-        flags = out.reshape(BLOCK // WINDOW, WINDOW, nb).max(axis=1)
-        return out, flags
+    _, out = jax.lax.scan(body, w0, (main, lead))   # [BLOCK, nb]
+    # per-64-block hit bitmap: the host only reads blocks that hit
+    flags = out.reshape(BLOCK // WINDOW, WINDOW, nb).max(axis=1)
+    return out, flags
 
-    return jax.jit(scan_impl, static_argnums=(1, 2))
+
+def _jnp_scan_fn():
+    """Build (once) the jitted segment scan. Static args: the two masks —
+    jax caches one executable per (padded length, mask pair). The input
+    is donated where donation is real (accelerators free the device copy
+    as soon as the scan consumes it); on CPU donation would only warn."""
+    import jax
+
+    donate = (0,) if accelerator_present() else ()
+    return jax.jit(_scan_columns_expr, static_argnums=(1, 2),
+                   donate_argnums=donate)
+
+
+class _StagingArena:
+    """Persistent staging-buffer pool for accelerated dispatches.
+
+    ``jnp.asarray`` on CPU may zero-copy ALIAS an aligned numpy buffer
+    instead of copying it (measured both behaviours on this box), so a
+    staging buffer must NEVER be reused while its dispatch is in flight —
+    that is the documented no-reuse rule. The arena honours it by
+    recycling a buffer only after its dispatch has been extracted (the
+    device outputs are materialized, so the executable that could read
+    the alias has provably finished); the device-side copy is donated to
+    the jit on accelerator hosts instead. Recycling is what closes the
+    chunk-scan small-payload gap: a 2 MiB dispatch stops paying the
+    fresh-allocation page-zeroing that dominated its fixed overhead."""
+
+    MAX_PER_SIZE = 4    # idle buffers kept per size (≥ in-flight window)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._free: dict = {}           # nbytes → [np.ndarray]
+
+    def acquire(self, n: int) -> np.ndarray:
+        with self._lock:
+            bufs = self._free.get(n)
+            if bufs:
+                return bufs.pop()
+        return np.empty(n, np.uint8)
+
+    def release(self, buf):
+        if buf is None:
+            return
+        with self._lock:
+            bufs = self._free.setdefault(buf.nbytes, [])
+            if len(bufs) < self.MAX_PER_SIZE:
+                bufs.append(buf)
+
+
+_ARENA = _StagingArena()
 
 
 def _staging(n: int) -> np.ndarray:
-    """FRESH staging buffer per dispatch — deliberately never reused.
-    ``jnp.asarray`` on CPU may zero-copy ALIAS an aligned numpy buffer
-    instead of copying it (measured both behaviours on this box), so a
-    reused scratch would be overwritten under an in-flight async scan.
-    A fresh buffer is safe under either behaviour: jax holds a reference
-    and nothing mutates it after dispatch — and when jax does alias it,
-    the device import costs nothing."""
-    return np.empty(n, np.uint8)
+    """Staging buffer for one dispatch: recycled from the arena when a
+    previously-extracted dispatch's buffer fits, fresh otherwise. Never
+    handed out while in flight (see ``_StagingArena``)."""
+    return _ARENA.acquire(n)
 
 
 class _JnpBackend:
@@ -180,7 +228,8 @@ class _JnpBackend:
     def dispatch(data: np.ndarray, start: int, seg_len: int,
                  mask_strict: int, mask_loose: int):
         """Launch one segment scan (async — jax returns before the device
-        finishes). Returns the device result pair.
+        finishes). Returns (device result pair, staging buffer) — the
+        caller releases the buffer to the arena once it extracts.
 
         Staging never zeroes: garbage in the halo head and the bucket
         tail is EXACT to leave there. Halo garbage cancels out of the
@@ -202,7 +251,7 @@ class _JnpBackend:
             padded[WINDOW - halo:WINDOW] = data[start - halo:start]
         padded[WINDOW:WINDOW + seg_len] = data[start:start + seg_len]
         return _JnpBackend.fn()(jnp.asarray(padded), int(mask_strict),
-                                int(mask_loose))
+                                int(mask_loose)), padded
 
     @staticmethod
     def extract(result, start: int, seg_len: int, total_len: int):
@@ -235,13 +284,17 @@ class _JnpBackend:
 PALLAS_BLOCK = 64 << 10      # bytes per grid program
 
 
-def _pallas_scan_fn(interpret: bool = False):
-    """Blocked gear scan as a Pallas kernel: one grid program per
-    ``PALLAS_BLOCK`` span, with the *previous* block passed as a second
-    input so each program sees its 64-byte halo (program 0 reads itself;
-    its halo region falls below the first full window and is discarded by
-    extraction). Emits the same 0/loose/strict mask byte per position as
-    the jnp backend."""
+def _pallas_scan_expr(padded, mask_strict, mask_loose, *,
+                      interpret: bool = False):
+    """Traceable blocked gear scan as a Pallas kernel: one grid program
+    per ``PALLAS_BLOCK`` span, with the *previous* block passed as a
+    second input so each program sees its 64-byte halo (program 0 reads
+    itself; its halo region falls below the first full window and is
+    discarded by extraction). Emits the same 0/loose/strict mask byte per
+    position as the jnp backend. Shared by the jitted segment scan and
+    the fused transform+scan dispatch."""
+    import functools
+
     import jax
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
@@ -256,26 +309,33 @@ def _pallas_scan_fn(interpret: bool = False):
         out_ref[...] = ((h & jnp.uint32(mask_loose)) == 0) \
             .astype(jnp.uint8) + (h == 0).astype(jnp.uint8)
 
-    def scan(padded, mask_strict, mask_loose):
-        import functools
-        n = padded.shape[0]
-        grid = (n // PALLAS_BLOCK,)
-        return pl.pallas_call(
-            functools.partial(kernel, mask_strict=mask_strict,
-                              mask_loose=mask_loose),
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((256,), lambda i: (0,)),          # gear table
-                pl.BlockSpec((PALLAS_BLOCK,),
-                             lambda i: (jnp.maximum(i - 1, 0),)),  # halo
-                pl.BlockSpec((PALLAS_BLOCK,), lambda i: (i,)),
-            ],
-            out_specs=pl.BlockSpec((PALLAS_BLOCK,), lambda i: (i,)),
-            out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
-            interpret=interpret,
-        )(jnp.asarray(GEAR), padded, padded)
+    n = padded.shape[0]
+    grid = (n // PALLAS_BLOCK,)
+    return pl.pallas_call(
+        functools.partial(kernel, mask_strict=mask_strict,
+                          mask_loose=mask_loose),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((256,), lambda i: (0,)),          # gear table
+            pl.BlockSpec((PALLAS_BLOCK,),
+                         lambda i: (jnp.maximum(i - 1, 0),)),  # halo
+            pl.BlockSpec((PALLAS_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((PALLAS_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=interpret,
+    )(jnp.asarray(GEAR), padded, padded)
 
-    return jax.jit(scan, static_argnums=(1, 2))
+
+def _pallas_scan_fn(interpret: bool = False):
+    import jax
+
+    def scan(padded, mask_strict, mask_loose):
+        return _pallas_scan_expr(padded, mask_strict, mask_loose,
+                                 interpret=interpret)
+
+    donate = (0,) if accelerator_present() else ()
+    return jax.jit(scan, static_argnums=(1, 2), donate_argnums=donate)
 
 
 class _PallasBackend:
@@ -303,7 +363,7 @@ class _PallasBackend:
             padded[WINDOW - halo:WINDOW] = data[start - halo:start]
         padded[WINDOW:WINDOW + seg_len] = data[start:start + seg_len]
         return self._fn(jnp.asarray(padded), int(mask_strict),
-                        int(mask_loose))
+                        int(mask_loose)), padded
 
     @staticmethod
     def extract(result, start: int, seg_len: int, total_len: int):
@@ -323,6 +383,126 @@ def accelerator_present() -> bool:
         return jax.default_backend() in ("gpu", "tpu", "cuda", "rocm")
     except Exception:  # noqa — no usable jax: numpy oracle still works
         return False
+
+
+# ---------------------------------------------------------------------------
+# fused transform+scan — the byteplane codec's single device round-trip
+# ---------------------------------------------------------------------------
+
+_fused_lock = threading.Lock()
+_fused_fns: dict = {}          # (backend, interpret) → jitted executable
+
+
+def _build_fused_fn(backend: str, interpret: bool = False):
+    """Build the fused byteplane-forward + gear-scan executable: ONE
+    device round-trip per payload returns the transformed bytes AND the
+    candidate mask computed over them, so the byteplane codec costs no
+    extra dispatch beyond the CDC scan the save queue already pays for.
+
+    Whole-payload dispatch, unlike the segmented plain scan: the
+    byteplane transform is a global permutation of the stream, so
+    per-segment halos would not compose across it. jax caches one
+    executable per payload length — a training job's shard shapes form a
+    small fixed set, so recompilation is bounded in practice."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.ckpt_codec import byteplane as bp
+
+    if backend == "pallas":
+        def impl(raw, itemsize, mask_strict, mask_loose):
+            t = bp.forward_pallas_expr(raw, itemsize, interpret=interpret)
+            n = raw.shape[0]
+            padded_len = -(-(n + WINDOW) // PALLAS_BLOCK) * PALLAS_BLOCK
+            padded = jnp.concatenate(
+                [jnp.zeros(WINDOW, jnp.uint8), t,
+                 jnp.zeros(padded_len - WINDOW - n, jnp.uint8)])
+            return t, _pallas_scan_expr(padded, mask_strict, mask_loose,
+                                        interpret=interpret)
+    else:
+        def impl(raw, itemsize, mask_strict, mask_loose):
+            t = bp.forward_expr(raw, itemsize)
+            n = raw.shape[0]
+            cols = -(-n // BLOCK)
+            bucket = _MIN_COLS
+            while bucket < cols:
+                bucket *= 2
+            padded = jnp.concatenate(
+                [jnp.zeros(WINDOW, jnp.uint8), t,
+                 jnp.zeros(bucket * BLOCK - n, jnp.uint8)])
+            return (t,) + _scan_columns_expr(padded, mask_strict,
+                                             mask_loose)
+
+    donate = (0,) if accelerator_present() else ()
+    return jax.jit(impl, static_argnums=(1, 2, 3), donate_argnums=donate)
+
+
+def _fused_fn(backend: str, interpret: bool = False):
+    key = (backend, interpret)
+    with _fused_lock:
+        fn = _fused_fns.get(key)
+        if fn is None:
+            fn = _fused_fns[key] = _build_fused_fn(backend, interpret)
+        return fn
+
+
+class FusedScanTicket:
+    """Handle for one fused byteplane-transform + candidate-scan
+    dispatch. ``result()`` joins the device round-trip and returns
+    ``((strict, loose), transformed)``: candidate end offsets computed
+    OVER the transformed stream (byte-identical to the numpy oracle
+    scanning the oracle transform — the transformed bytes are the dedup
+    keyspace) plus the transformed payload as a host uint8 array."""
+
+    __slots__ = ("_resolve", "_done")
+
+    def __init__(self, resolve=None, done=None):
+        self._resolve = resolve
+        self._done = done
+
+    def result(self):
+        if self._done is None:
+            self._done = self._resolve()
+            self._resolve = None
+        return self._done
+
+
+class TransformTicket:
+    """Handle for one standalone async device byteplane transform (no
+    candidate scan). ``result()`` returns the transformed stream as a
+    host uint8 array, byte-identical to the oracle."""
+
+    __slots__ = ("_dev", "_done")
+
+    def __init__(self, dev=None, done=None):
+        self._dev = dev
+        self._done = done
+
+    def result(self) -> np.ndarray:
+        if self._done is None:
+            self._done = np.asarray(self._dev)
+            self._dev = None
+        return self._done
+
+
+def transform_async(payload, itemsize: int) -> TransformTicket:
+    """Async byteplane forward transform WITHOUT a candidate scan — the
+    save path uses this when the codec wants pre-conditioned bytes but
+    the chunk grid is not content-defined over them (fixed chunking, or
+    a replica feed). Below the acceleration threshold the host oracle
+    runs inline — same bytes either way."""
+    data = as_u8(payload)
+    if len(data) < MIN_ACCEL_BYTES:
+        return TransformTicket(
+            done=codec_mod.byteplane_forward(data, itemsize))
+    import jax.numpy as jnp
+
+    from ..kernels.ckpt_codec import byteplane as bp
+    if accelerator_present():
+        dev = bp.forward_pallas(jnp.asarray(data), itemsize=int(itemsize))
+    else:
+        dev = bp.forward_jnp(jnp.asarray(data), itemsize=int(itemsize))
+    return TransformTicket(dev=dev)
 
 
 # ---------------------------------------------------------------------------
@@ -348,7 +528,7 @@ class ScanTicket:
     __slots__ = ("_pending", "_todo", "_dispatch", "_extract", "_done")
 
     def __init__(self, pending, todo, dispatch, extract, done=None):
-        self._pending = pending         # deque of (result, start, len, n)
+        self._pending = pending         # deque of ((result, buf), start, len, n)
         self._todo = todo               # [(start, seg_len, total)] not yet launched
         self._dispatch = dispatch
         self._extract = extract
@@ -358,8 +538,12 @@ class ScanTicket:
         if self._done is None:
             strict, loose = [], []
             while self._pending:
-                res, start, seg_len, total = self._pending.popleft()
+                (res, buf), start, seg_len, total = self._pending.popleft()
                 s, l = self._extract(res, start, seg_len, total)
+                # extraction materialized the device outputs, so the
+                # dispatch that could alias this staging buffer is done —
+                # the one point where recycling is provably safe
+                _ARENA.release(buf)
                 strict.append(s)
                 loose.append(l)
                 if self._todo:
@@ -460,3 +644,34 @@ class GearScanner:
             for start, seg_len, total in spans[:MAX_INFLIGHT_SEGMENTS])
         return ScanTicket(pending, spans[MAX_INFLIGHT_SEGMENTS:], dispatch,
                           extract)
+
+    def scan_transform_async(self, payload, itemsize: int) \
+            -> FusedScanTicket:
+        """Dispatch the byteplane forward transform AND the candidate
+        scan of the *transformed* stream as ONE device round-trip — the
+        codec's pre-conditioning rides the scan dispatch the save queue
+        already pays for. Below the acceleration threshold the host
+        oracle runs both stages inline: same bytes, same candidates."""
+        data = as_u8(payload)
+        n = len(data)
+        backend = self.resolve(n)
+        if backend == "numpy" or n <= WINDOW:
+            t = codec_mod.byteplane_forward(data, itemsize)
+            done = (scan_candidates_numpy(t, self.mask_strict,
+                                          self.mask_loose)
+                    if n > WINDOW else (_EMPTY, _EMPTY))
+            return FusedScanTicket(done=(done, t))
+        import jax.numpy as jnp
+        fn = _fused_fn(backend, self._pallas_interpret)
+        raw = fn(jnp.asarray(data), int(itemsize), self.mask_strict,
+                 self.mask_loose)
+        if backend == "pallas":
+            extract, res = _PallasBackend.extract, raw[1]
+        else:
+            extract, res = _JnpBackend.extract, raw[1:]
+
+        def resolve():
+            t = np.asarray(raw[0])
+            return extract(res, 0, n, n), t
+
+        return FusedScanTicket(resolve=resolve)

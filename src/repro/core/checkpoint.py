@@ -167,6 +167,11 @@ class CheckpointManager:
         self.policy = policy
         self.codec, self.params_codec = codec, params_codec
         self._chunker = chunker
+        # byteplane codecs: run the forward transform on device, fused
+        # into the CDC scan dispatch (auto: pipelined engine only — the
+        # serial engine is pinned to the host oracle, PR-1 purity)
+        self.device_precondition = policy.codec.precondition_enabled(
+            policy.pipeline.serial)
         self.chunks.chunk_size = int(policy.chunking.chunk_size)
 
     # ---- policy-backed views (the pre-policy attribute surface) ----
@@ -290,7 +295,9 @@ class CheckpointManager:
                 "blocking_s": time.monotonic() - t0, "bytes": total}
 
     def _est_ratio(self):
-        return 2 if self.codec != "raw" else 1
+        # plain byteplane is a size-preserving permutation — no entropy
+        # stage, so its preflight estimate must not assume shrinkage
+        return 2 if self.codec not in ("raw", "byteplane") else 1
 
     def _effective_policy_dict(self) -> dict:
         """The policy block a v6 manifest embeds: ``self.policy`` with the
@@ -332,7 +339,14 @@ class CheckpointManager:
         if wc is not None and \
                 (wc, wp or wc) != (self.codec, self.params_codec):
             if all(codec_mod.available(c) for c in {wc, wp or wc}):
-                new_codec = written.codec
+                # codec NAMES are adopted (they define the stored bytes);
+                # device_precondition stays the reader's — it is a
+                # machine-local perf knob producing identical bytes, and
+                # the writer's device may not exist here
+                new_codec = replace(
+                    written.codec,
+                    device_precondition=self.policy.codec
+                    .device_precondition)
                 adopted.append("codec")
             else:
                 warn("CKPT_W_POLICY",
@@ -402,7 +416,8 @@ class CheckpointManager:
             chunker=self._chunker, replicas=self.replicas,
             leaf_codec=self._leaf_codec, max_retries=self.max_retries,
             save_timeout_s=self.save_timeout_s, crash=crash,
-            overlapped=overlapped)
+            overlapped=overlapped,
+            device_precondition=self.device_precondition)
         if not outcome.ok:
             # ABORT leaks nothing: no manifest, no LATEST move, and no
             # refcounts published — chunk objects a dead rank managed to

@@ -1,4 +1,5 @@
-"""Shard payload codecs: raw | zstd | int8 block-quantization (+zstd).
+"""Shard payload codecs: raw | zstd | int8 block-quantization (+zstd) |
+byteplane pre-conditioning (± zstd).
 
 The int8 codec addresses the paper's stated future work ("reducing the
 checkpoint overhead for large-scale applications"): 4×/2× size reduction on
@@ -6,10 +7,27 @@ f32/bf16 leaves with per-block scales. The device-side quantizer has a Pallas
 TPU kernel (repro.kernels.ckpt_codec) validated against the numpy encoder
 here; on the host path we quantize with numpy after device→host transfer.
 
-`zstandard` is an OPTIONAL dependency (the `compress` extra): raw and int8
-work without it (int8 then stores its quantized payload uncompressed, flagged
-in meta so decode stays self-describing); asking for codec="zstd" without the
-package raises CodecUnavailableError with the install hint.
+The byteplane codecs are LOSSLESS pre-conditioning: the payload's bytes are
+transposed into per-byte-position planes (plane p holds byte p of every
+element) and each plane is delta-coded mod 256. Params-like floats have
+near-constant sign/exponent bytes interleaved with near-random mantissa
+bytes; separating the planes turns the stream into long runs the entropy
+stage compresses faster AND tighter, and lets zstd's incompressible-block
+fast path skip the mantissa planes instead of grinding the matcher over
+interleaved noise. ``byteplane`` stores the transformed stream as-is (a
+size-preserving permutation — chunking/dedup operate on it directly);
+``byteplane-zstd`` adds the host zstd stage. Both are self-describing via
+``meta["bp"]`` (the element width) and invert on decode. The functions here
+are the numpy ORACLE; the device-side jnp/Pallas backends
+(``repro.kernels.ckpt_codec.byteplane``) are property-tested against them,
+and the save path fuses the forward transform into the CDC gear-scan
+dispatch (``core.cdc_scan.GearScanner.scan_transform_async``).
+
+`zstandard` is an OPTIONAL dependency (the `compress` extra): raw, int8 and
+byteplane work without it (int8 then stores its quantized payload
+uncompressed, flagged in meta so decode stays self-describing); asking for
+codec="zstd" or "byteplane-zstd" without the package raises
+CodecUnavailableError with the install hint.
 """
 from __future__ import annotations
 
@@ -27,7 +45,10 @@ except ModuleNotFoundError:           # optional dependency (compress extra)
     HAVE_ZSTD = False
 
 BLOCK = 256
-CODECS = ("raw", "zstd", "int8")
+CODECS = ("raw", "zstd", "int8", "byteplane", "byteplane-zstd")
+# codecs whose encode is (byteplane transform → optional entropy stage):
+# the save path may run the transform ON DEVICE, fused into the CDC scan
+PRECONDITIONED = ("byteplane", "byteplane-zstd")
 
 # zstandard (de)compressor objects are NOT thread-safe; the checkpoint writer
 # runs N rank threads concurrently (observed: "Src size is incorrect" under
@@ -59,7 +80,7 @@ def _zd() -> "zstandard.ZstdDecompressor":
 
 def available(codec: str) -> bool:
     """True iff `codec` is usable in this environment."""
-    if codec == "zstd":
+    if codec in ("zstd", "byteplane-zstd"):
         return HAVE_ZSTD
     return codec in CODECS
 
@@ -73,12 +94,97 @@ def _as_u16(x: np.ndarray) -> np.ndarray:
     return x.view(np.uint16) if x.dtype == np.dtype("bfloat16") else x
 
 
+def contig_u8(arr) -> np.ndarray:
+    """Flat C-contiguous uint8 view of ``arr`` — zero-copy when the array
+    already is contiguous (the snapshot path's host arrays are)."""
+    a = np.ascontiguousarray(arr)
+    return a.reshape(-1).view(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# byteplane pre-conditioning — the numpy oracle
+# ---------------------------------------------------------------------------
+
+def byteplane_forward(data, itemsize: int) -> np.ndarray:
+    """Byte-plane transpose + per-plane delta (mod 256) of a byte stream
+    of ``itemsize``-byte elements. Size-preserving and lossless: plane p
+    of the output holds ``x[j][p] - x[j-1][p]`` for every element j (the
+    first element passes through), and any ragged tail (``len % itemsize``
+    bytes) is appended untransformed. THE oracle the jnp/Pallas device
+    backends are property-tested against — it defines the transformed
+    stream that chunking, dedup and the manifest crc all operate on."""
+    u8 = data if isinstance(data, np.ndarray) \
+        else np.frombuffer(data, np.uint8)
+    u8 = u8.reshape(-1).view(np.uint8)
+    k = int(itemsize)
+    if k <= 0:
+        raise ValueError(f"itemsize must be positive, got {itemsize}")
+    n = u8.size
+    ne = n // k
+    out = np.empty(n, np.uint8)
+    if ne:
+        x = u8[:ne * k].reshape(ne, k)
+        d = out[:ne * k].reshape(k, ne)
+        d[:, :] = x.T
+        d[:, 1:] -= x[:-1].T           # uint8 wraparound is the modulus
+    out[ne * k:] = u8[ne * k:]
+    return out
+
+
+def byteplane_inverse(data, itemsize: int) -> np.ndarray:
+    """Exact inverse of ``byteplane_forward``: per-plane cumulative sum
+    mod 256, then transpose back to element order."""
+    u8 = data if isinstance(data, np.ndarray) \
+        else np.frombuffer(data, np.uint8)
+    u8 = u8.reshape(-1).view(np.uint8)
+    k = int(itemsize)
+    if k <= 0:
+        raise ValueError(f"itemsize must be positive, got {itemsize}")
+    n = u8.size
+    ne = n // k
+    out = np.empty(n, np.uint8)
+    if ne:
+        d = u8[:ne * k].reshape(k, ne)
+        x = np.cumsum(d, axis=1, dtype=np.uint8)   # wraps mod 256
+        out[:ne * k].reshape(ne, k)[:, :] = x.T
+    out[ne * k:] = u8[ne * k:]
+    return out
+
+
+def byteplane_meta(arr: np.ndarray) -> dict:
+    """The self-describing meta a byteplane payload carries: the element
+    width the inverse transform needs (ONE source of truth — the host
+    encoder and the fused device path must agree)."""
+    return {"bp": int(arr.dtype.itemsize)}
+
+
+def encode_preconditioned(transformed, codec: str):
+    """Host stage of the device pre-conditioning pipeline: ``transformed``
+    is the byteplane stream the device round-trip returned; this applies
+    whatever entropy stage the codec adds. Byte-identical to
+    ``encode(arr, codec)`` on the same array — property-tested."""
+    if codec == "byteplane":
+        return transformed
+    if codec == "byteplane-zstd":
+        return _zc().compress(transformed)
+    raise ValueError(f"codec {codec!r} is not a preconditioned codec")
+
+
 def encode(arr: np.ndarray, codec: str) -> tuple:
     """Returns (payload_bytes, meta_dict)."""
     if codec == "raw":
         return arr.tobytes(), {}
     if codec == "zstd":
-        return _zc().compress(np.ascontiguousarray(arr).tobytes()), {}
+        # compress straight from a C-contiguous view (zstandard accepts
+        # the buffer protocol) — the old .tobytes() duplicated every
+        # payload before the compressor even saw it
+        return _zc().compress(contig_u8(arr)), {}
+    if codec == "byteplane":
+        t = byteplane_forward(contig_u8(arr), arr.dtype.itemsize)
+        return t.tobytes(), byteplane_meta(arr)
+    if codec == "byteplane-zstd":
+        t = byteplane_forward(contig_u8(arr), arr.dtype.itemsize)
+        return _zc().compress(t), byteplane_meta(arr)
     if codec == "int8":
         q, scales = quantize_int8(arr)
         blob = q.tobytes() + scales.tobytes()
@@ -96,6 +202,11 @@ def decode(payload: bytes, codec: str, shape, dtype, meta: dict) -> np.ndarray:
     if codec == "zstd":
         raw = _zd().decompress(payload)
         return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
+    if codec in PRECONDITIONED:
+        u8 = payload if codec == "byteplane" else _zd().decompress(payload)
+        k = int(meta.get("bp") or _np_dtype(dtype).itemsize)
+        raw = byteplane_inverse(u8, k)
+        return raw.view(_np_dtype(dtype)).reshape(shape)
     if codec == "int8":
         raw = payload if not meta.get("z", 1) else _zd().decompress(payload)
         q = np.frombuffer(raw[:meta["q_bytes"]], np.int8)

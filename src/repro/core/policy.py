@@ -123,14 +123,31 @@ class DurabilityPolicy:
 class CodecPolicy:
     """Shard payload encodings. ``None`` resolves to the best codec the
     environment supports (zstd with the optional ``zstandard`` package,
-    raw otherwise); ``params_codec`` defaults to ``codec`` (int8 opt-in)."""
+    raw otherwise); ``params_codec`` defaults to ``codec`` (int8 opt-in).
+
+    ``device_precondition`` controls whether a byteplane codec's forward
+    transform runs ON DEVICE, fused into the CDC scan dispatch (the
+    tentpole fusion): ``None`` (auto) enables it on the pipelined engine
+    and never on the serial engine (host numpy purity); ``False`` forces
+    the host oracle encoder everywhere. A MACHINE-LOCAL performance knob:
+    the stored bytes are identical either way, so manifest adoption keeps
+    the reader's own setting."""
     codec: str | None = None
     params_codec: str | None = None
+    device_precondition: bool | None = None
 
     def __post_init__(self):
         for c in (self.codec, self.params_codec):
             if c is not None and c not in codec_mod.CODECS:
                 raise ValueError(f"unknown codec {c!r}")
+
+    def precondition_enabled(self, serial: bool) -> bool:
+        """Effective device_precondition for an engine: the serial engine
+        is always pinned to the host path (PR-1 baseline purity)."""
+        if serial:
+            return False
+        return True if self.device_precondition is None \
+            else bool(self.device_precondition)
 
     def resolved(self) -> tuple:
         """(codec, params_codec) with defaults resolved against THIS
@@ -202,6 +219,7 @@ FLAT_FIELDS = {
     "max_retries": ("durability", "max_retries"),
     "codec": ("codec", "codec"),
     "params_codec": ("codec", "params_codec"),
+    "device_precondition": ("codec", "device_precondition"),
     "streaming_restore": ("restore", "streaming"),
     "restore_frontier_classes": ("restore", "frontier_classes"),
     "remote_part_bytes": ("restore", "remote_part_bytes"),
@@ -221,7 +239,8 @@ _ENV_INT = {"n_writers", "chunk_size", "min_chunk_size", "max_chunk_size",
             "read_cache_bytes", "replicas", "retain", "max_retries",
             "restore_frontier_classes", "remote_part_bytes"}
 _ENV_FLOAT = {"keepalive_s", "save_timeout_s"}
-_ENV_BOOL = {"async_drain_to_slow", "streaming_restore"}
+_ENV_BOOL = {"async_drain_to_slow", "streaming_restore",
+             "device_precondition"}
 
 
 @dataclass(frozen=True)

@@ -315,9 +315,16 @@ class RestoreSession:
         fixed), and any scheme whose record carries a chunk LENGTH list
         (v5 CDC records) via the prefix-sum offsets. Either way the reads
         land straight in a preallocated payload buffer with no
-        assemble/join copy."""
+        assemble/join copy. Pre-conditioned codecs (byteplane) store the
+        TRANSFORMED stream, so direct placement reassembles exactly those
+        bytes and ``decode`` applies the inverse transform afterwards,
+        driven by the record's self-describing meta."""
+        # meta participates in the key: it drives decode for
+        # pre-conditioned and int8 payloads, so records that share chunk
+        # digests but differ in interpretation must not collide
         key = ("cas", tuple(srec["chunks"]), srec["codec"], srec["dtype"],
-               tuple(srec["start"]), tuple(srec["stop"]))
+               tuple(srec["start"]), tuple(srec["stop"]),
+               tuple(sorted((srec.get("meta") or {}).items())))
         cached = self.cache.get(key)
         if cached is not None:
             return cached

@@ -198,7 +198,7 @@ class SaveSession:
         self._dirs_lock = threading.Lock()
         self._window = max(int(window or 2 * self._exec.threads), 1)
         self._pending: deque = deque()      # (future, ticket, chunk)
-        self._scan_queue: deque = deque()   # (payload, scan ticket, ticket)
+        self._scan_queue: deque = deque()   # (resolve fn, ticket)
 
     # -- submission ----------------------------------------------------
     def submit_payload(self, payload) -> PayloadTicket:
@@ -226,13 +226,12 @@ class SaveSession:
             ticket = PayloadTicket(-1, len(payload), submitted=False)
             try:
                 handle = self._chunker_obj.scanner.scan_async(payload)
-                self._scan_queue.append((payload, handle, ticket))
-                # depth-1 scan-ahead: feed the pool with every OLDER
-                # payload's chunks (their scans had the whole previous
-                # hash/write phase to finish) while the device scans this
-                # one
-                while len(self._scan_queue) > 1:
-                    self._submit_scanned()
+
+                def resolve(payload=payload, handle=handle):
+                    return payload, self._chunker_obj.chunk(
+                        payload, candidates=handle.result())
+
+                self._enqueue_scan(resolve, ticket)
             except BaseException:
                 self.abort()
                 raise
@@ -248,6 +247,62 @@ class SaveSession:
             raise
         return ticket
 
+    def submit_preconditioned(self, payload, itemsize: int,
+                              codec_name: str) -> PayloadTicket:
+        """Byteplane-codec payload submission (pipelined engine only —
+        the serial engine encodes on the host, PR-1 purity). The forward
+        transform runs ON DEVICE: fused with the candidate scan when the
+        chunk grid is content-defined over the transformed stream
+        (``codec="byteplane"`` + CDC chunker) — ONE device round-trip per
+        payload, gear bitmap and transformed bytes back together — and as
+        a standalone async transform otherwise (fixed chunking, or a
+        zstd stage between transform and chunking). Either way the device
+        works on payload k+1 while the pool hashes/writes payload k, and
+        the stored stream is byte-identical to the host
+        ``codec_mod.encode`` path."""
+        ticket = PayloadTicket(-1, len(payload), submitted=False)
+        fused = (codec_name == "byteplane"
+                 and self._chunker_obj is not None
+                 and self._chunker_obj.scanner.resolve(len(payload))
+                 != "numpy")
+        try:
+            if fused:
+                handle = self._chunker_obj.scanner.scan_transform_async(
+                    payload, itemsize)
+
+                def resolve(handle=handle):
+                    cands, t = handle.result()
+                    return t, self._chunker_obj.chunk(t, candidates=cands)
+            else:
+                from . import cdc_scan
+                handle = cdc_scan.transform_async(payload, itemsize)
+
+                def resolve(handle=handle, codec_name=codec_name):
+                    enc = codec_mod.encode_preconditioned(handle.result(),
+                                                          codec_name)
+                    if self._chunker_obj is not None:
+                        chunks = self._chunker_obj.chunk(enc)
+                    elif self._chunker is not None:
+                        chunks = cas_run_chunker(self._chunker, enc)
+                    else:
+                        chunks = split_payload(enc,
+                                               self._chunks.chunk_size)
+                    return enc, chunks
+
+            self._enqueue_scan(resolve, ticket)
+        except BaseException:
+            self.abort()
+            raise
+        return ticket
+
+    def _enqueue_scan(self, resolve, ticket: PayloadTicket):
+        self._scan_queue.append((resolve, ticket))
+        # depth-1 scan-ahead: feed the pool with every OLDER payload's
+        # chunks (their device work had the whole previous hash/write
+        # phase to finish) while the device transforms/scans this one
+        while len(self._scan_queue) > 1:
+            self._submit_scanned()
+
     def _feed(self, chunks, ticket: PayloadTicket):
         for chunk in chunks:
             while len(self._pending) >= self._window:
@@ -256,12 +311,16 @@ class SaveSession:
             self._pending.append((fut, ticket, chunk))
 
     def _submit_scanned(self):
-        """Resolve the oldest queued scan and feed its chunks to the pool
-        (tickets always submit — and therefore resolve — in order)."""
-        payload, handle, ticket = self._scan_queue.popleft()
+        """Resolve the oldest queued device dispatch and feed its chunks
+        to the pool (tickets always submit — and therefore resolve — in
+        order). ``resolve`` returns (final payload, chunks): for a
+        pre-conditioned codec the final payload is the transformed (and
+        possibly compressed) stream, so the ticket's payload length is
+        only known here."""
+        resolve, ticket = self._scan_queue.popleft()
         try:
-            chunks = self._chunker_obj.chunk(payload,
-                                             candidates=handle.result())
+            payload, chunks = resolve()
+            ticket.payload_bytes = len(payload)
             ticket.n_chunks = ticket.remaining = len(chunks)
             ticket.submitted = True
             self._feed(chunks, ticket)
@@ -364,7 +423,8 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                  store, rel_stage: str, step: int, incremental: bool,
                  chunking: str, chunker, replicas: int, leaf_codec,
                  max_retries: int, save_timeout_s: float,
-                 crash: CrashInjector, overlapped: bool = False) \
+                 crash: CrashInjector, overlapped: bool = False,
+                 device_precondition: bool = False) \
         -> WriteOutcome:
     """Run the retrying 2PC phase 1: plan an attempt over surviving ranks,
     start one writer thread per rank, wait for the all-PREPARED barrier,
@@ -388,18 +448,34 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
             for i, name, rng, arr, fname, is_replica in work:
                 codec_name = leaf_codec(name)
                 if incremental:
-                    if not session.serial and codec_name == "raw":
-                        # zero-copy feed: the chunk pipeline consumes a
-                        # uint8 VIEW of the host array — no tobytes()
-                        # copy, and chunk slices stay views all the way
-                        # into hash/crc/write
-                        payload = np.ascontiguousarray(arr) \
+                    if not session.serial and device_precondition \
+                            and codec_name in codec_mod.PRECONDITIONED:
+                        # device pre-conditioning: the byteplane forward
+                        # transform runs on device, fused into the CDC
+                        # scan dispatch when the chunk grid follows the
+                        # transformed stream — chunking, dedup and the
+                        # manifest crc all operate on exactly the bytes
+                        # the host encoder would have produced
+                        u8 = np.ascontiguousarray(arr) \
                             .reshape(-1).view(np.uint8)
-                        meta = {}
+                        meta = codec_mod.byteplane_meta(arr)
+                        crash.maybe(f"rank{rank}_before_write")
+                        ticket = session.submit_preconditioned(
+                            u8, arr.dtype.itemsize, codec_name)
                     else:
-                        payload, meta = codec_mod.encode(arr, codec_name)
-                    crash.maybe(f"rank{rank}_before_write")
-                    ticket = session.submit_payload(payload)
+                        if not session.serial and codec_name == "raw":
+                            # zero-copy feed: the chunk pipeline consumes
+                            # a uint8 VIEW of the host array — no
+                            # tobytes() copy, and chunk slices stay views
+                            # all the way into hash/crc/write
+                            payload = np.ascontiguousarray(arr) \
+                                .reshape(-1).view(np.uint8)
+                            meta = {}
+                        else:
+                            payload, meta = codec_mod.encode(arr,
+                                                             codec_name)
+                        crash.maybe(f"rank{rank}_before_write")
+                        ticket = session.submit_payload(payload)
                     rec = {
                         "chunks": None,     # filled after the flush below
                         "chunk_size": chunks.chunk_size,
@@ -408,7 +484,9 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                         "dtype": str(arr.dtype), "codec": codec_name,
                         "meta": meta,
                         "crc32": None,
-                        "payload_bytes": len(payload),
+                        # pre-conditioned payloads learn their final
+                        # length at resolve time; refined below
+                        "payload_bytes": ticket.payload_bytes,
                     }
                     deferred.append((i, ticket, rec))
                 else:
@@ -438,6 +516,7 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                 crash.maybe(f"rank{rank}_after_chunk_write")
                 rec["chunks"] = digests
                 rec["crc32"] = crc
+                rec["payload_bytes"] = ticket.payload_bytes
                 if chunking == "cdc":
                     # manifest v5: content-defined chunk lengths — restore
                     # prefix-sums them into offsets and places reads

@@ -1,0 +1,170 @@
+"""Device-side byteplane pre-conditioning transform — checkpoint codec
+front-end.
+
+The paper's future work is "reducing the checkpoint overhead for
+large-scale applications"; the save-path ceiling after the PR-4 scan
+offload is the HOST touching every payload byte in the zstd stage. This
+module runs the lossless byte-plane transpose + per-plane delta ON DEVICE
+(the numpy oracle is ``repro.core.codec.byteplane_forward`` /
+``byteplane_inverse``), so the bytes the host compresses arrive already
+entropy-shaped — and the save path fuses this forward transform into the
+same device round-trip as the CDC gear scan
+(``core.cdc_scan.GearScanner.scan_transform_async``), keeping ONE dispatch
+per payload.
+
+Backends mirror ``core.cdc_scan``'s three-backend structure:
+
+  numpy    the oracle (``core.codec``) — re-exported here for symmetry;
+  jnp      ``forward_expr``/``inverse_expr``: traceable XLA expressions
+           (the fused scan dispatch inlines ``forward_expr`` ahead of the
+           gear-scan columns), plus jitted standalone entry points;
+  pallas   explicit accelerator kernels. The forward kernel consumes the
+           element rows and their one-element-shifted copy (built by XLA,
+           which fuses the shift into the feeding pipeline) and writes the
+           transposed delta planes per grid block. The inverse is one grid
+           program per byte plane — the per-plane cumsum carry is
+           inherently sequential, so each program owns a whole plane
+           (VMEM-bounded: fine for shard-sized payloads; the restore path
+           uses the host oracle anyway and this kernel exists for backend
+           parity, pinned by interpret-mode tests).
+
+All backends are property-tested byte-identical to the oracle
+(``tests/test_byteplane.py``) — the transformed stream is the dedup
+keyspace when a byteplane codec is active, so a backend that drifts by one
+byte re-writes history.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.codec import byteplane_forward, byteplane_inverse  # noqa: F401
+# ^ oracle re-export (the ref implementations, like .ref for the quantizer)
+
+BLOCK_ELEMS = 64 << 10      # forward-kernel elements per grid program
+
+
+# ---------------------------------------------------------------------------
+# jnp expressions (traceable — shared with the fused scan dispatch)
+# ---------------------------------------------------------------------------
+
+def forward_expr(u8, itemsize: int):
+    """Traceable forward transform of a flat uint8 stream. Matches the
+    oracle bit-for-bit: plane-major delta bytes, ragged tail appended
+    untransformed."""
+    n = u8.shape[0]
+    k = int(itemsize)
+    ne = n // k
+    if ne == 0:
+        return u8
+    x = u8[:ne * k].reshape(ne, k)
+    prev = jnp.concatenate([jnp.zeros((1, k), jnp.uint8), x[:-1]])
+    d = (x - prev).T.reshape(-1)
+    return jnp.concatenate([d, u8[ne * k:]])
+
+
+def inverse_expr(u8, itemsize: int):
+    """Traceable inverse: per-plane cumsum mod 256, transposed back."""
+    n = u8.shape[0]
+    k = int(itemsize)
+    ne = n // k
+    if ne == 0:
+        return u8
+    d = u8[:ne * k].reshape(k, ne)
+    x = jnp.cumsum(d, axis=1, dtype=jnp.uint8)     # wraps mod 256
+    return jnp.concatenate([x.T.reshape(-1), u8[ne * k:]])
+
+
+@partial(jax.jit, static_argnames=("itemsize",))
+def forward_jnp(u8, *, itemsize: int):
+    return forward_expr(u8, itemsize)
+
+
+@partial(jax.jit, static_argnames=("itemsize",))
+def inverse_jnp(u8, *, itemsize: int):
+    return inverse_expr(u8, itemsize)
+
+
+# ---------------------------------------------------------------------------
+# pallas kernels
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, p_ref, o_ref):
+    # x: (block, k) element rows; p: the same rows shifted one element
+    # down (row 0 of the stream is zeros, so d[0] = x[0] like the oracle)
+    o_ref[...] = (x_ref[...] - p_ref[...]).T
+
+
+def forward_planes_2d(x, prev, *, block_elems: int = BLOCK_ELEMS,
+                      interpret: bool = False):
+    """(ne, k) element rows + shifted rows → (k, ne) delta planes."""
+    ne, k = x.shape
+    block = min(block_elems, max(ne, 1))
+    pad = (-ne) % block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        prev = jnp.pad(prev, ((0, pad), (0, 0)))
+    grid = ((ne + pad) // block,)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, k), lambda i: (i, 0)),
+                  pl.BlockSpec((block, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, ne + pad), jnp.uint8),
+        interpret=interpret,
+    )(x, prev)
+    return out[:, :ne]
+
+
+def _inv_kernel(d_ref, o_ref):
+    o_ref[...] = jnp.cumsum(d_ref[...], axis=1, dtype=jnp.uint8)
+
+
+def inverse_planes_2d(d, *, interpret: bool = False):
+    """(k, ne) delta planes → (k, ne) byte planes (cumsum mod 256). One
+    grid program per plane: the carry chain is sequential, so a plane is
+    the natural program granule."""
+    k, ne = d.shape
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, ne), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, ne), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ne), jnp.uint8),
+        interpret=interpret,
+    )(d)
+
+
+def forward_pallas_expr(u8, itemsize: int, *, interpret: bool = False):
+    """Traceable pallas forward (the fused pallas scan dispatch inlines
+    this, mirroring ``forward_expr`` on the jnp side)."""
+    n = u8.shape[0]
+    k = int(itemsize)
+    ne = n // k
+    if ne == 0:
+        return u8
+    x = u8[:ne * k].reshape(ne, k)
+    prev = jnp.concatenate([jnp.zeros((1, k), jnp.uint8), x[:-1]])
+    d = forward_planes_2d(x, prev, interpret=interpret).reshape(-1)
+    return jnp.concatenate([d, u8[ne * k:]])
+
+
+@partial(jax.jit, static_argnames=("itemsize", "interpret"))
+def forward_pallas(u8, *, itemsize: int, interpret: bool = False):
+    return forward_pallas_expr(u8, itemsize, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("itemsize", "interpret"))
+def inverse_pallas(u8, *, itemsize: int, interpret: bool = False):
+    n = u8.shape[0]
+    k = int(itemsize)
+    ne = n // k
+    if ne == 0:
+        return u8
+    d = u8[:ne * k].reshape(k, ne)
+    x = inverse_planes_2d(d, interpret=interpret)
+    return jnp.concatenate([x.T.reshape(-1), u8[ne * k:]])

@@ -31,6 +31,7 @@ from pathlib import Path
 
 from ..core import atomic, cas
 from ..core.checkpoint import _unpack_shard
+from ..core.codec import _np_dtype
 from ..core.codec import decode as codec_decode
 from ..core.elastic import ShardRange
 from ..core.namespace import REPLICA_SUFFIX
@@ -88,6 +89,50 @@ def _cas_report(root: Path, manifests: list, deep: bool = False,
         "deep_reads": deep_reads,
         "ok": not (orphans or missing or drift),
     }
+
+
+def _codec_report(mdir: Path, manifest: dict, report: dict, out) -> None:
+    """Per-codec encoded-vs-raw byte totals for the inspected step — the
+    effective compression each codec delivered ON THIS DATA (a lossless
+    pre-conditioner like ``byteplane`` is exactly 1.00x here; its payoff
+    shows in the -zstd variant's ratio and in dedup). Chunked records
+    carry ``payload_bytes`` in the manifest; inline (full-mode) shards
+    cost one 4-byte header-length read each — no payload IO."""
+    per: defaultdict = defaultdict(lambda: [0, 0, 0])  # shards, raw, enc
+    for rec in manifest["leaves"].values():
+        for s in rec["shards"]:
+            shape = ShardRange(tuple(s["start"]), tuple(s["stop"])).shape
+            numel = 1
+            for d in shape:
+                numel *= d
+            raw = numel * _np_dtype(s["dtype"]).itemsize
+            enc = s.get("payload_bytes")
+            if enc is None and s.get("chunk_lens"):
+                enc = sum(s["chunk_lens"])
+            if enc is None and "chunks" not in s:
+                for fname in s.get("replicas", [s["file"]]):
+                    p = mdir / fname
+                    if p.exists():
+                        with p.open("rb") as f:
+                            hlen = int.from_bytes(f.read(4), "little")
+                        enc = p.stat().st_size - 4 - hlen
+                        break
+            if enc is None:            # v3/v4 chunked record, sizes unknown
+                continue
+            ent = per[s["codec"]]
+            ent[0] += 1
+            ent[1] += raw
+            ent[2] += enc
+    if not per:
+        return
+    report["codecs"] = {
+        c: {"shards": n, "raw_bytes": raw, "encoded_bytes": enc,
+            "ratio": round(raw / max(enc, 1), 3)}
+        for c, (n, raw, enc) in sorted(per.items())}
+    for c, (n, raw, enc) in sorted(per.items()):
+        out(f"    codec {c:15s} {n:5d} shard(s)  "
+            f"{raw/2**20:10.2f} MiB raw -> {enc/2**20:10.2f} MiB encoded  "
+            f"({raw/max(enc, 1):.2f}x)")
 
 
 def _step_dedup(root: Path, manifest: dict) -> dict | None:
@@ -325,6 +370,7 @@ def inspect(root: Path, step=None, verify=False, out=print,
     report.update(step=step, leaves=len(manifest["leaves"]),
                   shards=n_shards, mode=manifest.get("mode", "full"),
                   roles={k: v[1] for k, v in by_role.items()})
+    _codec_report(mdir, manifest, report, out)
     _tier_residency({"fast": root, "slow": slow_root,
                      "remote": remote_root},
                     manifest, mdir.name, report, out)

@@ -12,6 +12,7 @@ import argparse
 import logging
 
 from ..configs import ARCH_IDS, get_config, reduced
+from ..core.codec import CODECS
 from ..train.loop import Trainer, TrainerConfig
 
 
@@ -23,11 +24,10 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--workdir", default="runs/train")
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--codec", default=None,
-                    choices=["raw", "zstd", "int8"],
+    ap.add_argument("--codec", default=None, choices=list(CODECS),
                     help="default: zstd if the zstandard package is "
                          "installed, else raw")
-    ap.add_argument("--params-codec", default=None)
+    ap.add_argument("--params-codec", default=None, choices=list(CODECS))
     ap.add_argument("--ckpt-mode", default="full",
                     choices=["full", "incremental"],
                     help="incremental = content-addressed dedup checkpoints")

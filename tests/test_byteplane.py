@@ -1,0 +1,433 @@
+"""Byteplane pre-conditioning codec — oracle fuzz, three-backend parity,
+the fused transform+scan dispatch, the staging arena, host-encoder
+equivalence, serial-engine purity, and full save→restore integration.
+
+The transformed stream is the dedup keyspace when a byteplane codec is
+active: a backend that drifts by ONE byte re-writes history. Everything
+here pins bit-exactness against the numpy oracle in ``core.codec``."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from conftest import make_ckpt_policy
+from repro.core import cdc_scan
+from repro.core import codec as codec_mod
+from repro.core.cdc_scan import GearScanner, scan_candidates_numpy
+from repro.core.checkpoint import CheckpointManager
+from repro.core.policy import CheckpointPolicy, CodecPolicy
+from repro.core.storage import Tier, TieredStore
+from repro.kernels.ckpt_codec import byteplane as bp
+
+MS, ML = (1 << 13) - 1, (1 << 11) - 1      # strict/loose gear masks
+
+# odd, unaligned, empty, sub-BLOCK and multi-block sizes (in BYTES)
+SIZES = [0, 1, 3, 5, 63, 64, 65, 1000, 4097, 65549, 300_001]
+ITEMSIZES = [1, 2, 4, 8]
+
+
+def _rand(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 256, n, dtype=np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# the numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", ITEMSIZES)
+@pytest.mark.parametrize("n", SIZES)
+def test_oracle_round_trip(n, k):
+    u8 = _rand(n, seed=n + k)
+    t = codec_mod.byteplane_forward(u8, k)
+    assert t.dtype == np.uint8 and t.size == n          # size-preserving
+    back = codec_mod.byteplane_inverse(t, k)
+    np.testing.assert_array_equal(back, u8)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float16", "int8", "uint32",
+                                   "bfloat16"])
+def test_oracle_round_trip_real_dtypes(dtype):
+    # real param/optimizer payloads: f32/bf16 params, int8 q-payloads
+    rng = np.random.default_rng(7)
+    if dtype == "int8":
+        arr = rng.integers(-127, 128, 5003, dtype=np.int8)
+    elif dtype == "uint32":
+        arr = rng.integers(0, 1 << 32, 2049, dtype=np.uint32)
+    else:
+        arr = (rng.standard_normal(4097) * 0.02).astype(np.float32)
+        if dtype != "float32":
+            arr = np.asarray(jnp.asarray(arr).astype(dtype))
+    u8 = codec_mod.contig_u8(arr)
+    k = arr.dtype.itemsize
+    back = codec_mod.byteplane_inverse(codec_mod.byteplane_forward(u8, k), k)
+    np.testing.assert_array_equal(back, u8)
+
+
+def test_oracle_rejects_bad_itemsize():
+    with pytest.raises(ValueError):
+        codec_mod.byteplane_forward(_rand(16), 0)
+    with pytest.raises(ValueError):
+        codec_mod.byteplane_inverse(_rand(16), -2)
+
+
+def test_ragged_tail_passes_through():
+    u8 = _rand(4 * 10 + 3, seed=1)
+    t = codec_mod.byteplane_forward(u8, 4)
+    np.testing.assert_array_equal(t[-3:], u8[-3:])
+
+
+# ---------------------------------------------------------------------------
+# device backends — byte-identical to the oracle (pallas via interpret)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", ITEMSIZES)
+@pytest.mark.parametrize("n", [0, 5, 63, 1000, 4097, 65549])
+def test_jnp_backend_matches_oracle(n, k):
+    u8 = _rand(n, seed=n * 7 + k)
+    t_ref = codec_mod.byteplane_forward(u8, k)
+    t = np.asarray(bp.forward_jnp(jnp.asarray(u8), itemsize=k))
+    np.testing.assert_array_equal(t, t_ref)
+    back = np.asarray(bp.inverse_jnp(jnp.asarray(t_ref), itemsize=k))
+    np.testing.assert_array_equal(back, u8)
+
+
+@pytest.mark.parametrize("k", ITEMSIZES)
+@pytest.mark.parametrize("n", [0, 5, 1000, 65549])
+def test_pallas_backend_matches_oracle(n, k):
+    u8 = _rand(n, seed=n * 3 + k)
+    t_ref = codec_mod.byteplane_forward(u8, k)
+    t = np.asarray(bp.forward_pallas(jnp.asarray(u8), itemsize=k,
+                                     interpret=True))
+    np.testing.assert_array_equal(t, t_ref)
+    back = np.asarray(bp.inverse_pallas(jnp.asarray(t_ref), itemsize=k,
+                                        interpret=True))
+    np.testing.assert_array_equal(back, u8)
+
+
+# ---------------------------------------------------------------------------
+# the fused transform+scan dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jnp", "pallas"])
+def test_fused_scan_matches_oracle_of_transformed(backend):
+    # candidates must equal the oracle scan OF the oracle-transformed
+    # stream — the fused dispatch feeds chunking/dedup directly
+    n, k = 3_000_000, 4
+    u8 = _rand(n, seed=11)
+    u8[n // 4:n // 4 + 50_000] = 3          # compressible run → candidates
+    t_ref = codec_mod.byteplane_forward(u8, k)
+    cand_ref = scan_candidates_numpy(t_ref, MS, ML)
+    sc = GearScanner(MS, ML, backend=backend,
+                     pallas_interpret=(backend == "pallas"))
+    (strict, loose), t = sc.scan_transform_async(u8, k).result()
+    np.testing.assert_array_equal(np.asarray(t), t_ref)
+    np.testing.assert_array_equal(strict, cand_ref[0])
+    np.testing.assert_array_equal(loose, cand_ref[1])
+    assert len(cand_ref[1]) > 0             # the fixture actually scans
+
+
+@pytest.mark.parametrize("n", [0, 5, 64, 1000])
+def test_fused_scan_tiny_payloads(n):
+    # at/below the window no candidates exist; the transform still runs
+    u8 = _rand(n, seed=n)
+    sc = GearScanner(MS, ML, backend="jnp")
+    (strict, loose), t = sc.scan_transform_async(u8, 2).result()
+    np.testing.assert_array_equal(np.asarray(t),
+                                  codec_mod.byteplane_forward(u8, 2))
+    ref = scan_candidates_numpy(codec_mod.byteplane_forward(u8, 2), MS, ML)
+    np.testing.assert_array_equal(strict, ref[0])
+    np.testing.assert_array_equal(loose, ref[1])
+
+
+def test_transform_async_matches_oracle():
+    for n in (1000, 3_000_000):             # host inline + device dispatch
+        u8 = _rand(n, seed=n)
+        t = cdc_scan.transform_async(u8, 4).result()
+        np.testing.assert_array_equal(
+            t, codec_mod.byteplane_forward(u8, 4))
+
+
+# ---------------------------------------------------------------------------
+# staging arena (small-payload dispatch overhead)
+# ---------------------------------------------------------------------------
+
+def test_staging_arena_recycles_after_extraction():
+    sc = GearScanner(MS, ML, backend="jnp")
+    data = _rand(3_000_000, seed=2)
+    sc.scan_async(data).result()
+    sizes = [s for s, bufs in cdc_scan._ARENA._free.items() if bufs]
+    assert sizes, "no staging buffer returned to the arena"
+    s = sizes[0]
+    before = len(cdc_scan._ARENA._free[s])
+    buf = cdc_scan._ARENA.acquire(s)
+    assert buf.nbytes == s
+    assert len(cdc_scan._ARENA._free[s]) == before - 1   # recycled, not fresh
+    cdc_scan._ARENA.release(buf)
+
+
+def test_staging_arena_bounds_pool():
+    arena = cdc_scan._StagingArena()
+    bufs = [arena.acquire(1024) for _ in range(arena.MAX_PER_SIZE + 3)]
+    for b in bufs:
+        arena.release(b)
+    assert len(arena._free[1024]) == arena.MAX_PER_SIZE
+
+
+# ---------------------------------------------------------------------------
+# codec entries — host encoder equivalence and self-describing decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int8", "float16"])
+def test_byteplane_codec_round_trip(dtype):
+    rng = np.random.default_rng(5)
+    arr = (rng.standard_normal(4099) * 0.1).astype(dtype) \
+        if dtype != "int8" else rng.integers(-127, 128, 4099, dtype=np.int8)
+    payload, meta = codec_mod.encode(arr, "byteplane")
+    assert meta == {"bp": arr.dtype.itemsize}
+    assert len(payload) == arr.nbytes                    # size-preserving
+    back = codec_mod.decode(payload, "byteplane", arr.shape, str(arr.dtype),
+                            meta)
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_encode_preconditioned_matches_host_encoder():
+    arr = (np.random.default_rng(6).standard_normal(8192) * 0.02) \
+        .astype(np.float32)
+    t = codec_mod.byteplane_forward(codec_mod.contig_u8(arr),
+                                    arr.dtype.itemsize)
+    host, _ = codec_mod.encode(arr, "byteplane")
+    assert bytes(codec_mod.encode_preconditioned(t, "byteplane")) == host
+
+
+@pytest.mark.skipif(not codec_mod.HAVE_ZSTD, reason="zstandard not installed")
+def test_byteplane_zstd_round_trip_and_equivalence():
+    arr = (np.random.default_rng(8).standard_normal(16384) * 0.02) \
+        .astype(np.float32)
+    payload, meta = codec_mod.encode(arr, "byteplane-zstd")
+    back = codec_mod.decode(payload, "byteplane-zstd", arr.shape,
+                            "float32", meta)
+    np.testing.assert_array_equal(back, arr)
+    t = codec_mod.byteplane_forward(codec_mod.contig_u8(arr), 4)
+    assert codec_mod.encode_preconditioned(t, "byteplane-zstd") == payload
+
+
+def test_byteplane_availability():
+    assert codec_mod.available("byteplane")
+    assert codec_mod.available("byteplane-zstd") == codec_mod.HAVE_ZSTD
+    assert not codec_mod.lossy("byteplane")
+    assert not codec_mod.lossy("byteplane-zstd")
+
+
+def test_decode_falls_back_to_dtype_itemsize_without_meta():
+    arr = np.arange(512, dtype=np.float32)
+    payload, _ = codec_mod.encode(arr, "byteplane")
+    back = codec_mod.decode(payload, "byteplane", arr.shape, "float32", {})
+    np.testing.assert_array_equal(back, arr)
+
+
+@pytest.mark.skipif(not codec_mod.HAVE_ZSTD, reason="zstandard not installed")
+def test_zstd_encode_has_no_double_copy():
+    # the old encoder did ascontiguousarray(arr).tobytes() — a full extra
+    # copy of every payload before the compressor saw it. Compressing an
+    # incompressible payload must not allocate another payload-sized block
+    # beyond the compressed output itself.
+    import tracemalloc
+    arr = np.random.default_rng(9).integers(
+        0, 256, 8 << 20, dtype=np.uint8).view(np.float32)
+    codec_mod.encode(arr, "zstd")           # warm thread-local compressor
+    tracemalloc.start()
+    payload, _ = codec_mod.encode(arr, "zstd")
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # incompressible input → output ≈ nbytes; a tobytes() copy would push
+    # the peak to ≈ 2× nbytes
+    assert peak < int(arr.nbytes * 1.5), (peak, arr.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# policy surface
+# ---------------------------------------------------------------------------
+
+def test_codec_policy_accepts_byteplane_names():
+    CodecPolicy(codec="byteplane")
+    CodecPolicy(codec="byteplane-zstd", params_codec="byteplane")
+    with pytest.raises(ValueError):
+        CodecPolicy(codec="byteplanes")
+
+
+def test_device_precondition_resolution():
+    auto = CodecPolicy(codec="byteplane")
+    assert auto.precondition_enabled(serial=False) is True
+    assert auto.precondition_enabled(serial=True) is False   # PR-1 purity
+    off = CodecPolicy(codec="byteplane", device_precondition=False)
+    assert off.precondition_enabled(serial=False) is False
+    on = CodecPolicy(codec="byteplane", device_precondition=True)
+    assert on.precondition_enabled(serial=True) is False     # serial pins
+
+
+def test_device_precondition_flat_and_env_overrides():
+    p = CheckpointPolicy().with_overrides(codec="byteplane",
+                                          device_precondition=False)
+    assert p.codec.codec == "byteplane"
+    assert p.codec.device_precondition is False
+    p = CheckpointPolicy.from_env(
+        {"REPRO_CKPT_DEVICE_PRECONDITION": "true",
+         "REPRO_CKPT_CODEC": "byteplane"})
+    assert p.codec.device_precondition is True
+    assert p.codec.codec == "byteplane"
+
+
+# ---------------------------------------------------------------------------
+# engine integration: identical bytes on every path, serial purity,
+# save→restore through the standard store fixture
+# ---------------------------------------------------------------------------
+
+def _store(tmp_path, name="fast"):
+    return TieredStore(Tier(name, tmp_path / name))
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray((rng.standard_normal(400_000) * 0.02)
+                                    .astype(np.float32)),
+                   "b": jnp.asarray(rng.standard_normal(300)
+                                    .astype(np.float32))},
+        "opt": {"m": jnp.asarray(rng.integers(0, 100, 5_000,
+                                              dtype=np.int32))},
+    }
+
+
+def _abstract(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def _mk(tmp_path, sub, **flat):
+    flat.setdefault("mode", "incremental")
+    flat.setdefault("chunking", "cdc")
+    flat.setdefault("chunk_size", 65536)
+    return CheckpointManager(_store(tmp_path, sub),
+                             policy=make_ckpt_policy(**flat))
+
+
+def _records(man):
+    out = {}
+    for leaf, spec in man["leaves"].items():
+        for s in spec["shards"]:
+            out[(leaf, tuple(s["start"]))] = (
+                tuple(s["chunks"]), s["crc32"], s["payload_bytes"],
+                tuple(s.get("chunk_lens") or ()), s["meta"], s["codec"])
+    return out
+
+
+def test_device_host_serial_paths_write_identical_manifests(tmp_path):
+    st = _state()
+    mans = {}
+    for name, flat in [
+        ("dev", dict(io_threads=4, device_precondition=True)),
+        ("host", dict(io_threads=4, device_precondition=False)),
+        ("serial", dict(io_threads=1)),
+    ]:
+        m = _mk(tmp_path, name, codec="byteplane", **flat)
+        m.save(st, 1)
+        mans[name] = _records(m.load_manifest(1))
+        restored, _ = m.restore(_abstract(st), step=1)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        m.close()
+    assert mans["dev"] == mans["host"], \
+        "device pre-conditioning changed the stored bytes"
+    assert mans["dev"] == mans["serial"], \
+        "serial engine drifted from the pipelined chunk grid"
+
+
+def test_serial_engine_never_touches_device_path(tmp_path, monkeypatch):
+    # PR-1 purity: the serial engine must encode on the host oracle —
+    # no fused dispatch, no standalone device transform
+    import repro.core.save_path as sp
+
+    def boom(*a, **kw):
+        raise AssertionError("device pre-conditioning ran on the serial "
+                             "engine")
+    monkeypatch.setattr(sp.SaveSession, "submit_preconditioned", boom)
+    monkeypatch.setattr(cdc_scan, "transform_async", boom)
+    m = _mk(tmp_path, "serial", codec="byteplane", io_threads=1)
+    st = _state()
+    m.save(st, 1)
+    restored, _ = m.restore(_abstract(st), step=1)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m.close()
+
+
+def test_fused_path_actually_engages(tmp_path, monkeypatch):
+    # the pipelined engine with CDC + byteplane must route through the
+    # fused dispatch (not silently fall back to host encode)
+    calls = []
+    orig = GearScanner.scan_transform_async
+
+    def spy(self, payload, itemsize):
+        calls.append(len(payload))
+        return orig(self, payload, itemsize)
+    monkeypatch.setattr(GearScanner, "scan_transform_async", spy)
+    m = _mk(tmp_path, "dev", codec="byteplane", io_threads=4,
+            device_precondition=True)
+    # the shard must clear MIN_ACCEL_BYTES or the session correctly picks
+    # the standalone transform path instead of the fused dispatch
+    rng = np.random.default_rng(0)
+    st = {"params": {"w": jnp.asarray(
+        (rng.standard_normal(900_000) * 0.02).astype(np.float32))}}
+    m.save(st, 1)
+    m.close()
+    assert calls and max(calls) >= cdc_scan.MIN_ACCEL_BYTES, \
+        "fused scan_transform_async never invoked"
+
+
+def test_save_restore_byteplane_with_replicas_and_second_save(tmp_path):
+    # the crash-matrix shaped fixture: two saves, retention, gc, restore
+    m = _mk(tmp_path, "bb", codec="byteplane", io_threads=4,
+            n_writers=2, replicas=2, retain=2)
+    s1, s2 = _state(1), _state(2)
+    m.save(s1, 1)
+    m.save(s2, 2)
+    m.gc()
+    for step, st in [(1, s1), (2, s2)]:
+        restored, _ = m.restore(_abstract(st), step=step)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m.close()
+
+
+@pytest.mark.skipif(not codec_mod.HAVE_ZSTD, reason="zstandard not installed")
+def test_save_restore_byteplane_zstd_end_to_end(tmp_path):
+    m = _mk(tmp_path, "bbz", codec="byteplane-zstd", io_threads=4)
+    st = _state(3)
+    rep = m.save(st, 1)
+    assert rep["payload_bytes"] < rep["bytes"]       # entropy stage bites
+    restored, _ = m.restore(_abstract(st), step=1)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m.close()
+
+
+def test_manifest_adoption_keeps_readers_device_precondition(tmp_path):
+    st = _state()
+    w = _mk(tmp_path, "adopt", codec="byteplane", io_threads=4,
+            device_precondition=True)
+    w.save(st, 1)
+    w.close()
+    r = CheckpointManager(
+        _store(tmp_path, "adopt"),
+        policy=make_ckpt_policy(mode="incremental", chunking="cdc",
+                                chunk_size=65536, codec="raw",
+                                io_threads=4, device_precondition=False))
+    restored, _ = r.restore(_abstract(st), step=1)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # codec NAME adopted from the writer; the machine-local perf knob is
+    # NOT — the reader explicitly pinned the host path
+    assert r.codec == "byteplane"
+    assert r.policy.codec.device_precondition is False
+    assert r.device_precondition is False
+    r.close()
