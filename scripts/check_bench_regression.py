@@ -39,9 +39,17 @@ def check(doc: dict, threshold: float, out=print) -> list:
         floors = doc.get(floors_key, {}).get(section)
         if not floors:
             continue
+        unavailable = rec.get("unavailable_metrics") or ()
         for metric, floor in sorted(floors.items()):
             cur = rec.get(metric)
             if not isinstance(cur, (int, float)):
+                if metric in unavailable:
+                    # the run declared it could not produce this metric
+                    # (e.g. zstd-comparison arms without the optional
+                    # zstandard package) — skip the floor, don't flag it
+                    out(f"  {'skipped':9s} {section}.{metric} "
+                        f"(unavailable in the recorded run, floor {floor})")
+                    continue
                 failures.append(
                     f"{section}.{metric}: missing from the recorded run "
                     f"(floor {floor})")

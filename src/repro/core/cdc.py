@@ -112,13 +112,20 @@ class GearChunker:
         (strict, loose) pair — the save path scans payloads asynchronously
         (``scanner.scan_async``) so the scan of payload k+1 overlaps the
         chunk hash/write of payload k, then feeds the result back here."""
-        n = len(payload)
+        strict, loose = (candidates if candidates is not None
+                         else self._candidates(payload))
+        return self.cut_points_n(len(payload), (strict, loose))
+
+    def cut_points_n(self, n: int, candidates) -> list:
+        """``cut_points`` when only the payload LENGTH is known — the
+        fused transform+scan+entropy dispatch never materializes the
+        transformed bytes on the host, so the save path cuts on
+        ``(strict, loose)`` candidates plus the length alone."""
         if n == 0:
             return []
         if n <= self.min_size:
             return [n]
-        strict, loose = (candidates if candidates is not None
-                         else self._candidates(payload))
+        strict, loose = candidates
         cuts = []
         pos = 0
         while n - pos > self.min_size:
@@ -141,6 +148,25 @@ class GearChunker:
         if pos < n:
             cuts.append(n)
         return cuts
+
+    @staticmethod
+    def align_cuts(cuts: list, n: int, align: int) -> list:
+        """Round content-defined cut end-offsets UP to ``align`` multiples
+        (the final cut stays at ``n``), dropping duplicates. The chunk-
+        encoded codecs cut on this grid so every chunk starts on a plane-
+        block boundary: each chunk's entropy encoding is then BOTH a pure
+        function of the chunk bytes (dedup-stable) and a contiguous slice
+        of the whole-payload encoded stream the fused dispatch returns.
+        Alignment shifts cuts by < align ≪ min_size, so the size bounds
+        and boundary-resync properties of CDC survive."""
+        out = []
+        last = 0
+        for c in cuts:
+            a = min(-(-int(c) // align) * align, n)
+            if a > last:
+                out.append(a)
+                last = a
+        return out
 
     def chunk(self, payload, candidates=None) -> list:
         """Split ``payload`` into content-defined chunks.

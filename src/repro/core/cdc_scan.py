@@ -58,8 +58,24 @@ SEGMENT_BYTES = 4 << 20      # per-dispatch span: large enough to amortize
                              # dispatch, small enough to stay cache-warm
 MIN_ACCEL_BYTES = 2 << 20    # auto: below this the numpy oracle wins
                              # (dispatch + padding overhead)
-_MIN_COLS = 64               # smallest tail bucket: 64 columns = 64 KiB
+_MIN_COLS = 16               # smallest tail bucket: 16 columns = 16 KiB
 BACKENDS = ("auto", "numpy", "jnp", "pallas")
+
+
+def _bucket_cols(cols: int) -> int:
+    """Half-octave staging bucket for ``cols`` scan columns: sizes step
+    …16, 24, 32, 48, 64… so the padded dispatch wastes ≤33% instead of
+    the ≤100% a pure power-of-two ladder costs — the chunk-scan
+    small-payload gap (sub-2 MiB payloads paying full padding overhead).
+    Still two shapes per octave, so the per-shape jit cache and the
+    staging arena stay bounded."""
+    b = _MIN_COLS
+    while b < cols:
+        half = b + (b >> 1)
+        if cols <= half:
+            return half
+        b *= 2
+    return b
 
 
 def _gear_table() -> np.ndarray:
@@ -240,11 +256,9 @@ class _JnpBackend:
         zero page-zeroing."""
         import jax.numpy as jnp
         cols = -(-seg_len // BLOCK)
-        # bucket tail shapes to powers of two so recompilation is bounded
-        # (full segments all share one shape)
-        bucket = _MIN_COLS
-        while bucket < cols:
-            bucket *= 2
+        # half-octave tail buckets keep recompilation bounded (full
+        # segments all share one shape) without doubling small dispatches
+        bucket = _bucket_cols(cols)
         padded = _staging(WINDOW + bucket * BLOCK)
         halo = min(start, WINDOW)
         if halo:
@@ -390,14 +404,22 @@ def accelerator_present() -> bool:
 # ---------------------------------------------------------------------------
 
 _fused_lock = threading.Lock()
-_fused_fns: dict = {}          # (backend, interpret) → jitted executable
+_fused_fns: dict = {}     # (backend, interpret, entropy) → jitted executable
 
 
-def _build_fused_fn(backend: str, interpret: bool = False):
+def _build_fused_fn(backend: str, interpret: bool = False,
+                    entropy: str | None = None):
     """Build the fused byteplane-forward + gear-scan executable: ONE
     device round-trip per payload returns the transformed bytes AND the
     candidate mask computed over them, so the byteplane codec costs no
     extra dispatch beyond the CDC scan the save queue already pays for.
+
+    With ``entropy`` set (a chunk-encoded codec name) a THIRD stage runs
+    in the same dispatch: the plane RLE/rANS block encoder over the
+    transformed stream. The executable then returns the candidate mask
+    plus the pre-compressed framed stream and its per-block lengths — the
+    transformed bytes themselves never cross D2H, so the transfer and all
+    downstream host hashing shrink to the encoded size.
 
     Whole-payload dispatch, unlike the segmented plain scan: the
     byteplane transform is a global permutation of the stream, so
@@ -408,6 +430,7 @@ def _build_fused_fn(backend: str, interpret: bool = False):
     import jax.numpy as jnp
 
     from ..kernels.ckpt_codec import byteplane as bp
+    from ..kernels.ckpt_codec import entropy as ent
 
     if backend == "pallas":
         def impl(raw, itemsize, mask_strict, mask_loose):
@@ -417,32 +440,37 @@ def _build_fused_fn(backend: str, interpret: bool = False):
             padded = jnp.concatenate(
                 [jnp.zeros(WINDOW, jnp.uint8), t,
                  jnp.zeros(padded_len - WINDOW - n, jnp.uint8)])
-            return t, _pallas_scan_expr(padded, mask_strict, mask_loose,
-                                        interpret=interpret)
+            scan = _pallas_scan_expr(padded, mask_strict, mask_loose,
+                                     interpret=interpret)
+            if entropy is None:
+                return t, scan
+            return (scan,) + ent.encode_pallas_expr(
+                t, entropy, interpret=interpret)
     else:
         def impl(raw, itemsize, mask_strict, mask_loose):
             t = bp.forward_expr(raw, itemsize)
             n = raw.shape[0]
-            cols = -(-n // BLOCK)
-            bucket = _MIN_COLS
-            while bucket < cols:
-                bucket *= 2
+            bucket = _bucket_cols(-(-n // BLOCK))
             padded = jnp.concatenate(
                 [jnp.zeros(WINDOW, jnp.uint8), t,
                  jnp.zeros(bucket * BLOCK - n, jnp.uint8)])
-            return (t,) + _scan_columns_expr(padded, mask_strict,
-                                             mask_loose)
+            scan = _scan_columns_expr(padded, mask_strict, mask_loose)
+            if entropy is None:
+                return (t,) + scan
+            return scan + ent.encode_expr(t, entropy)
 
     donate = (0,) if accelerator_present() else ()
     return jax.jit(impl, static_argnums=(1, 2, 3), donate_argnums=donate)
 
 
-def _fused_fn(backend: str, interpret: bool = False):
-    key = (backend, interpret)
+def _fused_fn(backend: str, interpret: bool = False,
+              entropy: str | None = None):
+    key = (backend, interpret, entropy)
     with _fused_lock:
         fn = _fused_fns.get(key)
         if fn is None:
-            fn = _fused_fns[key] = _build_fused_fn(backend, interpret)
+            fn = _fused_fns[key] = _build_fused_fn(backend, interpret,
+                                                   entropy)
         return fn
 
 
@@ -453,6 +481,29 @@ class FusedScanTicket:
     OVER the transformed stream (byte-identical to the numpy oracle
     scanning the oracle transform — the transformed bytes are the dedup
     keyspace) plus the transformed payload as a host uint8 array."""
+
+    __slots__ = ("_resolve", "_done")
+
+    def __init__(self, resolve=None, done=None):
+        self._resolve = resolve
+        self._done = done
+
+    def result(self):
+        if self._done is None:
+            self._done = self._resolve()
+            self._resolve = None
+        return self._done
+
+
+class FusedEncodeTicket:
+    """Handle for one fused transform + scan + plane-entropy dispatch.
+    ``result()`` joins the device round-trip and returns
+    ``((strict, loose), stream, block_lens)``: candidate end offsets over
+    the transformed stream, the framed RLE/rANS block stream (host uint8,
+    byte-identical to the oracle encoding of the oracle transform) and
+    per-block encoded lengths (headers included) whose prefix sums let
+    the save path slice any plane-block-aligned chunk's encoding out of
+    the stream without re-encoding."""
 
     __slots__ = ("_resolve", "_done")
 
@@ -675,3 +726,44 @@ class GearScanner:
             return extract(res, 0, n, n), t
 
         return FusedScanTicket(resolve=resolve)
+
+    def scan_transform_encode_async(self, payload, itemsize: int,
+                                    entropy_codec: str) \
+            -> FusedEncodeTicket:
+        """Three fused stages in ONE device round-trip: byteplane forward
+        transform, candidate scan of the transformed stream, and the
+        plane RLE/rANS block encoder — chunks reach the host already
+        compressed, so D2H and host hashing pay the encoded size. Below
+        the acceleration threshold (or on the numpy backend) the host
+        oracle runs all three stages inline: same bytes, same candidates,
+        same encoded stream."""
+        data = as_u8(payload)
+        n = len(data)
+        backend = self.resolve(n)
+        if backend == "numpy" or n <= WINDOW:
+            t = codec_mod.byteplane_forward(data, itemsize)
+            cands = (scan_candidates_numpy(t, self.mask_strict,
+                                           self.mask_loose)
+                     if n > WINDOW else (_EMPTY, _EMPTY))
+            stream, block_lens = codec_mod.plane_stream_encode(
+                t, entropy_codec)
+            return FusedEncodeTicket(done=(cands, stream, block_lens))
+        import jax.numpy as jnp
+        fn = _fused_fn(backend, self._pallas_interpret, entropy_codec)
+        raw = fn(jnp.asarray(data), int(itemsize), self.mask_strict,
+                 self.mask_loose)
+        if backend == "pallas":
+            extract, res = _PallasBackend.extract, raw[0]
+            dlens, stream_dev, total = raw[2], raw[3], raw[4]
+        else:
+            extract, res = _JnpBackend.extract, raw[0:2]
+            dlens, stream_dev, total = raw[3], raw[4], raw[5]
+
+        def resolve():
+            cands = extract(res, 0, n, n)
+            tot = int(np.asarray(total))
+            stream = np.asarray(stream_dev)[:tot]
+            block_lens = 3 + np.asarray(dlens, np.int64)
+            return cands, stream, block_lens
+
+        return FusedEncodeTicket(resolve=resolve)

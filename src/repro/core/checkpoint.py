@@ -71,15 +71,18 @@ from .save_path import PersistStage, pack_shard, write_shards
 from .split_state import leaf_paths
 from .storage import TieredStore
 
-FORMAT_VERSION = 6
+FORMAT_VERSION = 7
 # v2 = full-mode inline shards only; v3 = chunked records, implicitly
 # fixed-size chunking (no per-record scheme field); v4 = chunking scheme
 # per shard record; v5 = CDC shard records additionally carry their chunk
 # LENGTH list (restore-side direct placement for content-defined chunks);
 # v6 = the manifest embeds the writer's effective CheckpointPolicy, so
 # restore and the inspector adopt the writer's chunking/scan/codec
-# settings with zero caller configuration
-READABLE_FORMATS = (2, 3, 4, 5, 6)
+# settings with zero caller configuration; v7 = chunk-encoded codec
+# records (byteplane-rle/-rans) carry per-chunk (raw_len, enc_len) pairs:
+# chunk_lens stay PHYSICAL (encoded bytes — offsets/crc describe what is
+# read) and chunk_raw_lens drive the plane entropy decode after placement
+READABLE_FORMATS = (2, 3, 4, 5, 6, 7)
 
 # inspector/test compatibility: the shard codecs live with their pipeline
 # stages now, but these names have external users
@@ -171,6 +174,11 @@ class CheckpointManager:
         # into the CDC scan dispatch (auto: pipelined engine only — the
         # serial engine is pinned to the host oracle, PR-1 purity)
         self.device_precondition = policy.codec.precondition_enabled(
+            policy.pipeline.serial)
+        # chunk-encoded codecs: run the plane entropy stage (RLE/rANS)
+        # on device too, fused into the same dispatch — same serial
+        # pinning (the serial engine is the host-oracle PR-1 baseline)
+        self.device_entropy = policy.codec.entropy_enabled(
             policy.pipeline.serial)
         self.chunks.chunk_size = int(policy.chunking.chunk_size)
 
@@ -340,13 +348,14 @@ class CheckpointManager:
                 (wc, wp or wc) != (self.codec, self.params_codec):
             if all(codec_mod.available(c) for c in {wc, wp or wc}):
                 # codec NAMES are adopted (they define the stored bytes);
-                # device_precondition stays the reader's — it is a
-                # machine-local perf knob producing identical bytes, and
+                # device_precondition / device_entropy stay the reader's —
+                # machine-local perf knobs producing identical bytes, and
                 # the writer's device may not exist here
                 new_codec = replace(
                     written.codec,
                     device_precondition=self.policy.codec
-                    .device_precondition)
+                    .device_precondition,
+                    device_entropy=self.policy.codec.device_entropy)
                 adopted.append("codec")
             else:
                 warn("CKPT_W_POLICY",
@@ -417,7 +426,8 @@ class CheckpointManager:
             leaf_codec=self._leaf_codec, max_retries=self.max_retries,
             save_timeout_s=self.save_timeout_s, crash=crash,
             overlapped=overlapped,
-            device_precondition=self.device_precondition)
+            device_precondition=self.device_precondition,
+            device_entropy=self.device_entropy)
         if not outcome.ok:
             # ABORT leaks nothing: no manifest, no LATEST move, and no
             # refcounts published — chunk objects a dead rank managed to

@@ -23,6 +23,17 @@ are the numpy ORACLE; the device-side jnp/Pallas backends
 and the save path fuses the forward transform into the CDC gear-scan
 dispatch (``core.cdc_scan.GearScanner.scan_transform_async``).
 
+``byteplane-rle`` / ``byteplane-rans`` move the entropy stage itself onto
+the device (nvCOMP/DietGPU-style): the transformed stream is encoded in
+fixed 4 KiB plane blocks — RLE for the run-length-collapsing sign/exponent
+planes, order-0 lane-interleaved rANS for mixed low-entropy blocks, and a
+per-block "store raw" escape so incompressible mantissa planes pass through
+untouched. These are CHUNK-ENCODED codecs: boundaries are still cut on the
+transformed stream (rounded up to plane-block alignment), each chunk is
+entropy-coded independently and deterministically (dedup-stable), and v7
+manifests carry per-chunk (raw_len, enc_len) pairs so restore can place
+encoded chunks directly and decode after placement.
+
 `zstandard` is an OPTIONAL dependency (the `compress` extra): raw, int8 and
 byteplane work without it (int8 then stores its quantized payload
 uncompressed, flagged in meta so decode stays self-describing); asking for
@@ -45,10 +56,34 @@ except ModuleNotFoundError:           # optional dependency (compress extra)
     HAVE_ZSTD = False
 
 BLOCK = 256
-CODECS = ("raw", "zstd", "int8", "byteplane", "byteplane-zstd")
+CODECS = ("raw", "zstd", "int8", "byteplane", "byteplane-zstd",
+          "byteplane-rle", "byteplane-rans")
 # codecs whose encode is (byteplane transform → optional entropy stage):
 # the save path may run the transform ON DEVICE, fused into the CDC scan
-PRECONDITIONED = ("byteplane", "byteplane-zstd")
+PRECONDITIONED = ("byteplane", "byteplane-zstd", "byteplane-rle",
+                  "byteplane-rans")
+# the device-entropy subset: the entropy stage is applied PER CHUNK of the
+# transformed stream (chunk boundaries are still cut on the transformed
+# bytes; the CAS stores each chunk's encoding, and the manifest records
+# per-chunk (raw_len, enc_len) pairs). Encoding is a pure function of the
+# chunk bytes, so identical chunks still dedup to identical objects.
+CHUNK_ENCODED = ("byteplane-rle", "byteplane-rans")
+
+# -- entropy-stage format constants (the on-disk contract) ------------------
+# Plane blocks: the transformed stream is encoded in fixed-size blocks so
+# the escape decision tracks the byte-plane structure (a 4 KiB block lies
+# inside one plane for any realistically-sized shard). CDC cut points are
+# rounded UP to this alignment when a chunk-encoded codec is active, so a
+# chunk's encoding equals the concatenation of its blocks' encodings and
+# the fused device dispatch can encode the whole payload once.
+ENTROPY_BLOCK = 4096
+RANS_LANES = 16          # lane-interleaved rANS states per block
+RANS_PROB_BITS = 12      # quantized frequency precision (sum = 4096)
+RANS_L = 1 << 23         # renormalization lower bound (byte renorm)
+_RANS_STEPS = ENTROPY_BLOCK // RANS_LANES
+_LANE_MAX = 2 * _RANS_STEPS       # emission bound: ≤2 bytes/symbol/lane
+# fixed per-block rANS overhead: nsyms byte + 16×u32 states + 16×u16 lens
+_RANS_FIXED = 1 + 4 * RANS_LANES + 2 * RANS_LANES
 
 # zstandard (de)compressor objects are NOT thread-safe; the checkpoint writer
 # runs N rank threads concurrently (observed: "Src size is incorrect" under
@@ -158,15 +193,406 @@ def byteplane_meta(arr: np.ndarray) -> dict:
     return {"bp": int(arr.dtype.itemsize)}
 
 
+# ---------------------------------------------------------------------------
+# plane-aware entropy stage (byteplane-rle / byteplane-rans) — numpy oracle
+# ---------------------------------------------------------------------------
+# The transformed stream is encoded in ENTROPY_BLOCK-byte blocks. Each block
+# is framed [flag u8][enc_len u16le][enc_len bytes] where flag is:
+#   0 = raw escape (incompressible — mantissa planes pass through untouched)
+#   1 = RLE: greedy maximal runs as (run_len u8 ∈ 1..255, value u8) pairs
+#   2 = rANS: order-0, 12-bit quantized freqs, 16 interleaved lanes
+# A smaller representation is chosen only when STRICTLY smaller (raw < rle
+# < rans on ties), so the encoder is deterministic and a pure function of
+# the block bytes — identical chunks still produce identical objects.
+#
+# rANS block body layout:
+#   [nsyms-1 u8][sym u8 ×nsyms ascending][freq u16le ×nsyms]
+#   [state u32le ×16][lane_len u16le ×16][lane0 bytes … lane15 bytes]
+# Lane j owns symbols at indices j, j+16, j+32, … of the block; encode
+# walks symbols in reverse, byte-renormalizing against RANS_L, and each
+# lane's byte stream is serialized in DECODE consumption order.
+
+def _rle_emissions(u8: np.ndarray, nb: int):
+    """Vectorized greedy RLE over a whole stream, runs cut at every
+    ENTROPY_BLOCK boundary. Returns (pair_buf [nb, 2·B] u8 zero-padded,
+    rle_lens [nb] encoded byte counts)."""
+    B = ENTROPY_BLOCK
+    n = u8.size
+    idx = np.arange(n, dtype=np.int64)
+    change = np.empty(n, bool)
+    change[0] = True
+    if n > 1:
+        change[1:] = u8[1:] != u8[:-1]
+    change[::B] = True                       # runs never span blocks
+    seg_start = np.maximum.accumulate(np.where(change, idx, 0))
+    pos = idx - seg_start                    # 0-based position inside run
+    end = np.empty(n, bool)
+    if n > 1:
+        end[:-1] = change[1:]
+    end[-1] = True
+    end[B - 1::B] = True                     # block boundary ends the run
+    emit = end | (pos % 255 == 254)          # cap runs at 255
+    e = np.flatnonzero(emit)
+    blk = e // B
+    npairs = np.bincount(blk, minlength=nb)
+    starts = np.concatenate([[0], np.cumsum(npairs)])[:-1]
+    rank = np.arange(e.size) - starts[blk]
+    buf = np.zeros((nb, 2 * B), np.uint8)
+    buf[blk, 2 * rank] = (pos[e] % 255 + 1).astype(np.uint8)
+    buf[blk, 2 * rank + 1] = u8[e]
+    return buf, 2 * npairs
+
+
+def _rans_quantize(counts: np.ndarray, blens: np.ndarray):
+    """Deterministic 12-bit frequency quantization, vectorized across
+    blocks: f = max(1, c·4096 // n) for present symbols, the residual is
+    absorbed by the first most-frequent symbol; blocks where that would
+    drop it below 1 are rANS-ineligible."""
+    nb = counts.shape[0]
+    T = 1 << RANS_PROB_BITS
+    nz = counts > 0
+    f = np.where(
+        nz, np.maximum(1, (counts * T) // np.maximum(blens[:, None], 1)), 0)
+    imax = np.argmax(counts, axis=1)         # first occurrence on ties
+    rows = np.arange(nb)
+    f[rows, imax] += T - f.sum(axis=1)
+    eligible = f[rows, imax] >= 1
+    cum = np.cumsum(f, axis=1) - f           # exclusive per-symbol base
+    return f, cum, nz.sum(axis=1), eligible
+
+
+def _rans_encode_blocks(blkmat: np.ndarray, blens: np.ndarray,
+                        f: np.ndarray, cum: np.ndarray):
+    """Lane-interleaved rANS encode of every block at once. Returns
+    (lane_buf [nb, 16, _LANE_MAX] u8 in decode order, lane_len [nb, 16],
+    states [nb, 16] u32)."""
+    nb = blkmat.shape[0]
+    L, S = RANS_LANES, _RANS_STEPS
+    sym = blkmat.reshape(nb, S, L).astype(np.int64)
+    valid = (np.arange(ENTROPY_BLOCK).reshape(S, L)[None]
+             < blens[:, None, None])
+    rows = np.arange(nb)[:, None]
+    x = np.full((nb, L), RANS_L, np.uint32)
+    out_b = np.zeros((S, nb, L, 2), np.uint8)
+    out_v = np.zeros((S, nb, L, 2), bool)
+    for t in range(S - 1, -1, -1):
+        s = sym[:, t, :]
+        v = valid[:, t, :]
+        fv = np.where(v, f[rows, s], 1).astype(np.uint32)
+        cv = np.where(v, cum[rows, s], 0).astype(np.uint32)
+        x_max = fv << np.uint32(8 + 23 - RANS_PROB_BITS)   # = ((L>>12)<<8)·f
+        e0 = v & (x >= x_max)
+        out_b[t, :, :, 0] = (x & 0xFF).astype(np.uint8)
+        out_v[t, :, :, 0] = e0
+        x = np.where(e0, x >> np.uint32(8), x)
+        e1 = v & (x >= x_max)
+        out_b[t, :, :, 1] = (x & 0xFF).astype(np.uint8)
+        out_v[t, :, :, 1] = e1
+        x = np.where(e1, x >> np.uint32(8), x)
+        xe = ((x // fv) << np.uint32(RANS_PROB_BITS)) + (x % fv) + cv
+        x = np.where(v, xe, x)
+    # decode consumes the emission sequence reversed: steps ascending,
+    # within a step the second byte before the first
+    db = out_b[:, :, :, ::-1].transpose(1, 2, 0, 3).reshape(nb, L, 2 * S)
+    dv = out_v[:, :, :, ::-1].transpose(1, 2, 0, 3).reshape(nb, L, 2 * S)
+    lane_len = dv.sum(axis=-1).astype(np.int64)
+    lane_buf = np.zeros((nb, L, _LANE_MAX), np.uint8)
+    pos = np.cumsum(dv, axis=-1) - 1
+    i, j, _ = np.nonzero(dv)
+    lane_buf[i, j, pos[dv]] = db[dv]
+    return lane_buf, lane_len, x
+
+
+def _rans_serialize(f, nsyms, lane_buf, lane_len, states):
+    """Pack rANS block bodies into a padded matrix [nb, W] + lengths."""
+    nb = f.shape[0]
+    L = RANS_LANES
+    W = 1 + 3 * 256 + _RANS_FIXED - 1 + L * _LANE_MAX
+    data = np.zeros((nb, W), np.uint8)
+    rows = np.arange(nb)
+    data[:, 0] = ((nsyms - 1) & 0xFF).astype(np.uint8)
+    r_idx, s_idx = np.nonzero(f > 0)
+    starts = np.concatenate([[0], np.cumsum(nsyms)])[:-1]
+    rank = np.arange(r_idx.size) - starts[r_idx]
+    data[r_idx, 1 + rank] = s_idx.astype(np.uint8)
+    fo = 1 + nsyms[r_idx]
+    fv = f[r_idx, s_idx].astype(np.int64)
+    data[r_idx, fo + 2 * rank] = (fv & 0xFF).astype(np.uint8)
+    data[r_idx, fo + 2 * rank + 1] = (fv >> 8).astype(np.uint8)
+    o_states = 1 + 3 * nsyms                          # [nb]
+    st = states.astype(np.uint32)
+    for b in range(4):
+        cols = o_states[:, None] + 4 * np.arange(L) + b
+        data[rows[:, None], cols] = \
+            ((st >> np.uint32(8 * b)) & 0xFF).astype(np.uint8)
+    o_lens = o_states + 4 * L
+    cols = o_lens[:, None] + 2 * np.arange(L)
+    data[rows[:, None], cols] = (lane_len & 0xFF).astype(np.uint8)
+    data[rows[:, None], cols + 1] = (lane_len >> 8).astype(np.uint8)
+    o_bytes = o_lens + 2 * L                          # [nb]
+    lane_off = np.cumsum(lane_len, axis=1) - lane_len  # [nb, L]
+    i, j, k = np.nonzero(np.arange(_LANE_MAX)[None, None, :]
+                         < lane_len[:, :, None])
+    data[i, o_bytes[i] + lane_off[i, j] + k] = lane_buf[i, j, k]
+    rans_lens = o_bytes + lane_len.sum(axis=1)
+    return data, rans_lens
+
+
+def entropy_encode_blocks(u8: np.ndarray, codec: str):
+    """Oracle block encoder for a whole (sub)stream: returns
+    (flags [nb], dlens [nb], padded [nb, ·] u8) where row b's first
+    dlens[b] bytes are block b's encoded body. Pure numpy; the jnp/Pallas
+    backends in ``kernels.ckpt_codec.entropy`` must match byte-for-byte."""
+    if codec not in CHUNK_ENCODED:
+        raise ValueError(f"codec {codec!r} has no entropy stage")
+    B = ENTROPY_BLOCK
+    n = u8.size
+    nb = -(-n // B)
+    if nb == 0:
+        return (np.zeros(0, np.uint8), np.zeros(0, np.int64),
+                np.zeros((0, B), np.uint8))
+    pad = nb * B - n
+    blkmat = np.concatenate([u8, np.zeros(pad, np.uint8)]).reshape(nb, B)
+    blens = np.full(nb, B, np.int64)
+    blens[-1] = n - (nb - 1) * B
+    rle_buf, rle_lens = _rle_emissions(u8, nb)
+    flags = np.zeros(nb, np.uint8)
+    dlens = blens.copy()
+    use_rle = rle_lens < dlens
+    flags[use_rle] = 1
+    dlens[use_rle] = rle_lens[use_rle]
+    if codec == "byteplane-rans":
+        valid = np.arange(B)[None, :] < blens[:, None]
+        counts = np.bincount(
+            (blkmat.astype(np.int64) + 256 * np.arange(nb)[:, None])[valid],
+            minlength=256 * nb).reshape(nb, 256)
+        f, cum, nsyms, eligible = _rans_quantize(counts, blens)
+        lane_buf, lane_len, states = \
+            _rans_encode_blocks(blkmat, blens, f, cum)
+        rans_data, rans_lens = \
+            _rans_serialize(f, nsyms, lane_buf, lane_len, states)
+        use_rans = eligible & (rans_lens < dlens)
+        flags[use_rans] = 2
+        dlens[use_rans] = rans_lens[use_rans]
+    padded = np.zeros((nb, B), np.uint8)
+    raw_rows = flags == 0
+    padded[raw_rows] = blkmat[raw_rows]
+    rle_rows = flags == 1
+    padded[rle_rows] = rle_buf[rle_rows, :B]
+    if codec == "byteplane-rans":
+        rans_rows = flags == 2
+        padded[rans_rows] = rans_data[rans_rows, :B]
+    keep = np.arange(B)[None, :] < dlens[:, None]
+    padded[~keep] = 0                        # deterministic padding
+    return flags, dlens, padded
+
+
+def assemble_block_stream(flags, dlens, padded):
+    """Serialize (flags, dlens, padded) into the framed block stream.
+    Shared by every backend — the device paths return the same triple.
+    Returns (stream np.uint8, block_lens [nb] incl. 3-byte headers)."""
+    flags = np.asarray(flags, np.uint8)
+    dlens = np.asarray(dlens, np.int64)
+    padded = np.asarray(padded, np.uint8)
+    nb = flags.size
+    block_lens = 3 + dlens
+    offs = np.cumsum(block_lens) - block_lens
+    out = np.zeros(int(block_lens.sum()), np.uint8)
+    out[offs] = flags
+    out[offs + 1] = (dlens & 0xFF).astype(np.uint8)
+    out[offs + 2] = (dlens >> 8).astype(np.uint8)
+    total = int(dlens.sum())
+    if total:
+        blk = np.repeat(np.arange(nb), dlens)
+        rank = np.arange(total) - np.repeat(np.cumsum(dlens) - dlens, dlens)
+        out[offs[blk] + 3 + rank] = padded[blk, rank]
+    return out, block_lens
+
+
+def plane_stream_encode(u8, codec: str):
+    """Encode a transformed stream (or one chunk of it — the format is
+    position-independent) with the plane entropy stage. Returns
+    (stream np.uint8, block_lens)."""
+    u8 = u8 if isinstance(u8, np.ndarray) else np.frombuffer(u8, np.uint8)
+    u8 = u8.reshape(-1).view(np.uint8)
+    return assemble_block_stream(*entropy_encode_blocks(u8, codec))
+
+
+def plane_encode_chunk(chunk, codec: str) -> bytes:
+    """Per-chunk entropy encode — blocks are framed relative to the chunk
+    start, so the result is a pure function of the chunk bytes (dedup-
+    stable) and, when chunks are ENTROPY_BLOCK-aligned, concatenating the
+    per-chunk encodings equals encoding the whole stream once (what the
+    fused device dispatch produces)."""
+    return plane_stream_encode(chunk, codec)[0].tobytes()
+
+
+def _rans_decode_group(bodies, raw_lens, payload):
+    """Vectorized rANS decode of a group of blocks: ``bodies`` is a list of
+    (offset, enc_len) into ``payload``; returns list of np.uint8 arrays."""
+    m = len(bodies)
+    L, S = RANS_LANES, _RANS_STEPS
+    f_rows, sym_rows, lane_mats, lane_lens, states = [], [], [], [], []
+    for off, elen in bodies:
+        body = payload[off:off + elen]
+        ns = int(body[0]) + 1
+        syms = body[1:1 + ns].astype(np.int64)
+        freqs = body[1 + ns:1 + 3 * ns].view(np.uint8)
+        freqs = (freqs[0::2].astype(np.int64)
+                 | (freqs[1::2].astype(np.int64) << 8))
+        p = 1 + 3 * ns
+        st = body[p:p + 4 * L].reshape(L, 4).astype(np.uint32)
+        states.append(st[:, 0] | (st[:, 1] << np.uint32(8))
+                      | (st[:, 2] << np.uint32(16))
+                      | (st[:, 3] << np.uint32(24)))
+        p += 4 * L
+        ll = body[p:p + 2 * L].reshape(L, 2).astype(np.int64)
+        ll = ll[:, 0] | (ll[:, 1] << 8)
+        p += 2 * L
+        mat = np.zeros((L, _LANE_MAX), np.uint8)
+        for j in range(L):
+            mat[j, :ll[j]] = body[p:p + ll[j]]
+            p += int(ll[j])
+        lane_mats.append(mat)
+        lane_lens.append(ll)
+        fr = np.zeros(256, np.int64)
+        fr[syms] = freqs
+        f_rows.append(fr)
+        sym_rows.append(np.repeat(syms, freqs))   # slot → symbol LUT
+    f_full = np.stack(f_rows)
+    cum_full = np.cumsum(f_full, axis=1) - f_full
+    lut = np.stack(sym_rows)                      # [m, 4096]
+    lanes = np.stack(lane_mats)                   # [m, L, _LANE_MAX]
+    llen = np.stack(lane_lens)                    # [m, L]
+    x = np.stack(states)                          # [m, L] u32
+    ptr = np.zeros((m, L), np.int64)
+    rows = np.arange(m)[:, None]
+    cols = np.arange(L)[None, :]
+    mask = np.uint32((1 << RANS_PROB_BITS) - 1)
+    out = np.zeros((m, S, L), np.uint8)
+    nsteps = (np.asarray(raw_lens)[:, None]
+              - cols + L - 1) // L                # symbols per lane
+    for t in range(S):
+        act = t < nsteps
+        slot = x & mask
+        s = lut[rows, slot.astype(np.int64)]
+        fv = f_full[rows, s].astype(np.uint32)
+        cv = cum_full[rows, s].astype(np.uint32)
+        x = np.where(act,
+                     fv * (x >> np.uint32(RANS_PROB_BITS)) + slot - cv, x)
+        for _ in range(2):                        # byte renorm, ≤2 reads
+            need = act & (x < np.uint32(RANS_L)) & (ptr < llen)
+            b = lanes[rows, cols, np.minimum(ptr, _LANE_MAX - 1)]
+            x = np.where(need, (x << np.uint32(8)) | b, x)
+            ptr = np.where(need, ptr + 1, ptr)
+        out[:, t, :] = np.where(act, s, 0).astype(np.uint8)
+    flat = out.reshape(m, ENTROPY_BLOCK)
+    return [flat[i, :raw_lens[i]] for i in range(m)]
+
+
+def plane_stream_decode(enc, raw_len: int, codec: str) -> np.ndarray:
+    """Decode a framed block stream back to ``raw_len`` transformed bytes.
+    Works on a whole-payload stream or a single chunk's encoding (same
+    format). Raises ValueError on malformed framing."""
+    if codec not in CHUNK_ENCODED:
+        raise ValueError(f"codec {codec!r} has no entropy stage")
+    payload = enc if isinstance(enc, np.ndarray) \
+        else np.frombuffer(enc, np.uint8)
+    payload = payload.reshape(-1).view(np.uint8)
+    out = np.empty(raw_len, np.uint8)
+    pos = 0
+    done = 0
+    rans_jobs, rans_dst = [], []
+    while done < raw_len:
+        if pos + 3 > payload.size:
+            raise ValueError("entropy stream truncated (header)")
+        flag = int(payload[pos])
+        elen = int(payload[pos + 1]) | (int(payload[pos + 2]) << 8)
+        pos += 3
+        blen = min(ENTROPY_BLOCK, raw_len - done)
+        if pos + elen > payload.size:
+            raise ValueError("entropy stream truncated (body)")
+        if flag == 0:
+            if elen != blen:
+                raise ValueError("raw block length mismatch")
+            out[done:done + blen] = payload[pos:pos + elen]
+        elif flag == 1:
+            pairs = payload[pos:pos + elen]
+            runs = pairs[0::2].astype(np.int64)
+            vals = pairs[1::2]
+            dec = np.repeat(vals, runs)
+            if dec.size != blen:
+                raise ValueError("rle block length mismatch")
+            out[done:done + blen] = dec
+        elif flag == 2:
+            rans_jobs.append(((pos, elen), blen))
+            rans_dst.append(done)
+        else:
+            raise ValueError(f"unknown entropy block flag {flag}")
+        pos += elen
+        done += blen
+    if pos != payload.size:
+        raise ValueError("entropy stream has trailing bytes")
+    if rans_jobs:
+        decs = _rans_decode_group([j[0] for j in rans_jobs],
+                                  [j[1] for j in rans_jobs], payload)
+        for dst, dec in zip(rans_dst, decs):
+            out[dst:dst + dec.size] = dec
+    return out
+
+
+def plane_decode_chunks(payload, enc_lens, raw_lens, codec: str) -> np.ndarray:
+    """Decode a concatenation of per-chunk encodings (the CAS payload a
+    v7 manifest describes) back into the transformed stream."""
+    u8 = payload if isinstance(payload, np.ndarray) \
+        else np.frombuffer(payload, np.uint8)
+    u8 = u8.reshape(-1).view(np.uint8)
+    out = np.empty(int(sum(raw_lens)), np.uint8)
+    eoff = roff = 0
+    for elen, rlen in zip(enc_lens, raw_lens):
+        out[roff:roff + rlen] = \
+            plane_stream_decode(u8[eoff:eoff + elen], int(rlen), codec)
+        eoff += int(elen)
+        roff += int(rlen)
+    if eoff != u8.size:
+        raise ValueError("chunk-encoded payload has trailing bytes")
+    return out
+
+
+def entropy_block_stats(enc, raw_len: int):
+    """Parse a framed block stream's headers WITHOUT decoding: yields
+    (abs_offset, blen, flag, enc_len) per block — inspect_ckpt maps these
+    onto byte planes for the per-plane report."""
+    payload = enc if isinstance(enc, np.ndarray) \
+        else np.frombuffer(enc, np.uint8)
+    payload = payload.reshape(-1).view(np.uint8)
+    pos = done = 0
+    while done < raw_len:
+        if pos + 3 > payload.size:
+            raise ValueError("entropy stream truncated (header)")
+        flag = int(payload[pos])
+        elen = int(payload[pos + 1]) | (int(payload[pos + 2]) << 8)
+        blen = min(ENTROPY_BLOCK, raw_len - done)
+        yield done, blen, flag, elen
+        pos += 3 + elen
+        done += blen
+
+
 def encode_preconditioned(transformed, codec: str):
     """Host stage of the device pre-conditioning pipeline: ``transformed``
     is the byteplane stream the device round-trip returned; this applies
     whatever entropy stage the codec adds. Byte-identical to
-    ``encode(arr, codec)`` on the same array — property-tested."""
+    ``encode(arr, codec)`` on the same array — property-tested.
+
+    Chunk-encoded codecs return the stream UNCHANGED here: their entropy
+    stage runs per chunk (after boundaries are cut on the transformed
+    bytes), via ``plane_encode_chunk`` or the fused device dispatch."""
     if codec == "byteplane":
         return transformed
     if codec == "byteplane-zstd":
         return _zc().compress(transformed)
+    if codec in CHUNK_ENCODED:
+        return transformed
     raise ValueError(f"codec {codec!r} is not a preconditioned codec")
 
 
@@ -185,6 +611,9 @@ def encode(arr: np.ndarray, codec: str) -> tuple:
     if codec == "byteplane-zstd":
         t = byteplane_forward(contig_u8(arr), arr.dtype.itemsize)
         return _zc().compress(t), byteplane_meta(arr)
+    if codec in CHUNK_ENCODED:
+        t = byteplane_forward(contig_u8(arr), arr.dtype.itemsize)
+        return plane_stream_encode(t, codec)[0].tobytes(), byteplane_meta(arr)
     if codec == "int8":
         q, scales = quantize_int8(arr)
         blob = q.tobytes() + scales.tobytes()
@@ -203,8 +632,15 @@ def decode(payload: bytes, codec: str, shape, dtype, meta: dict) -> np.ndarray:
         raw = _zd().decompress(payload)
         return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
     if codec in PRECONDITIONED:
-        u8 = payload if codec == "byteplane" else _zd().decompress(payload)
         k = int(meta.get("bp") or _np_dtype(dtype).itemsize)
+        if codec in CHUNK_ENCODED:
+            raw_len = int(np.prod(shape, dtype=np.int64)) \
+                * _np_dtype(dtype).itemsize
+            u8 = plane_stream_decode(payload, raw_len, codec)
+        elif codec == "byteplane":
+            u8 = payload
+        else:
+            u8 = _zd().decompress(payload)
         raw = byteplane_inverse(u8, k)
         return raw.view(_np_dtype(dtype)).reshape(shape)
     if codec == "int8":

@@ -131,10 +131,18 @@ class CodecPolicy:
     and never on the serial engine (host numpy purity); ``False`` forces
     the host oracle encoder everywhere. A MACHINE-LOCAL performance knob:
     the stored bytes are identical either way, so manifest adoption keeps
-    the reader's own setting."""
+    the reader's own setting.
+
+    ``device_entropy`` is the same knob for the chunk-encoded codecs'
+    plane entropy stage (byteplane-rle / byteplane-rans): ``None``
+    (auto) fuses RLE/rANS coding into the same device dispatch so chunks
+    reach the host pre-compressed; ``False`` keeps the scan/transform
+    fusion but runs the entropy stage through the host oracle. Equally
+    machine-local — every backend is byte-identical."""
     codec: str | None = None
     params_codec: str | None = None
     device_precondition: bool | None = None
+    device_entropy: bool | None = None
 
     def __post_init__(self):
         for c in (self.codec, self.params_codec):
@@ -148,6 +156,15 @@ class CodecPolicy:
             return False
         return True if self.device_precondition is None \
             else bool(self.device_precondition)
+
+    def entropy_enabled(self, serial: bool) -> bool:
+        """Effective device_entropy for an engine — same pinning rules as
+        ``precondition_enabled``: the serial engine always takes the host
+        oracle path."""
+        if serial:
+            return False
+        return True if self.device_entropy is None \
+            else bool(self.device_entropy)
 
     def resolved(self) -> tuple:
         """(codec, params_codec) with defaults resolved against THIS
@@ -220,6 +237,7 @@ FLAT_FIELDS = {
     "codec": ("codec", "codec"),
     "params_codec": ("codec", "params_codec"),
     "device_precondition": ("codec", "device_precondition"),
+    "device_entropy": ("codec", "device_entropy"),
     "streaming_restore": ("restore", "streaming"),
     "restore_frontier_classes": ("restore", "frontier_classes"),
     "remote_part_bytes": ("restore", "remote_part_bytes"),
@@ -240,7 +258,7 @@ _ENV_INT = {"n_writers", "chunk_size", "min_chunk_size", "max_chunk_size",
             "restore_frontier_classes", "remote_part_bytes"}
 _ENV_FLOAT = {"keepalive_s", "save_timeout_s"}
 _ENV_BOOL = {"async_drain_to_slow", "streaming_restore",
-             "device_precondition"}
+             "device_precondition", "device_entropy"}
 
 
 @dataclass(frozen=True)

@@ -331,9 +331,18 @@ class RestoreSession:
         fixed = srec.get("chunking", "fixed") == "fixed"
         chunk_size = srec.get("chunk_size") or 0
         chunk_lens = srec.get("chunk_lens")
+        chunk_raw_lens = srec.get("chunk_raw_lens")
         payload_bytes = srec.get("payload_bytes")
         crc32 = srec.get("crc32")
-        if fixed and chunk_size > 0 and payload_bytes is not None \
+        if chunk_raw_lens is not None and chunk_lens is not None \
+                and payload_bytes is not None and crc32 is not None:
+            # manifest v7 chunk-encoded record: chunk_lens are ENCODED
+            # lengths, so direct placement (and its crc-gated verified
+            # fallback inside read_payload_direct) reassembles exactly
+            # the stored entropy-coded stream
+            payload = self.chunks.read_payload_direct(
+                srec["chunks"], payload_bytes, crc32, chunk_lens)
+        elif fixed and chunk_size > 0 and payload_bytes is not None \
                 and crc32 is not None:
             payload = self.chunks.read_payload_fixed(
                 srec["chunks"], payload_bytes, chunk_size, crc32)
@@ -345,8 +354,23 @@ class RestoreSession:
             payload = self.chunks.read_payload(srec["chunks"],
                                                payload_bytes, crc32=crc32)
         rng = ShardRange(tuple(srec["start"]), tuple(srec["stop"]))
-        arr = codec_mod.decode(payload, srec["codec"], rng.shape,
-                               srec["dtype"], srec.get("meta", {}))
+        if chunk_raw_lens is not None \
+                and srec["codec"] in codec_mod.CHUNK_ENCODED:
+            # per-chunk entropy decode AFTER placement, then the byteplane
+            # inverse over the reassembled transformed stream
+            enc_lens = chunk_lens if chunk_lens is not None \
+                else [len(payload)]
+            t = codec_mod.plane_decode_chunks(payload, enc_lens,
+                                              chunk_raw_lens, srec["codec"])
+            meta = srec.get("meta") or {}
+            k = int(meta.get("bp")
+                    or codec_mod._np_dtype(srec["dtype"]).itemsize)
+            raw = codec_mod.byteplane_inverse(t, k)
+            arr = raw.view(codec_mod._np_dtype(srec["dtype"])) \
+                .reshape(rng.shape)
+        else:
+            arr = codec_mod.decode(payload, srec["codec"], rng.shape,
+                                   srec["dtype"], srec.get("meta", {}))
         self.cache.put(key, arr)
         return arr
 

@@ -128,6 +128,23 @@ class SavePlan:
 # rank-wide chunk submission queue
 # ---------------------------------------------------------------------------
 
+def _slice_encoded(stream, block_lens, cuts):
+    """Slice per-chunk encodings out of a whole-payload framed block
+    stream: every cut is ENTROPY_BLOCK-aligned (except the final one), so
+    chunk ends map to block indices and encoded offsets are prefix sums
+    of the per-block lengths. Returns (encoded chunk views, raw_lens)."""
+    eoffs = np.concatenate(
+        [[0], np.cumsum(np.asarray(block_lens, np.int64))])
+    chunks, raw_lens = [], []
+    prev_raw = prev_blk = 0
+    for c in cuts:
+        b1 = -(-int(c) // codec_mod.ENTROPY_BLOCK)
+        chunks.append(stream[eoffs[prev_blk]:eoffs[b1]])
+        raw_lens.append(int(c) - prev_raw)
+        prev_raw, prev_blk = int(c), b1
+    return chunks, raw_lens
+
+
 class PayloadTicket:
     """Accumulator for one submitted payload: digests in chunk order,
     per-chunk byte lengths (manifest v5 offset lists), bytes physically
@@ -137,10 +154,15 @@ class PayloadTicket:
 
     A ticket whose payload sits in the scan-ahead queue (its candidate
     scan still in flight on the device) has ``submitted=False`` until the
-    session chunks it and feeds the pool."""
+    session chunks it and feeds the pool.
+
+    For chunk-encoded codecs ``raw_lens`` carries the pre-entropy
+    (transformed-stream) chunk lengths; ``lens``/``crc``/``new_bytes``
+    then describe the ENCODED chunks that were physically stored, and
+    ``payload_bytes`` stays the transformed length."""
 
     __slots__ = ("digests", "lens", "new_bytes", "crc", "remaining",
-                 "n_chunks", "payload_bytes", "submitted")
+                 "n_chunks", "payload_bytes", "submitted", "raw_lens")
 
     def __init__(self, n_chunks: int, payload_bytes: int,
                  submitted: bool = True):
@@ -152,6 +174,7 @@ class PayloadTicket:
         self.n_chunks = n_chunks
         self.payload_bytes = payload_bytes
         self.submitted = submitted
+        self.raw_lens: list | None = None
 
     @property
     def done(self) -> bool:
@@ -248,7 +271,8 @@ class SaveSession:
         return ticket
 
     def submit_preconditioned(self, payload, itemsize: int,
-                              codec_name: str) -> PayloadTicket:
+                              codec_name: str, *,
+                              device_entropy: bool = True) -> PayloadTicket:
         """Byteplane-codec payload submission (pipelined engine only —
         the serial engine encodes on the host, PR-1 purity). The forward
         transform runs ON DEVICE: fused with the candidate scan when the
@@ -259,14 +283,72 @@ class SaveSession:
         zstd stage between transform and chunking). Either way the device
         works on payload k+1 while the pool hashes/writes payload k, and
         the stored stream is byte-identical to the host
-        ``codec_mod.encode`` path."""
+        ``codec_mod.encode`` path.
+
+        Chunk-encoded codecs (byteplane-rle/-rans) add the plane entropy
+        stage to the SAME dispatch when ``device_entropy`` and a CDC
+        chunker are active: boundaries are cut on the transformed stream
+        (rounded up to plane-block alignment) and each chunk's encoding
+        is sliced out of the whole-payload encoded stream the device
+        returned — byte-identical to per-chunk host encoding, but D2H and
+        hashing pay only the compressed size."""
         ticket = PayloadTicket(-1, len(payload), submitted=False)
-        fused = (codec_name == "byteplane"
-                 and self._chunker_obj is not None
-                 and self._chunker_obj.scanner.resolve(len(payload))
-                 != "numpy")
+        n = len(payload)
+        accel = (self._chunker_obj is not None
+                 and self._chunker_obj.scanner.resolve(n) != "numpy")
         try:
-            if fused:
+            if codec_name in codec_mod.CHUNK_ENCODED \
+                    and self._chunker_obj is not None:
+                ck = self._chunker_obj
+                if device_entropy or not accel:
+                    # fused 3-stage dispatch (or the inline host oracle
+                    # below the acceleration threshold — same bytes)
+                    handle = ck.scanner.scan_transform_encode_async(
+                        payload, itemsize, codec_name)
+
+                    def resolve(handle=handle, ck=ck, ticket=ticket, n=n):
+                        cands, stream, block_lens = handle.result()
+                        cuts = ck.align_cuts(ck.cut_points_n(n, cands), n,
+                                             codec_mod.ENTROPY_BLOCK)
+                        chunks, ticket.raw_lens = \
+                            _slice_encoded(stream, block_lens, cuts)
+                        return n, chunks
+                else:
+                    # device transform + scan, host entropy stage
+                    handle = ck.scanner.scan_transform_async(
+                        payload, itemsize)
+
+                    def resolve(handle=handle, ck=ck, ticket=ticket,
+                                codec_name=codec_name):
+                        cands, t = handle.result()
+                        cuts = ck.align_cuts(
+                            ck.cut_points_n(len(t), cands), len(t),
+                            codec_mod.ENTROPY_BLOCK)
+                        chunks, raw_lens, pos = [], [], 0
+                        for c in cuts:
+                            chunks.append(codec_mod.plane_encode_chunk(
+                                t[pos:c], codec_name))
+                            raw_lens.append(c - pos)
+                            pos = c
+                        ticket.raw_lens = raw_lens
+                        return len(t), chunks
+            elif codec_name in codec_mod.CHUNK_ENCODED:
+                # fixed chunk grid: boundaries are not plane-aligned, so
+                # each fixed-size raw chunk is entropy-coded on the host
+                # (chunk-relative blocks — still a pure function of the
+                # chunk bytes)
+                from . import cdc_scan
+                handle = cdc_scan.transform_async(payload, itemsize)
+
+                def resolve(handle=handle, ticket=ticket,
+                            codec_name=codec_name):
+                    t = handle.result()
+                    raw_chunks = split_payload(t, self._chunks.chunk_size)
+                    ticket.raw_lens = [len(c) for c in raw_chunks]
+                    return len(t), [
+                        codec_mod.plane_encode_chunk(c, codec_name)
+                        for c in raw_chunks]
+            elif codec_name == "byteplane" and accel:
                 handle = self._chunker_obj.scanner.scan_transform_async(
                     payload, itemsize)
 
@@ -290,6 +372,51 @@ class SaveSession:
                     return enc, chunks
 
             self._enqueue_scan(resolve, ticket)
+        except BaseException:
+            self.abort()
+            raise
+        return ticket
+
+    def submit_chunk_encoded(self, payload, itemsize: int,
+                             codec_name: str) -> PayloadTicket:
+        """Host-oracle path for chunk-encoded codecs: the serial engine
+        (PR-1 purity — pure numpy, inline) and the pipelined engine with
+        device pre-conditioning disabled. Transformed stream, aligned
+        cuts and per-chunk encodings are all oracle-computed, so the
+        stored objects and the manifest are byte-identical to the device
+        path's."""
+        u8 = payload if isinstance(payload, np.ndarray) \
+            else np.frombuffer(payload, np.uint8)
+        t = codec_mod.byteplane_forward(u8, itemsize)
+        if self._chunker_obj is not None:
+            ck = self._chunker_obj
+            cuts = ck.align_cuts(ck.cut_points(t), len(t),
+                                 codec_mod.ENTROPY_BLOCK)
+        else:
+            cs = self._chunks.chunk_size
+            cuts = list(range(cs, len(t), cs)) + ([len(t)] if len(t) else [])
+        raw_lens, chunks, pos = [], [], 0
+        for c in cuts:
+            chunks.append(codec_mod.plane_encode_chunk(t[pos:c], codec_name))
+            raw_lens.append(c - pos)
+            pos = c
+        if self.serial:
+            enc_stream = b"".join(chunks)
+            lens: list = []
+            digests, new = self._chunks.put_payload(
+                enc_stream, self._crash, on_chunk=self._on_chunk,
+                chunker=lambda _p: chunks, lens_out=lens)
+            ticket = PayloadTicket(0, len(t))
+            ticket.digests = digests
+            ticket.lens = lens
+            ticket.new_bytes = new
+            ticket.crc = zlib.crc32(enc_stream) & 0xFFFFFFFF
+            ticket.raw_lens = raw_lens
+            return ticket
+        ticket = PayloadTicket(len(chunks), len(t))
+        ticket.raw_lens = raw_lens
+        try:
+            self._feed(chunks, ticket)
         except BaseException:
             self.abort()
             raise
@@ -320,7 +447,11 @@ class SaveSession:
         resolve, ticket = self._scan_queue.popleft()
         try:
             payload, chunks = resolve()
-            ticket.payload_bytes = len(payload)
+            # chunk-encoded resolves return the transformed LENGTH (the
+            # fused entropy dispatch never materializes the stream on
+            # host) — everything else returns the payload itself
+            ticket.payload_bytes = payload if isinstance(payload, int) \
+                else len(payload)
             ticket.n_chunks = ticket.remaining = len(chunks)
             ticket.submitted = True
             self._feed(chunks, ticket)
@@ -424,7 +555,8 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                  chunking: str, chunker, replicas: int, leaf_codec,
                  max_retries: int, save_timeout_s: float,
                  crash: CrashInjector, overlapped: bool = False,
-                 device_precondition: bool = False) \
+                 device_precondition: bool = False,
+                 device_entropy: bool = True) \
         -> WriteOutcome:
     """Run the retrying 2PC phase 1: plan an attempt over surviving ranks,
     start one writer thread per rank, wait for the all-PREPARED barrier,
@@ -461,6 +593,22 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                         meta = codec_mod.byteplane_meta(arr)
                         crash.maybe(f"rank{rank}_before_write")
                         ticket = session.submit_preconditioned(
+                            u8, arr.dtype.itemsize, codec_name,
+                            device_entropy=device_entropy)
+                        # the device dispatch is in flight but this
+                        # payload's chunks have NOT been fed to the pool
+                        # yet (scan-ahead queue) — the crash matrix kills
+                        # the writer exactly here
+                        crash.maybe(f"rank{rank}_after_fused_dispatch")
+                    elif codec_name in codec_mod.CHUNK_ENCODED:
+                        # host-oracle entropy path (serial engine, or
+                        # device pre-conditioning disabled): same aligned
+                        # cuts, same per-chunk encodings, same manifest
+                        u8 = np.ascontiguousarray(arr) \
+                            .reshape(-1).view(np.uint8)
+                        meta = codec_mod.byteplane_meta(arr)
+                        crash.maybe(f"rank{rank}_before_write")
+                        ticket = session.submit_chunk_encoded(
                             u8, arr.dtype.itemsize, codec_name)
                     else:
                         if not session.serial and codec_name == "raw":
@@ -517,7 +665,18 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                 rec["chunks"] = digests
                 rec["crc32"] = crc
                 rec["payload_bytes"] = ticket.payload_bytes
-                if chunking == "cdc":
+                if ticket.raw_lens is not None:
+                    # manifest v7: chunk-encoded codec — chunk_lens keep
+                    # their physical meaning (encoded bytes: offsets,
+                    # direct placement and the crc all describe what is
+                    # actually read), raw lens drive the per-chunk
+                    # entropy decode after placement
+                    rec["payload_bytes"] = int(sum(ticket.lens))
+                    rec["raw_payload_bytes"] = int(ticket.payload_bytes)
+                    rec["chunk_lens"] = [int(n) for n in ticket.lens]
+                    rec["chunk_raw_lens"] = [int(n)
+                                             for n in ticket.raw_lens]
+                elif chunking == "cdc":
                     # manifest v5: content-defined chunk lengths — restore
                     # prefix-sums them into offsets and places reads
                     # directly (fixed chunking derives offsets instead)

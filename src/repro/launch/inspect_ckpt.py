@@ -31,7 +31,7 @@ from pathlib import Path
 
 from ..core import atomic, cas
 from ..core.checkpoint import _unpack_shard
-from ..core.codec import _np_dtype
+from ..core.codec import CHUNK_ENCODED, _np_dtype, entropy_block_stats
 from ..core.codec import decode as codec_decode
 from ..core.elastic import ShardRange
 from ..core.namespace import REPLICA_SUFFIX
@@ -133,6 +133,49 @@ def _codec_report(mdir: Path, manifest: dict, report: dict, out) -> None:
         out(f"    codec {c:15s} {n:5d} shard(s)  "
             f"{raw/2**20:10.2f} MiB raw -> {enc/2**20:10.2f} MiB encoded  "
             f"({raw/max(enc, 1):.2f}x)")
+
+
+def _entropy_planes(payload, raw_len: int, k: int, codec: str,
+                    table) -> None:
+    """Fold one chunk-encoded shard's block stats into the per-plane
+    table: ``table[(codec, plane)] = [raw, encoded, blocks, n_raw_escape,
+    n_rle, n_rans]``. The transformed stream lays the k byteplanes out
+    contiguously (plane p = bytes ``p*(n//k) .. (p+1)*(n//k)``, ragged
+    tail passed through at the end), so a block's plane is a pure
+    function of its absolute raw offset; a block straddling a plane
+    boundary is attributed to the plane holding its start."""
+    plane_len = raw_len // max(k, 1)
+    for off, blen, flag, enc_len in entropy_block_stats(payload, raw_len):
+        if plane_len and off >= plane_len * k:
+            plane = "tail"
+        else:
+            plane = min(off // plane_len, k - 1) if plane_len else 0
+        ent = table[(codec, plane)]
+        ent[0] += blen
+        ent[1] += 3 + enc_len
+        ent[2] += 1
+        ent[3 + flag] += 1
+
+
+def _emit_entropy_planes(table, report: dict, out) -> None:
+    """Per-plane raw/encoded bytes and escape counts for the chunk-
+    encoded codecs — the operator view of WHERE the entropy stage bites
+    (sign/exponent planes compress; mantissa planes escape to raw)."""
+    if not table:
+        return
+    planes = {}
+    for (codec, plane), (raw, enc, nb, n_raw, n_rle, n_rans) \
+            in sorted(table.items(), key=lambda kv: (kv[0][0],
+                                                     str(kv[0][1]))):
+        planes.setdefault(codec, {})[str(plane)] = {
+            "raw_bytes": raw, "encoded_bytes": enc, "blocks": nb,
+            "raw_escape_blocks": n_raw, "rle_blocks": n_rle,
+            "rans_blocks": n_rans}
+        out(f"    plane {codec}[{plane}]: "
+            f"{raw/2**20:8.2f} MiB raw -> {enc/2**20:8.2f} MiB encoded "
+            f"({raw/max(enc, 1):.2f}x)  blocks {nb} "
+            f"[raw-escape {n_raw}, rle {n_rle}, rans {n_rans}]")
+    report["entropy_planes"] = planes
 
 
 def _step_dedup(root: Path, manifest: dict) -> dict | None:
@@ -440,6 +483,7 @@ def inspect(root: Path, step=None, verify=False, out=print,
     if verify:
         chunk_store = _chunk_store(root)
         good = bad = replicas_ok = 0
+        plane_table: defaultdict = defaultdict(lambda: [0] * 6)
         for name, rec in manifest["leaves"].items():
             for s in rec["shards"]:
                 if "chunks" in s:
@@ -451,6 +495,21 @@ def inspect(root: Path, step=None, verify=False, out=print,
                         rng = ShardRange(tuple(s["start"]), tuple(s["stop"]))
                         codec_decode(payload, s["codec"], rng.shape,
                                      s["dtype"], s.get("meta", {}))
+                        if s["codec"] in CHUNK_ENCODED:
+                            # payload is the ENCODED stream (v7 records:
+                            # crc/lens describe stored bytes) — walk its
+                            # block framing for the per-plane view
+                            raw_len = s.get("raw_payload_bytes")
+                            if raw_len is None:
+                                numel = 1
+                                for d in rng.shape:
+                                    numel *= d
+                                raw_len = numel * \
+                                    _np_dtype(s["dtype"]).itemsize
+                            k = (s.get("meta") or {}).get("bp") or \
+                                _np_dtype(s["dtype"]).itemsize
+                            _entropy_planes(payload, int(raw_len), int(k),
+                                            s["codec"], plane_table)
                         good += 1
                     except Exception as e:  # noqa
                         bad += 1
@@ -479,6 +538,7 @@ def inspect(root: Path, step=None, verify=False, out=print,
                     report["problems"].append(
                         f"{name}: shard {s['file']} unreadable on all "
                         f"replicas")
+        _emit_entropy_planes(plane_table, report, out)
         out(f"  verify: {good} shard(s) ok, {bad} damaged"
             + (f", {replicas_ok} recovered via buddy replica"
                if replicas_ok else ""))

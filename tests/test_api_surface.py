@@ -73,7 +73,8 @@ def test_policy_fields_and_defaults_are_pinned():
         "replicas": 1, "retain": 3, "keepalive_s": 10.0,
         "save_timeout_s": 600.0, "max_retries": 1}
     assert _fields(CodecPolicy) == {"codec": None, "params_codec": None,
-                                    "device_precondition": None}
+                                    "device_precondition": None,
+                                    "device_entropy": None}
     assert _fields(RestorePolicy) == {
         "streaming": False, "frontier_classes": 2,
         "remote_part_bytes": DEFAULT_REMOTE_PART_BYTES}

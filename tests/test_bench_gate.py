@@ -1,0 +1,90 @@
+"""The bench regression gate (scripts/check_bench_regression.py).
+
+Pins the contract the benches rely on: floors are opt-in per section,
+tiny runs gate against baseline_tiny, and a run that DECLARES a metric
+unavailable (``unavailable_metrics`` — e.g. the zstd-comparison arms of
+bench_codec without the optional zstandard package) is skipped, while a
+silently-missing floored metric still fails."""
+from __future__ import annotations
+
+import importlib.util
+import sys
+from pathlib import Path
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench_regression",
+    Path(__file__).resolve().parents[1] / "scripts"
+    / "check_bench_regression.py")
+_MOD = importlib.util.module_from_spec(_SPEC)
+sys.modules.setdefault("check_bench_regression", _MOD)
+_SPEC.loader.exec_module(_MOD)
+check = _MOD.check
+
+
+def _doc(**live):
+    return {
+        "baseline": {"codec": {"rans_vs_zstd_speedup": 1.5,
+                               "rans_ratio_frac": 0.90}},
+        "baseline_tiny": {"codec": {"rans_vs_zstd_speedup": 1.2}},
+        **live,
+    }
+
+
+def test_passing_metrics_pass():
+    doc = _doc(codec={"rans_vs_zstd_speedup": 2.0, "rans_ratio_frac": 0.95})
+    assert check(doc, 0.2, out=lambda *a: None) == []
+
+
+def test_regression_below_threshold_fails():
+    # floor 1.5 − 20% → limit 1.2; 1.0 is a real regression
+    doc = _doc(codec={"rans_vs_zstd_speedup": 1.0, "rans_ratio_frac": 0.95})
+    fails = check(doc, 0.2, out=lambda *a: None)
+    assert len(fails) == 1 and "rans_vs_zstd_speedup" in fails[0]
+
+
+def test_tiny_runs_gate_against_tiny_floors():
+    # 1.1 would fail the full floor (1.5) but passes tiny (1.2 − 20%)
+    doc = _doc(codec={"tiny": True, "rans_vs_zstd_speedup": 1.1})
+    assert check(doc, 0.2, out=lambda *a: None) == []
+
+
+def test_declared_unavailable_metric_is_skipped():
+    # a zstd-less run still has OTHER floored sections; the declared-
+    # unavailable codec floors skip with a visible line, not a failure
+    doc = _doc(codec={"zstd_absent": True,
+                      "unavailable_metrics": ["rans_vs_zstd_speedup",
+                                              "rans_ratio_frac"],
+                      "rans_enc_gbps": 0.04})
+    doc["baseline"]["chunk_scan"] = {"scan_speedup": 4.5}
+    doc["chunk_scan"] = {"scan_speedup": 4.4}
+    lines = []
+    assert check(doc, 0.2, out=lines.append) == []
+    assert sum("skipped" in ln for ln in lines) == 2
+
+
+def test_all_floors_unavailable_still_fails_gate():
+    # ...but if NOTHING was checked at all, the gate refuses to pass
+    doc = _doc(codec={"zstd_absent": True,
+                      "unavailable_metrics": ["rans_vs_zstd_speedup",
+                                              "rans_ratio_frac"]})
+    fails = check(doc, 0.2, out=lambda *a: None)
+    assert fails and "no floored metrics" in fails[0]
+
+
+def test_silently_missing_floored_metric_fails():
+    doc = _doc(codec={"rans_vs_zstd_speedup": 2.0})   # ratio_frac gone
+    fails = check(doc, 0.2, out=lambda *a: None)
+    assert len(fails) == 1 and "rans_ratio_frac" in fails[0]
+    assert "missing" in fails[0]
+
+
+def test_unfloored_sections_and_metrics_are_ignored():
+    doc = _doc(codec={"rans_vs_zstd_speedup": 2.0, "rans_ratio_frac": 0.95,
+                      "novel_metric": 0.001},
+               other_section={"whatever": 0.0})
+    assert check(doc, 0.2, out=lambda *a: None) == []
+
+
+def test_empty_doc_flags_nothing_checked():
+    fails = check({"baseline": {}}, 0.2, out=lambda *a: None)
+    assert fails and "no floored metrics" in fails[0]

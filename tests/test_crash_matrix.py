@@ -57,6 +57,10 @@ POINTS = [
     "cas_before_batch_fsync",    # executor: renamed, batch fsync lost
     "cas_dedup_race",            # executor: crash on concurrent dedup hit
     "rank0_after_chunk_write",   # writer dies with orphan chunks on disk
+    "rank0_after_fused_dispatch",  # chunk-encoded codecs: dispatch landed,
+    # chunks never submitted (fires only with a chunk-encoded codec on the
+    # device path — test_manifest_v7 exercises the firing case; here the
+    # save simply commits and the invariants must hold regardless)
     "before_manifest",           # all shards durable, no commit record
     "after_tmp_write",           # manifest tmp written, not yet renamed
     "after_rename",              # manifest renamed, parent dir not fsynced

@@ -1,0 +1,244 @@
+"""Plane entropy coding (byteplane-rle / byteplane-rans) — oracle
+round-trip fuzz, the per-block raw-escape framing, three-backend parity
+(numpy oracle / jnp / Pallas-interpret byte-identical), and the
+chunk-slice identity that lets the save path slice per-chunk encodings
+out of ONE whole-payload device encoding.
+
+The encoded stream is the dedup keyspace when a chunk-encoded codec is
+active — digests, crcs and chunk_lens all describe ENCODED bytes — so a
+backend that drifts by one byte re-writes history. Everything here pins
+bit-exactness against the numpy oracle in ``core.codec``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import codec as codec_mod
+from repro.core.cdc import GearChunker
+from repro.core.codec import ENTROPY_BLOCK
+from repro.kernels.ckpt_codec import entropy as ent
+
+CODECS = ["byteplane-rle", "byteplane-rans"]
+
+# empty, odd, unaligned, sub-block, exactly-one-block, ragged multi-block
+SIZES = [0, 1, 3, 255, 256, 4095, 4096, 4097, 8193, 65536, 65549, 200_003]
+ITEMSIZES = [1, 2, 4, 8]
+
+
+def _payload(n, kind, seed=0):
+    """Payload families spanning the escape decision space."""
+    rng = np.random.default_rng(seed)
+    if kind == "random":            # incompressible → raw escapes
+        return rng.integers(0, 256, n, dtype=np.uint8)
+    if kind == "zeros":             # maximal runs → RLE wins
+        return np.zeros(n, dtype=np.uint8)
+    if kind == "runs":              # mixed run lengths (crosses the 255 cap)
+        reps = rng.integers(1, 700, size=max(n // 100, 1))
+        vals = rng.integers(0, 256, size=reps.size, dtype=np.uint8)
+        return np.repeat(vals, reps)[:n].copy() if n else \
+            np.zeros(0, dtype=np.uint8)
+    if kind == "skewed":            # few symbols, no long runs → rANS wins
+        return rng.choice(
+            np.arange(8, dtype=np.uint8), size=n,
+            p=np.array([.55, .2, .1, .06, .04, .03, .01, .01]))
+    if kind == "planes":            # realistic: byteplane'd small floats
+        f = (rng.standard_normal(max(n // 4, 1)) * 0.02).astype(np.float32)
+        u8 = codec_mod.contig_u8(f)
+        t = codec_mod.byteplane_forward(u8, 4)
+        return np.resize(t, n).copy() if n else np.zeros(0, dtype=np.uint8)
+    raise AssertionError(kind)
+
+
+KINDS = ["random", "zeros", "runs", "skewed", "planes"]
+
+
+# ---------------------------------------------------------------------------
+# the numpy oracle — round trip, determinism, framing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", SIZES)
+def test_oracle_stream_round_trip(n, kind, codec):
+    u8 = _payload(n, kind, seed=n + len(kind))
+    enc, _ = codec_mod.plane_stream_encode(u8, codec)
+    back = codec_mod.plane_stream_decode(enc, n, codec)
+    np.testing.assert_array_equal(back, u8)
+    # determinism: the stream is the dedup keyspace
+    enc2, _ = codec_mod.plane_stream_encode(u8.copy(), codec)
+    np.testing.assert_array_equal(enc, enc2)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_block_framing_and_escape_semantics(codec):
+    # one incompressible block, one all-zero block, one skewed block:
+    # the per-block choice must be raw / rle / (rle|rans) respectively,
+    # and every block body must be strictly smaller than raw unless raw
+    u8 = np.concatenate([_payload(ENTROPY_BLOCK, "random", seed=1),
+                         _payload(ENTROPY_BLOCK, "zeros"),
+                         _payload(ENTROPY_BLOCK, "skewed", seed=2)])
+    enc, _ = codec_mod.plane_stream_encode(u8, codec)
+    stats = list(codec_mod.entropy_block_stats(enc, len(u8)))
+    assert len(stats) == 3
+    flags = [s[2] for s in stats]
+    assert flags[0] == 0, "incompressible block must escape to raw"
+    assert flags[1] != 0, "all-zero block must compress"
+    if codec == "byteplane-rans":
+        assert 2 in flags, "skewed block should pick rANS"
+    for _off, blen, flag, enc_len in stats:
+        if flag == 0:
+            assert enc_len == blen
+        else:
+            assert enc_len < blen       # strictly-smaller-wins rule
+    # stream is exactly the sum of header+body framings
+    assert len(enc) == sum(3 + s[3] for s in stats)
+
+
+def test_raw_escape_bounds_expansion():
+    # worst case (pure noise): overhead is exactly 3 bytes per block
+    u8 = _payload(1 << 20, "random", seed=9)
+    for codec in CODECS:
+        enc, _ = codec_mod.plane_stream_encode(u8, codec)
+        nb = -(-len(u8) // ENTROPY_BLOCK)
+        assert len(enc) <= len(u8) + 3 * nb
+
+
+def test_rle_run_cap_crosses_255():
+    # a single 4096-byte run must emit ceil(4096/255) pairs, not overflow
+    u8 = np.full(ENTROPY_BLOCK, 7, dtype=np.uint8)
+    enc, _ = codec_mod.plane_stream_encode(u8, "byteplane-rle")
+    (_, _, flag, enc_len), = codec_mod.entropy_block_stats(enc, len(u8))
+    assert flag == 1 and enc_len == 2 * (-(-ENTROPY_BLOCK // 255))
+    np.testing.assert_array_equal(
+        codec_mod.plane_stream_decode(enc, len(u8), "byteplane-rle"), u8)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_decode_rejects_corrupt_framing(codec):
+    u8 = _payload(8192, "skewed", seed=3)
+    enc = codec_mod.plane_stream_encode(u8, codec)[0].copy()
+    enc[0] = 9                          # invalid flag byte
+    with pytest.raises(ValueError):
+        codec_mod.plane_stream_decode(enc, len(u8), codec)
+    with pytest.raises(ValueError):     # truncated stream
+        codec_mod.plane_stream_decode(enc[:-5], len(u8), codec)
+
+
+# ---------------------------------------------------------------------------
+# device backends — byte-identical to the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", [0, 1, 255, 4095, 4096, 4097, 65549])
+def test_jnp_backend_matches_oracle(n, kind, codec):
+    u8 = _payload(n, kind, seed=n * 3 + 1)
+    ref, _ = codec_mod.plane_stream_encode(u8, codec)
+    stream, block_lens = ent.encode_stream(u8, codec, backend="jnp")
+    np.testing.assert_array_equal(stream, ref)
+    # block_lens must be the framing walk of the stream
+    stats = list(codec_mod.entropy_block_stats(ref, n))
+    np.testing.assert_array_equal(block_lens,
+                                  np.array([3 + s[3] for s in stats],
+                                           dtype=np.int64))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("kind", ["random", "runs", "skewed"])
+@pytest.mark.parametrize("n", [0, 4097, 65549])
+def test_pallas_backend_matches_oracle(n, kind, codec):
+    u8 = _payload(n, kind, seed=n + 5)
+    ref, _ = codec_mod.plane_stream_encode(u8, codec)
+    stream, _ = ent.encode_stream(u8, codec, backend="pallas",
+                                  interpret=True)
+    np.testing.assert_array_equal(stream, ref)
+
+
+@pytest.mark.parametrize("k", ITEMSIZES)
+def test_backends_on_byteplaned_itemsizes(k):
+    # the production input: transformed streams of every plane width,
+    # ragged tails included
+    rng = np.random.default_rng(k)
+    raw = rng.integers(0, 256, 13 * ENTROPY_BLOCK + 3, dtype=np.uint8)
+    raw[: 6 * ENTROPY_BLOCK] = (raw[: 6 * ENTROPY_BLOCK] % 5) * 17
+    t = codec_mod.byteplane_forward(raw, k)
+    for codec in CODECS:
+        ref, _ = codec_mod.plane_stream_encode(t, codec)
+        got, _ = ent.encode_stream(t, codec, backend="jnp")
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(
+            codec_mod.plane_stream_decode(ref, t.size, codec), t)
+
+
+# ---------------------------------------------------------------------------
+# chunk-slice identity — the property the save path is built on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_chunk_encodings_are_slices_of_the_stream(codec):
+    # cut the transformed stream on ENTROPY_BLOCK-aligned CDC cuts: the
+    # concatenation of per-chunk encodings must equal the whole-stream
+    # encoding, so the fused device dispatch can encode ONCE and the host
+    # can slice per-chunk objects out of it
+    ck = GearChunker(16384, scan_backend="numpy")
+    t = _payload(300_001, "planes", seed=11)
+    cuts = ck.align_cuts(ck.cut_points(t), len(t), ENTROPY_BLOCK)
+    assert len(cuts) > 3 and cuts[-1] == len(t)
+    whole, _ = codec_mod.plane_stream_encode(t, codec)
+    parts, pos = [], 0
+    for c in cuts:
+        parts.append(codec_mod.plane_encode_chunk(t[pos:c], codec))
+        pos = c
+    assert b"".join(parts) == whole.tobytes()
+    # and the ranged decode reassembles the exact transformed stream
+    enc_lens = [len(p) for p in parts]
+    raw_lens = np.diff([0] + cuts).tolist()
+    back = codec_mod.plane_decode_chunks(whole, enc_lens, raw_lens, codec)
+    np.testing.assert_array_equal(back, t)
+
+
+def test_align_cuts_properties():
+    cuts = [1, 4096, 5000, 12289, 20000]
+    out = GearChunker.align_cuts(cuts, 20000, ENTROPY_BLOCK)
+    assert out == [4096, 8192, 16384, 20000]    # dedup'd, final == n
+    assert all(c % ENTROPY_BLOCK == 0 or c == 20000 for c in out)
+    assert GearChunker.align_cuts([], 0, ENTROPY_BLOCK) == []
+
+
+# ---------------------------------------------------------------------------
+# codec surface — encode()/decode() entries and policy names
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("dtype", ["float32", "float16", "int8"])
+def test_codec_entry_round_trip(dtype, codec):
+    rng = np.random.default_rng(4)
+    arr = rng.integers(-127, 128, 4099, dtype=np.int8) if dtype == "int8" \
+        else (rng.standard_normal(4099) * 0.02).astype(dtype)
+    payload, meta = codec_mod.encode(arr, codec)
+    assert meta == {"bp": arr.dtype.itemsize}
+    back = codec_mod.decode(payload, codec, arr.shape, dtype, meta)
+    np.testing.assert_array_equal(back, arr)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_chunk_encoded_availability_and_classes(codec):
+    assert codec in codec_mod.CODECS
+    assert codec in codec_mod.PRECONDITIONED
+    assert codec in codec_mod.CHUNK_ENCODED
+    assert codec_mod.available(codec)       # no optional deps
+    assert not codec_mod.lossy(codec)
+
+
+def test_compresses_real_float_payloads():
+    # the whole point: byteplane'd small-magnitude floats shrink without
+    # zstd — the sign/exponent plane concentrates on a few symbols, which
+    # rANS exploits; RLE needs literal runs, so it must only stay within
+    # the 3-bytes-per-block escape overhead on this payload
+    rng = np.random.default_rng(12)
+    arr = (rng.standard_normal(1 << 16) * 0.02).astype(np.float32)
+    rans, _ = codec_mod.encode(arr, "byteplane-rans")
+    assert len(rans) < arr.nbytes * 0.90
+    rle, _ = codec_mod.encode(arr, "byteplane-rle")
+    nb = -(-arr.nbytes // ENTROPY_BLOCK)
+    assert len(rle) <= arr.nbytes + 3 * nb

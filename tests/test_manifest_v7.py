@@ -1,0 +1,381 @@
+"""Manifest v7: chunk-encoded codec records (byteplane-rle / -rans)
+carry per-chunk (raw_len, enc_len) pairs — ``chunk_lens`` stay PHYSICAL
+(encoded bytes: offsets, digests and the crc all describe what is read
+from disk) and ``chunk_raw_lens`` drive the plane entropy decode after
+placement.
+
+Covers: well-formed v7 records with matching length lists; device /
+host-entropy / serial writers producing byte-identical manifests; serial
+purity (no device entropy stage on the PR-1 engine); the direct-read
+restore path with its crc-gated fallback; the crash point between the
+fused dispatch and chunk submission; mixed v5/v6/v7 histories restoring
+bit-exact with GC leaking nothing; and future-format rejection."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_ckpt_policy
+from repro.core import atomic, cas, cdc_scan
+from repro.core import codec as codec_mod
+from repro.core.atomic import CrashInjector, CrashPoint
+from repro.core.cas import ChunkStore
+from repro.core.cdc_scan import GearScanner
+from repro.core.checkpoint import FORMAT_VERSION, CheckpointManager
+from repro.core.errors import AbortedError, CkptError
+from repro.core.storage import Tier, TieredStore
+from repro.kernels.ckpt_codec import entropy as ent
+
+
+def _store(tmp_path, name="fast"):
+    return TieredStore(Tier(name, tmp_path / name))
+
+
+def _state(seed=0, n=400_000):
+    # small-magnitude floats: the sign/exponent plane concentrates on a
+    # few symbols, so the entropy stage actually bites
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(
+        (rng.standard_normal(n) * 0.02).astype(np.float32))},
+        "opt": {"m": jnp.asarray(rng.integers(0, 50, 30_000,
+                                              dtype=np.int32))}}
+
+
+def _abstract(state):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+
+
+def _manifest_path(root, step):
+    return root / f"step_{step:08d}" / atomic.MANIFEST
+
+
+def _writer(tmp_path, sub="fast", **kw):
+    kw.setdefault("codec", "byteplane-rans")
+    kw.setdefault("n_writers", 2)
+    kw.setdefault("mode", "incremental")
+    kw.setdefault("chunking", "cdc")
+    kw.setdefault("chunk_size", 65536)
+    kw.setdefault("io_threads", 4)
+    return CheckpointManager(_store(tmp_path, sub),
+                             policy=make_ckpt_policy(**kw))
+
+
+def _restores(mgr, step, expect):
+    restored, _ = mgr.restore(_abstract(expect), step=step)
+    for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _records(man, *, raw_fields=True):
+    out = {}
+    for leaf, spec in man["leaves"].items():
+        for s in spec["shards"]:
+            key = (leaf, tuple(s["start"]))
+            out[key] = (tuple(s["chunks"]), s["crc32"], s["payload_bytes"],
+                        tuple(s.get("chunk_lens") or ()),
+                        tuple(s.get("chunk_raw_lens") or ())
+                        if raw_fields else None,
+                        s.get("raw_payload_bytes") if raw_fields else None,
+                        s["meta"], s["codec"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the v7 record shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunking", ["cdc", "fixed"])
+@pytest.mark.parametrize("codec", ["byteplane-rle", "byteplane-rans"])
+def test_v7_records_carry_raw_and_encoded_lengths(tmp_path, codec,
+                                                  chunking):
+    mgr = _writer(tmp_path, codec=codec, chunking=chunking)
+    state = _state()
+    mgr.save(state, 1)
+    m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
+    assert m["format"] == FORMAT_VERSION == 7
+    seen = 0
+    for spec in m["leaves"].values():
+        for s in spec["shards"]:
+            if s["codec"] not in codec_mod.CHUNK_ENCODED:
+                continue
+            seen += 1
+            assert len(s["chunk_raw_lens"]) == len(s["chunk_lens"]) \
+                == len(s["chunks"])
+            # chunk_lens are PHYSICAL: they sum to the stored payload
+            assert sum(s["chunk_lens"]) == s["payload_bytes"]
+            assert sum(s["chunk_raw_lens"]) == s["raw_payload_bytes"]
+            assert all(n > 0 for n in s["chunk_lens"])
+            assert all(n > 0 for n in s["chunk_raw_lens"])
+            # every interior chunk is plane-block aligned in RAW space
+            raw = np.cumsum(s["chunk_raw_lens"])
+            assert all(int(c) % codec_mod.ENTROPY_BLOCK == 0
+                       for c in raw[:-1])
+    assert seen, "no chunk-encoded shard records written"
+    # the entropy stage actually shrank the f32 leaf
+    w = m["leaves"]["params/w"]["shards"][0]
+    if codec == "byteplane-rans":
+        assert w["payload_bytes"] < w["raw_payload_bytes"]
+    _restores(mgr, 1, state)
+    mgr.close()
+
+
+def test_save_report_counts_encoded_bytes(tmp_path):
+    mgr = _writer(tmp_path)
+    rep = mgr.save(_state(), 1)
+    assert rep["payload_bytes"] < rep["bytes"]     # entropy stage bites
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# engine identity and serial purity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", ["byteplane-rle", "byteplane-rans"])
+def test_device_host_serial_write_identical_v7_manifests(tmp_path, codec):
+    st = _state()
+    mans = {}
+    for name, flat in [
+        ("dev", dict(io_threads=4, device_entropy=True)),
+        ("host", dict(io_threads=4, device_entropy=False)),
+        ("serial", dict(io_threads=1)),
+    ]:
+        m = _writer(tmp_path, name, codec=codec, **flat)
+        m.save(st, 1)
+        mans[name] = _records(m.load_manifest(1))
+        _restores(m, 1, st)
+        m.close()
+    assert mans["dev"] == mans["host"], \
+        "device entropy coding changed the stored bytes"
+    assert mans["dev"] == mans["serial"], \
+        "serial engine drifted from the pipelined encoded-chunk grid"
+
+
+def test_serial_engine_never_touches_device_entropy(tmp_path, monkeypatch):
+    # PR-1 purity: io_threads=1 must encode through the host oracle —
+    # no fused dispatch, no device entropy kernel
+    def boom(*a, **kw):
+        raise AssertionError("device entropy stage ran on the serial "
+                             "engine")
+    monkeypatch.setattr(GearScanner, "scan_transform_encode_async", boom)
+    monkeypatch.setattr(cdc_scan, "transform_async", boom)
+    monkeypatch.setattr(ent, "encode_stream", boom)
+    mgr = _writer(tmp_path, io_threads=1)
+    st = _state()
+    mgr.save(st, 1)
+    _restores(mgr, 1, st)
+    mgr.close()
+
+
+def test_fused_entropy_dispatch_actually_engages(tmp_path, monkeypatch):
+    # the pipelined engine with CDC + a chunk-encoded codec must route
+    # through the fused scan+transform+entropy dispatch
+    calls = []
+    orig = GearScanner.scan_transform_encode_async
+
+    def spy(self, payload, itemsize, entropy_codec):
+        calls.append(len(payload))
+        return orig(self, payload, itemsize, entropy_codec)
+    monkeypatch.setattr(GearScanner, "scan_transform_encode_async", spy)
+    mgr = _writer(tmp_path, io_threads=4, device_entropy=True)
+    rng = np.random.default_rng(0)
+    st = {"params": {"w": jnp.asarray(
+        (rng.standard_normal(900_000) * 0.02).astype(np.float32))}}
+    mgr.save(st, 1)
+    mgr.close()
+    assert calls and max(calls) >= cdc_scan.MIN_ACCEL_BYTES, \
+        "fused scan_transform_encode_async never invoked"
+
+
+def test_adoption_keeps_readers_device_entropy(tmp_path):
+    st = _state()
+    w = _writer(tmp_path, "adopt", device_entropy=True)
+    w.save(st, 1)
+    w.close()
+    r = CheckpointManager(
+        _store(tmp_path, "adopt"),
+        policy=make_ckpt_policy(mode="incremental", chunking="cdc",
+                                chunk_size=65536, codec="raw",
+                                io_threads=4, device_entropy=False))
+    _restores(r, 1, st)
+    # codec NAME adopted from the writer; the machine-local perf knob is
+    # NOT — the reader explicitly pinned the host entropy path
+    assert r.codec == "byteplane-rans"
+    assert r.policy.codec.device_entropy is False
+    assert r.device_entropy is False
+    r.close()
+
+
+# ---------------------------------------------------------------------------
+# restore: direct placement of ENCODED chunks + decode after the read
+# ---------------------------------------------------------------------------
+
+def test_v7_restore_uses_direct_placement_of_encoded_chunks(tmp_path,
+                                                            monkeypatch):
+    mgr = _writer(tmp_path)
+    state = _state()
+    mgr.save(state, 1)
+
+    calls = {"direct": 0}
+    real_direct = ChunkStore.read_payload_direct
+
+    def counting_direct(self, *a, **kw):
+        calls["direct"] += 1
+        return real_direct(self, *a, **kw)
+
+    def forbidden_join(self, *a, **kw):
+        raise AssertionError("join-path read_payload used for a v7 "
+                             "record on the pipelined engine")
+
+    monkeypatch.setattr(ChunkStore, "read_payload_direct", counting_direct)
+    monkeypatch.setattr(ChunkStore, "read_payload", forbidden_join)
+    _restores(mgr, 1, state)
+    assert calls["direct"] > 0
+    mgr.close()
+
+
+def test_v7_direct_placement_damage_falls_back_and_heals(tmp_path):
+    """A corrupted primary object fails the digest gate; the read drops
+    back to the verified path and heals through the buddy replica — then
+    the plane decode still reproduces the exact raw bytes."""
+    mgr = _writer(tmp_path, replicas=2)
+    state = _state()
+    mgr.save(state, 1)
+    m = json.loads(_manifest_path(mgr.store.root, 1).read_text())
+    rec = next(s for spec in m["leaves"].values() for s in spec["shards"]
+               if s["codec"] in codec_mod.CHUNK_ENCODED)
+    obj = mgr.store.fast.root / cas.object_rel(rec["chunks"][0])
+    obj.write_bytes(b"\x00" * obj.stat().st_size)      # torn primary
+    _restores(mgr, 1, state)
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# crash matrix extension: die between fused dispatch and chunk submission
+# ---------------------------------------------------------------------------
+
+def test_crash_between_fused_dispatch_and_chunk_submission(tmp_path):
+    states = {1: _state(1), 2: _state(2), 3: _state(3)}
+    mk = lambda: _writer(tmp_path, retain=4, max_retries=0)  # noqa: E731
+    mk().save(states[1], 1)
+    with pytest.raises((CrashPoint, AbortedError)):
+        mk().save(states[2], 2,
+                  crash=CrashInjector("rank0_after_fused_dispatch"))
+    mgr = mk()
+    mgr.gc()                      # staging litter + mark-and-sweep
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    assert mgr.latest_step() == 1
+    _restores(mgr, 1, states[1])
+    mgr.save(states[3], 3)        # recovered store commits normally
+    _restores(mgr, 3, states[3])
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-version history
+# ---------------------------------------------------------------------------
+
+def _downgrade(root, step, fmt):
+    """Rewrite a committed manifest as its older-writer equivalent (only
+    valid for steps whose records carry no v7-only fields)."""
+    mpath = _manifest_path(root, step)
+    m = json.loads(mpath.read_text())
+    assert m["format"] == FORMAT_VERSION
+    for rec in m["leaves"].values():
+        for s in rec["shards"]:
+            assert "chunk_raw_lens" not in s, \
+                "cannot downgrade a chunk-encoded record"
+    m["format"] = fmt
+    if fmt < 6:
+        m.pop("policy", None)
+    if fmt < 5:
+        m.pop("chunk_bounds", None)
+        for rec in m["leaves"].values():
+            for s in rec["shards"]:
+                s.pop("chunk_lens", None)
+    mpath.write_text(json.dumps(m))
+
+
+def test_mixed_v5_v6_v7_history_restores_and_gc_leaks_nothing(tmp_path):
+    """A v7-rans step written over a v6-byteplane step over a v5-raw
+    step: every step restores bit-exact, and mark-and-sweep over the
+    mixed history reclaims orphans without touching live chunks."""
+    states = {1: _state(1), 2: _state(2), 3: _state(3)}
+    w1 = _writer(tmp_path, codec="raw", retain=8)
+    w1.save(states[1], 1)
+    w1.close()
+    _downgrade(_writer(tmp_path, retain=8).store.root, 1, 5)
+    w2 = _writer(tmp_path, codec="byteplane", retain=8)
+    w2.save(states[2], 2)
+    w2.close()
+    _downgrade(_writer(tmp_path, retain=8).store.root, 2, 6)
+    mgr = _writer(tmp_path, codec="byteplane-rans", retain=8)
+    mgr.save(states[3], 3)
+    # an unreferenced orphan object for the sweep to prove itself on
+    orphan = mgr.store.fast.root / cas.object_rel("ff" * 16)
+    orphan.parent.mkdir(parents=True, exist_ok=True)
+    orphan.write_bytes(b"junk")
+    mgr.gc()
+    assert not orphan.exists()
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    for step, fmt in ((1, 5), (2, 6), (3, 7)):
+        assert mgr.load_manifest(step)["format"] == fmt
+        _restores(mgr, step, states[step])
+    mgr.close()
+
+
+@pytest.mark.skipif(not codec_mod.HAVE_ZSTD,
+                    reason="zstandard not installed")
+def test_mixed_zstd_history_restores_bit_exact(tmp_path):
+    """The ISSUE's exact ladder where zstd is available: v7 rans over
+    v6 byteplane-zstd over v5 zstd."""
+    states = {1: _state(1), 2: _state(2), 3: _state(3)}
+    w1 = _writer(tmp_path, codec="zstd", retain=8)
+    w1.save(states[1], 1)
+    w1.close()
+    _downgrade(_writer(tmp_path, retain=8).store.root, 1, 5)
+    w2 = _writer(tmp_path, codec="byteplane-zstd", retain=8)
+    w2.save(states[2], 2)
+    w2.close()
+    _downgrade(_writer(tmp_path, retain=8).store.root, 2, 6)
+    mgr = _writer(tmp_path, codec="byteplane-rans", retain=8)
+    mgr.save(states[3], 3)
+    mgr.gc()
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    for step in (1, 2, 3):
+        _restores(mgr, step, states[step])
+    mgr.close()
+
+
+def test_inspector_reports_entropy_planes(tmp_path):
+    """--verify on a v7 step walks the encoded block framing and reports
+    per-plane raw/encoded bytes + escape counts: mantissa planes of f32
+    noise escape to raw, the sign/exponent plane codes with rANS."""
+    from repro.launch.inspect_ckpt import inspect
+    mgr = _writer(tmp_path)
+    mgr.save(_state(), 1)
+    mgr.close()
+    rep = inspect(tmp_path / "fast", verify=True, out=lambda *a: None)
+    assert rep["ok"], rep["problems"]
+    planes = rep["entropy_planes"]["byteplane-rans"]
+    assert set(planes) >= {"0", "1", "2", "3"}
+    assert any(p["rans_blocks"] for p in planes.values())
+    assert any(p["raw_escape_blocks"] for p in planes.values())
+    for p in planes.values():
+        assert p["blocks"] == p["raw_escape_blocks"] + p["rle_blocks"] \
+            + p["rans_blocks"]
+        assert 0 < p["encoded_bytes"] <= p["raw_bytes"] + 3 * p["blocks"]
+
+
+def test_future_manifest_format_rejected(tmp_path):
+    mgr = _writer(tmp_path)
+    mgr.save(_state(), 1)
+    mpath = _manifest_path(mgr.store.root, 1)
+    m = json.loads(mpath.read_text())
+    m["format"] = FORMAT_VERSION + 1
+    mpath.write_text(json.dumps(m))
+    with pytest.raises(CkptError):
+        _writer(tmp_path).load_manifest(1)
+    mgr.close()
