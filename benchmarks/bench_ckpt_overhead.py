@@ -519,6 +519,112 @@ def chunk_scan(tiny=False, reps=7):
     return {"backend": backend, "speedup": speedup, "per_size": per_size}
 
 
+def faults_bench(io_threads=8, tiny=False):
+    """Resilience-layer overhead under a transient-fault storm
+    (``--mode faults``): the same save+restore cadence run clean and
+    under a recurring schedule of injected EIO / ENOSPC bursts / latency
+    spikes on the fast tier, all inside the typed retry budget.
+
+    ``fault_recovery_frac = t_clean / t_faulted`` — 1.0 means the storm
+    cost nothing; the committed floor guards against the retry/backoff
+    plumbing itself becoming the bottleneck (a recovery collapse shows
+    up as the faulted arm taking multiples of the clean arm). A final
+    fast-tier-read-only round pins the degraded-failover commit path."""
+    import shutil
+
+    from repro.core.faults import FaultPlane, wrap_store
+    from repro.core.storage import Tier, TieredStore
+
+    agg = (8 << 20) if tiny else (64 << 20)
+    rounds = 3 if tiny else 5
+    states = {s: synth_state(agg, shards=8, seed=s)
+              for s in range(1, rounds + 1)}
+
+    def _arm(tag, plane):
+        base = Path(tempfile.mkdtemp(prefix=f"repro-bench-faults-{tag}-"))
+        store = TieredStore(Tier("fast", base / "fast"),
+                            Tier("slow", base / "slow"))
+        if plane is not None:
+            store = wrap_store(store, plane)
+        mgr = CheckpointManager(store, policy=bench_policy(
+            n_writers=4, codec="raw", retain=2, mode="incremental",
+            chunk_size=1 << 18, io_threads=io_threads,
+            io_retries=2, io_backoff_ms=2.0, io_deadline_s=30.0))
+        t0 = time.monotonic()
+        for s in range(1, rounds + 1):
+            if plane is not None:
+                # per-round storm: one hard EIO, an ENOSPC burst the
+                # retry budget just covers, and a latency spike
+                plane.add(op="write", kind="eio", tier="fast",
+                          match=".obj")
+                plane.add(op="write", kind="enospc", tier="fast",
+                          match=".obj", nth=5, count=2)
+                plane.add(op="write", kind="latency", tier="fast",
+                          match=".obj", nth=9, count=4, latency_s=0.002)
+            mgr.save(states[s], s)
+            store.wait_drained()
+            if plane is not None:
+                plane.add(op="read", kind="eio", tier="fast",
+                          match=".obj")
+                plane.add(op="read", kind="latency", tier="fast",
+                          match=".obj", nth=3, count=4, latency_s=0.002)
+            restored, _ = mgr.restore(abstract(states[s]), step=s)
+        dt = time.monotonic() - t0
+        # the storm must never cost a byte
+        for name, arr in states[rounds]["params"].items():
+            np.testing.assert_array_equal(
+                np.asarray(arr), np.asarray(restored["params"][name]))
+        fired = 0 if plane is None else len(plane.fired())
+        mgr.close()
+        shutil.rmtree(base, ignore_errors=True)
+        return dt, fired
+
+    t_clean, _ = _arm("clean", None)
+    t_faulted, fired = _arm("storm", FaultPlane(seed=7))
+    frac = t_clean / max(t_faulted, 1e-9)
+    emit("faults_storm", t_faulted * 1e6,
+         f"clean_s={t_clean:.3f};faulted_s={t_faulted:.3f};"
+         f"fired={fired};recovery_frac={frac:.3f}")
+
+    # degraded failover: fast tier read-only mid-round → the round must
+    # still COMMIT (marked), with the objects landing on the slow tier
+    plane = FaultPlane(seed=7)
+    base = Path(tempfile.mkdtemp(prefix="repro-bench-faults-degraded-"))
+    store = wrap_store(TieredStore(Tier("fast", base / "fast"),
+                                   Tier("slow", base / "slow")), plane)
+    mgr = CheckpointManager(store, policy=bench_policy(
+        n_writers=4, codec="raw", retain=1, mode="incremental",
+        chunk_size=1 << 18, io_threads=io_threads,
+        io_retries=1, io_backoff_ms=1.0, io_deadline_s=30.0))
+    plane.add(op="write", kind="erofs", tier="fast", match=".obj",
+              count=-1)
+    t0 = time.monotonic()
+    rep = mgr.save(states[1], 1)
+    t_degraded = time.monotonic() - t0
+    degraded_ok = bool(rep.get("degraded")) and \
+        bool(mgr.load_manifest(1).get("degraded"))
+    plane.clear()
+    restored, _ = mgr.restore(abstract(states[1]), step=1)
+    for name, arr in states[1]["params"].items():
+        np.testing.assert_array_equal(
+            np.asarray(arr), np.asarray(restored["params"][name]))
+    mgr.close()
+    shutil.rmtree(base, ignore_errors=True)
+    emit("faults_degraded", t_degraded * 1e6,
+         f"degraded_save_s={t_degraded:.3f};committed={degraded_ok}")
+
+    bench_record("faults", {
+        "tiny": tiny, "io_threads": io_threads, "rounds": rounds,
+        "agg_mib": agg >> 20, "faults_fired": fired,
+        "t_clean_s": round(t_clean, 3),
+        "t_faulted_s": round(t_faulted, 3),
+        "fault_recovery_frac": round(frac, 3),
+        "t_degraded_save_s": round(t_degraded, 3),
+        "degraded_commit": int(degraded_ok),
+    })
+    return {"fault_recovery_frac": frac, "degraded_commit": degraded_ok}
+
+
 # ---------------------------------------------------------------------------
 # CDC churn: shifted payloads, fixed vs content-defined at equal avg size
 # ---------------------------------------------------------------------------
@@ -571,7 +677,7 @@ def main(argv=None):
     ap.add_argument("--mode", default="fig2",
                     choices=["fig2", "full", "incremental", "both",
                              "io-sweep", "cdc-churn", "overlap",
-                             "chunk-scan"])
+                             "chunk-scan", "faults"])
     ap.add_argument("--chunking", default="fixed",
                     choices=["fixed", "cdc"])
     ap.add_argument("--io-threads", type=int, default=8)
@@ -591,6 +697,8 @@ def main(argv=None):
         cdc_churn(tiny=args.tiny)
     elif args.mode == "chunk-scan":
         chunk_scan(tiny=args.tiny)
+    elif args.mode == "faults":
+        faults_bench(io_threads=args.io_threads, tiny=args.tiny)
     elif args.mode == "overlap":
         overlap_bench(io_threads=args.io_threads, tiny=args.tiny)
         overlap_queue_sweep(io_threads=args.io_threads, tiny=args.tiny)

@@ -15,9 +15,12 @@ from .drain import DrainCounters, quiesce_device_state
 from .errors import (AbortedError, CASError, CkptError, CodecUnavailableError,
                      CorruptShardError, MissingShardError, NamespaceError,
                      NoCheckpointError, RegistryMismatchError, SpaceError)
+from .faults import FaultPlane, FaultSpec, FaultyTier, wrap_store
 from .policy import (CheckpointPolicy, ChunkingPolicy, CodecPolicy,
                      DurabilityPolicy, PipelinePolicy, RestorePolicy)
 from .preempt import PreemptionGuard, PreemptQueue
+from .resilience import (CircuitBreaker, Deadline, RetryPolicy, TierHealth,
+                         is_tier_full, is_transient, retry_io)
 from .restore_path import (ReadCache, RestorePlan, RestoreSession,
                            RestoreStream)
 from .save_path import PersistStage, SavePlan, SaveSession
@@ -29,16 +32,19 @@ from .storage import RemoteTier, Tier, TieredStore, default_store
 __all__ = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
     "CheckpointPolicy", "ChunkIOExecutor", "ChunkStore", "ChunkingPolicy",
-    "CkptError", "CodecPolicy", "CodecUnavailableError",
-    "CorruptShardError", "CrashInjector", "CrashPoint",
-    "DrainCounters", "DurabilityPolicy", "GearChunker", "GearScanner",
+    "CircuitBreaker", "CkptError", "CodecPolicy", "CodecUnavailableError",
+    "CorruptShardError", "CrashInjector", "CrashPoint", "Deadline",
+    "DrainCounters", "DurabilityPolicy", "FaultPlane", "FaultSpec",
+    "FaultyTier", "GearChunker", "GearScanner",
     "MissingShardError", "NamespaceError",
     "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
     "PreemptionGuard",
     "ReadCache", "RegistryMismatchError", "RemoteTier", "RestorePlan",
-    "RestorePolicy", "RestoreSession", "RestoreStream",
-    "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
+    "RestorePolicy", "RestoreSession", "RestoreStream", "RetryPolicy",
+    "SavePlan", "SaveSession", "SpaceError", "Tier", "TierHealth",
+    "TieredStore",
     "abstract_train_state", "config_digest", "default_store",
-    "init_train_state", "leaf_paths", "lower_half_descriptor",
-    "quiesce_device_state", "state_shardings",
+    "init_train_state", "is_tier_full", "is_transient", "leaf_paths",
+    "lower_half_descriptor",
+    "quiesce_device_state", "retry_io", "state_shardings", "wrap_store",
 ]

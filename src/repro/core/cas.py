@@ -45,10 +45,10 @@ import threading
 import zlib
 from collections import Counter
 
-from . import atomic
+from . import atomic, resilience
 from .atomic import NO_CRASH, CrashInjector
 from .chunk_exec import DEFAULT_IO_THREADS, ChunkIOExecutor, cpu_cap
-from .errors import CASError, CorruptShardError, MissingShardError
+from .errors import CASError, CorruptShardError, MissingShardError, warn
 from .namespace import REPLICA_SUFFIX
 from .storage import TieredStore
 
@@ -58,6 +58,12 @@ CAS_DIR = "_CAS"
 OBJECTS_DIR = f"{CAS_DIR}/objects"
 REFS_FILE = f"{CAS_DIR}/refs.json"
 OBJ_SUFFIX = ".obj"
+# corrupt copies are RENAMED here by the scrubber (same tier, single
+# atomic rename) — named <digest>.r<replica>.<nonce>.quar so the origin
+# slot is recoverable and an interrupted scrub can converge on re-run
+QUARANTINE_DIR = f"{CAS_DIR}/quarantine"
+HEALTH_FILE = f"{CAS_DIR}/health.json"        # tier health snapshot
+SCRUB_FILE = f"{CAS_DIR}/last_scrub.json"     # last scrub summary
 
 
 def chunk_digest(data: bytes) -> str:
@@ -101,7 +107,8 @@ class ChunkStore:
 
     def __init__(self, store: TieredStore, *,
                  chunk_size: int = DEFAULT_CHUNK_SIZE, replicas: int = 1,
-                 io_threads: int = DEFAULT_IO_THREADS):
+                 io_threads: int = DEFAULT_IO_THREADS,
+                 retry: resilience.RetryPolicy | None = None):
         if chunk_size <= 0:
             raise ValueError("chunk_size must be positive")
         self.store = store
@@ -118,21 +125,55 @@ class ChunkStore:
         # PR-1 path (per-chunk dir fsync, digest-verified gets) — the
         # benchmark baseline.
         self._exec = ChunkIOExecutor(io_threads)
+        # retry=None ⇒ every IO is single-attempt fail-fast (the serial
+        # engine NEVER constructs a policy — PR-1 purity); the pipelined
+        # engine gets the typed budget from DurabilityPolicy.io_*
+        self.retry = None if self._exec.serial else retry
+        self._deadline: resilience.Deadline | None = None
+        # objects written past the fast tier (fail-over under ENOSPC /
+        # EROFS) this process — the manifest's `degraded` marker source
+        self.degraded_writes = 0
 
     @classmethod
     def from_policy(cls, store: TieredStore, policy) -> "ChunkStore":
         """The chunk store a ``CheckpointPolicy`` describes: chunk size
         from the chunking section, buddy replicas from durability, pool
-        width from the pipeline section."""
+        width from the pipeline section, retry budget from durability's
+        ``io_*`` trio (pipelined engine only — the ctor drops it for
+        ``io_threads=1``)."""
         return cls(store, chunk_size=int(policy.chunking.chunk_size),
                    replicas=policy.durability.replicas,
-                   io_threads=policy.pipeline.io_threads)
+                   io_threads=policy.pipeline.io_threads,
+                   retry=resilience.RetryPolicy.from_durability(
+                       policy.durability))
+
+    def begin_io_window(self) -> None:
+        """Open one round's shared IO deadline: every retry loop of the
+        round (writers, drain, restore reads) draws sleep budget from the
+        SAME clock, so the aggregate stall a sick tier can cause is
+        bounded by ``io_deadline_s``, not retries × fault sites."""
+        if self.retry is not None:
+            self._deadline = resilience.Deadline(self.retry.deadline_s)
+
+    def _retry(self, fn, tier, op: str):
+        """Bounded retry against one tier, drawing from the round window;
+        single-attempt when no policy is set (serial engine)."""
+        if self.retry is None:
+            return fn()
+        return resilience.retry_io(
+            fn, self.retry, deadline=self._deadline,
+            health=self.store.health_for(tier), op=op)
 
     # ------------------------------------------------------------------
     # objects
     # ------------------------------------------------------------------
     def exists(self, digest: str) -> bool:
-        return self.store.locate(object_rel(digest)) is not None or \
+        # only probe the .r1 path when buddy redundancy is configured —
+        # with replicas=1 that stat can never hit (writes only ever
+        # produce it under replicas=2) and is pure per-chunk overhead
+        if self.store.locate(object_rel(digest)) is not None:
+            return True
+        return self.replicas > 1 and \
             self.store.locate(object_rel(digest, 1)) is not None
 
     def put(self, digest: str, data: bytes,
@@ -168,7 +209,8 @@ class ChunkStore:
         written = 0
         try:
             fast = self.store.fast
-            for rel in to_write:
+
+            def _write_fast(rel):
                 # deliberately NOT Tier.write_file(atomic=True): the crash
                 # matrix needs an injection point between tmp write and
                 # rename, and the object fan-out dir wants an explicit
@@ -177,17 +219,70 @@ class ChunkStore:
                 fast.write_file(tmp, data)
                 crash.maybe("cas_after_obj_tmp")
                 os.rename(fast.root / tmp, fast.root / rel)
+
+            touched_fast = False
+            for rel in to_write:
+                try:
+                    self._retry(lambda: _write_fast(rel), fast,
+                                "obj_write")
+                    touched_fast = True
+                except OSError as e:
+                    # the fast tier condemned itself for this round (full /
+                    # quota / read-only, retries exhausted): fail over down
+                    # the hierarchy instead of aborting the save. Only the
+                    # pipelined engine (retry set) degrades — serial stays
+                    # fail-fast (PR-1 purity).
+                    if self.retry is None or not resilience.is_tier_full(e):
+                        raise
+                    self._put_degraded(rel, data, e)
                 written += len(data)
-            parent = (fast.root / rels[0]).parent
-            if dirs is None:
-                atomic.fsync_dir(parent)
-            else:
-                with dirs_lock:
-                    dirs.add(parent)
+            if touched_fast:
+                parent = (fast.root / rels[0]).parent
+                if dirs is None:
+                    atomic.fsync_dir(parent)
+                else:
+                    with dirs_lock:
+                        dirs.add(parent)
         finally:
             with self._lock:
                 self._inflight.discard(digest)
         return written
+
+    def _put_degraded(self, rel: str, data: bytes, cause: OSError):
+        """Degraded-mode object write: the fast tier is full/read-only, so
+        land the object on the next healthy tier down (slow → remote) with
+        an atomic write + immediate parent-dir fsync (the rare path does
+        not batch). The round then commits with a `degraded` manifest
+        marker instead of aborting; the chunk reads fine from the lower
+        tier and is re-promoted to the fast tier by the next round that
+        references it (``_put_one``'s dedup check is fast-tier-only)."""
+        fallbacks = [t for t in (self.store.slow, self.store.remote)
+                     if t is not None]
+        # deprioritize (never skip) tiers whose breaker is open
+        fallbacks.sort(key=lambda t:
+                       0 if self.store.health_for(t).allow() else 1)
+        if not fallbacks:
+            raise cause
+        last = cause
+        for tier in fallbacks:
+            try:
+                self._retry(
+                    lambda: tier.write_file(rel, data, atomic=True),
+                    tier, "obj_write")
+                atomic.fsync_dir((tier.root / rel).parent)
+            except OSError as e:
+                last = e
+                continue
+            with self._lock:
+                self.degraded_writes += 1
+                first = self.degraded_writes == 1
+            self.store.health_for(tier).note("degraded_writes")
+            if first:
+                warn("CKPT_W_DEGRADED",
+                     "fast tier rejected object writes; failing over",
+                     tier=tier.name, cause=f"{cause}")
+            return
+        raise last
 
     def store_chunk(self, digest: str, data, crash: CrashInjector = NO_CRASH,
                     dirs: set | None = None, dirs_lock=None) -> int:
@@ -210,32 +305,63 @@ class ChunkStore:
         unverified path also probes the fast-tier primary with a direct
         open instead of a stat-then-read (one metadata round-trip per
         chunk on a networked filesystem); any miss falls back to the full
-        replica × tier resolution loop."""
+        replica × tier resolution loop.
+
+        Only the CONFIGURED replica slots are probed on the hot path —
+        with ``replicas=1`` the old ``range(max(replicas, 2))`` loop paid
+        a dead ``.r1`` stat per chunk per tier for paths that can never
+        exist. Extra slots left behind by a 2-replica history are still
+        honoured, but only as a last resort once every configured slot
+        has failed."""
         if not verify:
             try:
                 return self.store.fast.read_file(object_rel(digest))
             except OSError:
                 pass               # evicted/missing primary: resolve below
-        last_err = None
-        for replica in range(max(self.replicas, 2)):
-            rel = object_rel(digest, replica)
-            for tier in self.store.tiers():
-                if not (tier.root / rel).exists():
-                    continue
-                try:
-                    data = tier.read_file(rel)
-                except OSError as e:
-                    last_err = e
-                    continue
-                if not verify or chunk_digest(data) == digest:
-                    return data
-                last_err = CorruptShardError(
-                    "chunk content does not match its digest",
-                    digest=digest, tier=tier.name, replica=replica)
+        data, last_err = self._resolve(digest, range(self.replicas), verify)
+        if data is not None:
+            return data
+        if self.replicas < 2:
+            # last-ditch: a .r1 copy written under an earlier replicas=2
+            # config can still save a read whose primary is damaged
+            data, extra_err = self._resolve(
+                digest, range(self.replicas, 2), verify)
+            if data is not None:
+                return data
+            last_err = last_err or extra_err
         if last_err is not None:
             raise last_err
         raise MissingShardError("chunk object missing on all tiers",
                                 digest=digest)
+
+    def _resolve(self, digest: str, replicas, verify: bool):
+        """Probe the given replica slots across the tier hierarchy.
+        Returns ``(data, None)`` on success, ``(None, last_err)`` when
+        every copy was missing/unreadable/corrupt. With a retry policy
+        set, each copy read gets its bounded retry, and tiers whose
+        breaker is open are deprioritized (tried last, never skipped)."""
+        tiers = self.store.tiers()
+        if self.retry is not None:
+            tiers = sorted(tiers, key=lambda t:
+                           0 if self.store.health_for(t).allow() else 1)
+        last_err = None
+        for replica in replicas:
+            rel = object_rel(digest, replica)
+            for tier in tiers:
+                if not (tier.root / rel).exists():
+                    continue
+                try:
+                    data = self._retry(
+                        lambda: tier.read_file(rel), tier, "obj_read")
+                except OSError as e:
+                    last_err = e
+                    continue
+                if not verify or chunk_digest(data) == digest:
+                    return data, None
+                last_err = CorruptShardError(
+                    "chunk content does not match its digest",
+                    digest=digest, tier=tier.name, replica=replica)
+        return None, last_err
 
     def put_payload(self, payload,
                     crash: CrashInjector = NO_CRASH,
@@ -566,6 +692,152 @@ class ChunkStore:
             return p.is_file() and chunk_digest(p.read_bytes()) == digest
         except OSError:
             return False
+
+    # ------------------------------------------------------------------
+    # scrub (bit-rot detection + self-healing)
+    # ------------------------------------------------------------------
+    def quarantine_entries(self) -> list:
+        """Every quarantined copy across the hierarchy:
+        ``(tier_name, rel, digest, replica, size)``. Filenames are
+        ``<digest>.r<replica>.<nonce>.quar`` — digest and origin slot are
+        recoverable from the name alone."""
+        out = []
+        for tier in self.store.tiers():
+            qdir = tier.root / QUARANTINE_DIR
+            if not qdir.exists():
+                continue
+            for p in sorted(qdir.glob("*.quar")):
+                parts = p.name.split(".")
+                if len(parts) < 4 or not parts[1].startswith("r"):
+                    continue
+                try:
+                    replica = int(parts[1][1:])
+                except ValueError:
+                    continue
+                out.append((tier.name, str(p.relative_to(tier.root)),
+                            parts[0], replica, p.stat().st_size))
+        return out
+
+    def _object_copies(self, digest: str) -> list:
+        """All on-disk copies of one digest: ``(tier, replica, rel)`` for
+        every configured-or-legacy slot that exists, across every tier."""
+        copies = []
+        for replica in range(2):        # legacy .r1 copies heal too
+            rel = object_rel(digest, replica)
+            for tier in self.store.tiers():
+                if (tier.root / rel).is_file():
+                    copies.append((tier, replica, rel))
+        return copies
+
+    def _read_good(self, digest: str, copies) -> bytes | None:
+        """First copy whose content matches its digest (unthrottled direct
+        read — scrub is an integrity pass, not user-visible IO)."""
+        for tier, _replica, rel in copies:
+            try:
+                data = (tier.root / rel).read_bytes()
+            except OSError:
+                continue
+            if chunk_digest(data) == digest:
+                return data
+        return None
+
+    def scrub(self, live: Counter | dict, *, sample: int | None = None,
+              seed: int = 0, should_stop=None,
+              crash: CrashInjector = NO_CRASH) -> dict:
+        """Re-hash live objects and heal what can be healed.
+
+        For every scanned digest: corrupt copies are moved (one atomic
+        same-tier rename) to ``_CAS/quarantine/`` and the slot is
+        re-written from a good replica/tier — UNLESS no good copy exists
+        anywhere, in which case the copy is left in place and counted
+        ``unrecoverable`` (never quarantine the last surviving copy; a
+        future replica may still surface from an unmounted tier).
+
+        ``sample=N`` re-hashes a seeded N-digest subset (steady-state
+        maintenance can amortize a full pass across rounds); the seed
+        makes the subset — and therefore the whole report — replayable.
+        ``should_stop`` is polled between objects (PreemptionGuard wiring:
+        a SIGTERM mid-scrub defers the remainder, and because quarantine
+        is one rename and healing is idempotent, the re-run converges).
+
+        Pass 0 re-replicates objects whose quarantine provenance shows a
+        slot was emptied but never healed (the crash window between
+        rename and re-write) — scrub is convergent under interruption."""
+        report = {"scanned": 0, "clean": 0, "healed": 0, "quarantined": 0,
+                  "unrecoverable": 0, "deferred": 0, "requarantined": 0,
+                  "sample": sample, "seed": seed}
+
+        def _heal(tier, rel: str, data: bytes):
+            tier.write_file(rel, data, atomic=True)
+            atomic.fsync_dir((tier.root / rel).parent)
+
+        # pass 0: converge interrupted quarantine→heal windows
+        quarantined_before = self.quarantine_entries()
+        for tier_name, _qrel, digest, replica, _size in quarantined_before:
+            if dict(live).get(digest, 0) <= 0:
+                continue
+            tier = next(t for t in self.store.tiers()
+                        if t.name == tier_name)
+            rel = object_rel(digest, replica)
+            if (tier.root / rel).is_file():
+                continue            # slot healed before the interruption
+            good = self._read_good(digest, self._object_copies(digest))
+            if good is not None:
+                _heal(tier, rel, good)
+                report["healed"] += 1
+
+        live_digests = sorted(d for d, n in dict(live).items() if n > 0)
+        if sample is not None and 0 < sample < len(live_digests):
+            import random as _random
+            live_digests = sorted(
+                _random.Random(seed).sample(live_digests, sample))
+
+        for digest in live_digests:
+            if should_stop is not None and should_stop():
+                report["deferred"] = len(live_digests) - report["scanned"]
+                break
+            report["scanned"] += 1
+            copies = self._object_copies(digest)
+            bad = []
+            good_data = None
+            for tier, replica, rel in copies:
+                try:
+                    data = (tier.root / rel).read_bytes()
+                except OSError:
+                    bad.append((tier, replica, rel))
+                    continue
+                if chunk_digest(data) == digest:
+                    if good_data is None:
+                        good_data = data
+                else:
+                    bad.append((tier, replica, rel))
+            if not bad:
+                report["clean"] += 1
+                continue
+            if good_data is None:
+                # NEVER quarantine the last surviving copy — leave the
+                # damage in place (a replica may yet surface) and report
+                report["unrecoverable"] += 1
+                warn("CKPT_W_SCRUB",
+                     "corrupt chunk with no good copy on any tier",
+                     digest=digest, copies=len(copies))
+                continue
+            for tier, replica, rel in bad:
+                qrel = (f"{QUARANTINE_DIR}/{digest}.r{replica}"
+                        f".{secrets.token_hex(4)}.quar")
+                qpath = tier.root / qrel
+                qpath.parent.mkdir(parents=True, exist_ok=True)
+                try:
+                    os.rename(tier.root / rel, qpath)
+                except FileNotFoundError:
+                    pass            # unreadable AND vanished: nothing to move
+                else:
+                    report["quarantined"] += 1
+                    self.store.health_for(tier).note("quarantined")
+                crash.maybe("scrub_after_quarantine")
+                _heal(tier, rel, good_data)
+                report["healed"] += 1
+        return report
 
     def fsck(self, live: Counter | dict) -> dict:
         """CAS invariant check against a mark set:

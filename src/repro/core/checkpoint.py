@@ -56,12 +56,13 @@ import numpy as np
 
 from . import atomic, cas, cdc
 from . import codec as codec_mod
-from . import save_path
+from . import resilience, save_path
 from .atomic import NO_CRASH, CrashInjector
 from .chunk_exec import ChunkIOExecutor, cpu_cap
 from .coordinator import CheckpointCoordinator
 from .drain import DrainCounters, quiesce_device_state
-from .errors import (AbortedError, CkptError, NoCheckpointError, warn)
+from .errors import (AbortedError, CkptError, NoCheckpointError, SpaceError,
+                     warn)
 from .policy import (CHUNKINGS, MODES, CheckpointPolicy,
                      policy_from_manifest)
 from .registry import build_registry, registry_json, validate_against
@@ -118,6 +119,10 @@ class CheckpointManager:
         # always constructed: a full-mode manager must still RESTORE
         # checkpoints written incrementally (and vice versa)
         self.chunks = cas.ChunkStore.from_policy(store, policy)
+        # the tiered store shares the manager's retry budget so background
+        # drain copies get the same bounded-retry treatment (None on the
+        # serial engine: from_policy already dropped it — fail-fast)
+        store.io_retry = self.chunks.retry
         # background drains reuse the chunk pool so fast-tier reads overlap
         # throttled slow-tier writes (first manager on a store wins)
         if getattr(store, "io_executor", None) is None:
@@ -248,6 +253,7 @@ class CheckpointManager:
             # P4: quiescence before snapshot (depth-1 behaviour — and the
             # serial engine's only path: byte-for-byte the PR-1 baseline)
             self.wait()                              # previous round drained
+        degraded_hint = False
         try:
             wait_s = quiesce_device_state(state)
             registry = build_registry(state)
@@ -260,8 +266,24 @@ class CheckpointManager:
             # reservation) are added to the requirement
             pending = max(self._persist.inflight_bytes - est, 0) \
                 if queued else 0
-            self.store.fast.preflight(
-                (total + pending) // max(self._est_ratio(), 1))
+            required = (total + pending) // max(self._est_ratio(), 1)
+            try:
+                self.store.fast.preflight(required)
+            except SpaceError:
+                # degraded-mode save (pipelined engine only): a full fast
+                # tier fails the round over to the hierarchy below instead
+                # of aborting — writers land objects via _put_degraded and
+                # the manifest commits with a `degraded` marker. Serial
+                # stays fail-fast (PR-1 purity).
+                fallback = self.store.slow or self.store.remote
+                if self.chunks.retry is None or fallback is None:
+                    raise
+                warn("CKPT_W_DEGRADED",
+                     "fast tier failed capacity preflight; saving "
+                     "degraded through the lower tier(s)",
+                     step=step, tier=fallback.name)
+                fallback.preflight(required)
+                degraded_hint = True
         except BaseException:
             if queued:
                 # the admission reservation must not leak — a stuck slot
@@ -282,7 +304,7 @@ class CheckpointManager:
                 self.counters.commit(total)
 
         args = (items, registry, state, step, extra or {}, total, t0,
-                snap_s, wait_s, crash, commit_total)
+                snap_s, wait_s, crash, commit_total, degraded_hint)
         if blocking:
             try:
                 return self._write_round(*args, overlapped=False)
@@ -410,11 +432,13 @@ class CheckpointManager:
 
     def _write_round(self, items, registry, state, step, extra, total, t0,
                      snap_s, wait_s, crash, commit_total,
+                     degraded_hint: bool = False,
                      overlapped: bool = False) -> dict:
         stage = atomic.staging_dir(self.store.root, step)
         stage.mkdir(parents=True, exist_ok=True)
         atomic.mark_pending(stage, {"step": step, "t": time.time()})
         incremental = self.mode == "incremental"
+        pre_degraded = self.chunks.degraded_writes
 
         # ---- stage 1: plan + write (retrying 2PC phase 1) ----
         outcome = write_shards(
@@ -464,6 +488,17 @@ class CheckpointManager:
             "registry": registry_json(registry),
             "extra": extra,
         }
+        degraded = bool(degraded_hint or
+                        self.chunks.degraded_writes > pre_degraded)
+        if degraded:
+            # only present when True: older readers' lenient from_dict
+            # ignores the key, and clean manifests stay byte-identical
+            manifest["degraded"] = True
+            warn("CKPT_W_DEGRADED",
+                 "round committed degraded: objects written past the "
+                 "fast tier; restore reads them from the lower tier(s)",
+                 step=step,
+                 objects=self.chunks.degraded_writes - pre_degraded)
         crash.maybe("before_manifest")
         atomic.atomic_write_bytes(stage / atomic.MANIFEST,
                                   json.dumps(manifest).encode(), crash)
@@ -509,6 +544,7 @@ class CheckpointManager:
             "blocking_s": snap_s if overlapped else dt,
             "throughput_gbps": total / dt / 1e9 if dt else 0.0,
             "compression_ratio": total / max(stats["payload_bytes"], 1),
+            "degraded": degraded,
         }
         if incremental:
             # dedup ratio compares logical payload to per-copy object
@@ -545,6 +581,22 @@ class CheckpointManager:
         self.wait()
         return self._gc_locked(crash=crash, force_sweep=True)
 
+    def scrub(self, *, sample: int | None = None, seed: int = 0,
+              should_stop=None, crash: CrashInjector = NO_CRASH) -> dict:
+        """Re-hash the live object set (or a seeded `sample`), quarantine
+        corrupt copies and heal them from a good replica/tier
+        (``ChunkStore.scrub``). Runs through the maintenance pass with
+        ``retain=0`` so NO retention is applied — scrubbing must never
+        drop history. Returns the maintenance report; the scrub summary
+        is under ``report["scrub"]`` and persisted to
+        ``_CAS/last_scrub.json`` for the offline inspector."""
+        self.wait()
+        self.store.wait_drained()
+        return save_path.run_maintenance(
+            self.store, self.chunks, 0, self._live_chunk_refs,
+            crash=crash, scrub=True, scrub_sample=sample, scrub_seed=seed,
+            should_stop=should_stop)
+
     def _gc_locked(self, *, crash: CrashInjector = NO_CRASH,
                    force_sweep: bool = False) -> dict:
         """Stage-3 body (``save_path.run_maintenance``) — called directly
@@ -576,7 +628,12 @@ class CheckpointManager:
         tier = self.store.locate(rel)
         if tier is None:
             raise NoCheckpointError("no manifest for step", step=step)
-        manifest = json.loads(tier.read_file(rel))
+        if self.chunks.retry is not None:
+            manifest = json.loads(resilience.retry_io(
+                lambda: tier.read_file(rel), self.chunks.retry,
+                health=self.store.health_for(tier), op="manifest_read"))
+        else:
+            manifest = json.loads(tier.read_file(rel))
         fmt = int(manifest.get("format", 0))
         if fmt not in READABLE_FORMATS:
             raise CkptError("unsupported manifest format", format=fmt,
@@ -591,6 +648,8 @@ class CheckpointManager:
         if step is None:
             raise NoCheckpointError("no committed checkpoint found",
                                     root=str(self.store.root))
+        # one shared IO-retry deadline for the whole restore round
+        self.chunks.begin_io_window()
         manifest = self.load_manifest(step)
         # v6: the writer's recorded policy wins over a mismatched caller —
         # logged reconciliation, and future saves dedup against history

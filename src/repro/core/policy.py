@@ -111,12 +111,23 @@ class PipelinePolicy:
 
 @dataclass(frozen=True)
 class DurabilityPolicy:
-    """Redundancy, retention and the coordinator's failure clocks."""
+    """Redundancy, retention and the coordinator's failure clocks.
+
+    The ``io_*`` trio is the typed retry budget (``resilience``): up to
+    `io_retries` same-tier re-attempts per transient ``OSError``, with
+    decorrelated jitter starting at `io_backoff_ms`, and every retry
+    sleep of one round drawing from a single shared `io_deadline_s`
+    budget so a sick tier bounds the aggregate stall, not
+    retries × fault sites. Consumed only by the pipelined engine — the
+    serial (``io_threads=1``) engine stays fail-fast (PR-1 purity)."""
     replicas: int = 1                   # 2 = buddy redundancy
     retain: int = 3
     keepalive_s: float = 10.0
     save_timeout_s: float = 600.0
     max_retries: int = 1
+    io_retries: int = 2
+    io_backoff_ms: float = 5.0
+    io_deadline_s: float = 30.0
 
 
 @dataclass(frozen=True)
@@ -234,6 +245,9 @@ FLAT_FIELDS = {
     "keepalive_s": ("durability", "keepalive_s"),
     "save_timeout_s": ("durability", "save_timeout_s"),
     "max_retries": ("durability", "max_retries"),
+    "io_retries": ("durability", "io_retries"),
+    "io_backoff_ms": ("durability", "io_backoff_ms"),
+    "io_deadline_s": ("durability", "io_deadline_s"),
     "codec": ("codec", "codec"),
     "params_codec": ("codec", "params_codec"),
     "device_precondition": ("codec", "device_precondition"),
@@ -255,8 +269,9 @@ LEGACY_KWARGS = (
 _ENV_INT = {"n_writers", "chunk_size", "min_chunk_size", "max_chunk_size",
             "io_threads", "persist_queue_depth", "host_bytes_budget",
             "read_cache_bytes", "replicas", "retain", "max_retries",
-            "restore_frontier_classes", "remote_part_bytes"}
-_ENV_FLOAT = {"keepalive_s", "save_timeout_s"}
+            "io_retries", "restore_frontier_classes", "remote_part_bytes"}
+_ENV_FLOAT = {"keepalive_s", "save_timeout_s", "io_backoff_ms",
+              "io_deadline_s"}
 _ENV_BOOL = {"async_drain_to_slow", "streaming_restore",
              "device_precondition", "device_entropy"}
 

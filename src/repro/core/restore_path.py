@@ -32,6 +32,7 @@ import msgpack
 import numpy as np
 
 from . import codec as codec_mod
+from . import resilience
 from .elastic import (ShardRange, assemble, leaf_first_use_class,
                       normalize_index, plan_reads)
 from .errors import CorruptShardError, MissingShardError, warn
@@ -291,7 +292,15 @@ class RestoreSession:
                                              file=fname)
                 continue
             try:
-                rng, arr = unpack_shard(tier.read_file(rel))
+                if self.chunks.retry is not None:
+                    raw = resilience.retry_io(
+                        lambda: tier.read_file(rel), self.chunks.retry,
+                        deadline=self.chunks._deadline,
+                        health=self.store.health_for(tier),
+                        op="shard_read")
+                else:
+                    raw = tier.read_file(rel)
+                rng, arr = unpack_shard(raw)
                 if fname != srec["file"]:
                     warn("CKPT_W_REPLICA", "primary shard unavailable; "
                          "restored from buddy replica", file=srec["file"])

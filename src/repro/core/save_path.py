@@ -37,6 +37,7 @@ import msgpack
 import numpy as np
 
 from . import codec as codec_mod
+from . import resilience
 from .atomic import NO_CRASH, CrashInjector
 from .cas import ChunkStore, chunk_digest, split_payload
 from .cas import run_chunker as cas_run_chunker
@@ -640,7 +641,19 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
                 else:
                     data, header = pack_shard(name, rng, arr, codec_name)
                     crash.maybe(f"rank{rank}_before_write")
-                    store.fast.write_file(f"{rel_stage}/{fname}", data)
+                    # full-mode shard files get the bounded retry but NOT
+                    # the degraded failover: the commit path renames the
+                    # staging dir within the fast root, so a shard landed
+                    # on another tier could never be committed
+                    if chunks.retry is not None:
+                        resilience.retry_io(
+                            lambda d=data, f=fname: store.fast.write_file(
+                                f"{rel_stage}/{f}", d),
+                            chunks.retry, deadline=chunks._deadline,
+                            health=store.health_for(store.fast),
+                            op="shard_write")
+                    else:
+                        store.fast.write_file(f"{rel_stage}/{fname}", data)
                     nbytes += len(data)
                     files.append(fname)
                     with stats_lock:
@@ -710,6 +723,9 @@ def write_shards(*, items, alive_hint: int, coordinator, chunks: ChunkStore,
         if not alive:
             out.reason = "no surviving writer ranks"
             break
+        # one shared IO-retry deadline per attempt: every transient-error
+        # retry across all ranks draws from the same io_deadline_s budget
+        chunks.begin_io_window()
         for k in out.stats:
             out.stats[k] = 0
         out.shard_records.clear()
@@ -844,7 +860,9 @@ def collect_live_refs(store, memo: dict, tiers=None,
 
 def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
                     crash: CrashInjector = NO_CRASH,
-                    force_sweep: bool = False) -> dict:
+                    force_sweep: bool = False, scrub: bool = False,
+                    scrub_sample: int | None = None, scrub_seed: int = 0,
+                    should_stop=None) -> dict:
     """Stage 3 body: retire fast-tier steps beyond `retain`, clear staging
     litter, then mark-and-sweep the content-addressed store. `collect` is
     the manager's memoizing mark-phase callable (tiers=, errors=).
@@ -852,10 +870,28 @@ def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
     The destructive mark-and-sweep is O(total objects + history), so the
     per-save path only runs it when retention actually dropped a step
     (that's when objects become garbage in bulk); an explicit gc() always
-    sweeps, which is how aborted-round orphans are reclaimed on demand."""
+    sweeps, which is how aborted-round orphans are reclaimed on demand.
+
+    ``scrub=True`` additionally re-hashes the live object set (or a
+    seeded `scrub_sample`) and heals/quarantines per ``ChunkStore.scrub``;
+    `should_stop` defers the remainder between objects (preemption). The
+    maintenance pass also persists ``_CAS/health.json`` (tier health
+    snapshot) and, after a scrub, ``_CAS/last_scrub.json`` — the offline
+    inspector reads state from files, not from this process."""
+    import json
     import shutil
 
-    from . import atomic
+    from . import atomic, cas
+
+    def _finish(result: dict) -> dict:
+        try:
+            atomic.atomic_write_bytes(
+                store.fast.root / cas.HEALTH_FILE,
+                json.dumps(store.health_report(),
+                           separators=(",", ":")).encode())
+        except OSError:
+            pass                    # telemetry must never fail maintenance
+        return result
 
     # a step being drained to the slow tier MUST land before retirement
     # and marking — otherwise retiring its fast copy mid-copy would leave
@@ -874,11 +910,31 @@ def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
     fast_tmp_removed = store.fast.sweep_tmp_litter()
     no_sweep = {"swept": 0, "swept_bytes": 0, "kept": 0, "kept_bytes": 0,
                 "tmp_removed": 0, "evicted": 0, "evicted_bytes": 0}
-    if not (dropped or force_sweep):
-        return {"steps_dropped": [], "fast_tmp_removed": fast_tmp_removed,
-                "cas": dict(no_sweep, skipped=True)}
+    if not (dropped or force_sweep or scrub):
+        return _finish({"steps_dropped": [],
+                        "fast_tmp_removed": fast_tmp_removed,
+                        "cas": dict(no_sweep, skipped=True)})
     errors: list = []
     live = collect(errors=errors)
+    scrub_report = None
+    if scrub and not errors:
+        # scrub BEFORE the sweep: healing rewrites live slots, and the
+        # sweep must see the healed tree (quarantine/ lives outside
+        # objects/, so quarantined copies are never re-marked or swept)
+        scrub_report = chunks.scrub(live, sample=scrub_sample,
+                                    seed=scrub_seed,
+                                    should_stop=should_stop, crash=crash)
+        try:
+            atomic.atomic_write_bytes(
+                store.fast.root / cas.SCRUB_FILE,
+                json.dumps(scrub_report, separators=(",", ":")).encode())
+        except OSError:
+            pass
+    if not (dropped or force_sweep):
+        return _finish({"steps_dropped": [],
+                        "fast_tmp_removed": fast_tmp_removed,
+                        "cas": dict(no_sweep, skipped=True),
+                        "scrub": scrub_report})
     fast_errors: list = []
     fast_live = (collect(tiers=[store.fast], errors=fast_errors)
                  if store.slow is not None else None)
@@ -898,13 +954,15 @@ def run_maintenance(store, chunks: ChunkStore, retain: int, collect,
         warn("CKPT_W_GC", "unreadable committed manifest(s); skipping "
              "the CAS sweep (fail-safe) — repair or remove the damaged "
              "step(s) and rerun gc()", steps=errors[:8])
-        return {"steps_dropped": dropped,
-                "fast_tmp_removed": fast_tmp_removed,
-                "cas": dict(no_sweep, skipped=True,
-                            unreadable_manifests=errors)}
-    return {"steps_dropped": dropped,
-            "fast_tmp_removed": fast_tmp_removed,
-            "cas": chunks.sweep(live, crash, fast_live=fast_live)}
+        return _finish({"steps_dropped": dropped,
+                        "fast_tmp_removed": fast_tmp_removed,
+                        "cas": dict(no_sweep, skipped=True,
+                                    unreadable_manifests=errors),
+                        "scrub": scrub_report})
+    return _finish({"steps_dropped": dropped,
+                    "fast_tmp_removed": fast_tmp_removed,
+                    "cas": chunks.sweep(live, crash, fast_live=fast_live),
+                    "scrub": scrub_report})
 
 
 # ---------------------------------------------------------------------------

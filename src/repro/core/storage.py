@@ -40,6 +40,11 @@ class Tier:
         self._bucket = 0.0
         self._last = time.monotonic()
         self._used = 0
+        # read-failure accounting: a dying disk must be VISIBLE (one
+        # rate-limited warn per (kind, rel)) instead of silently absorbed
+        # by the verified-fallback path; counters feed the health report
+        self.io_counters: dict = {}
+        self._warned_reads: set = set()
 
     # --- capacity ---
     def free_bytes(self) -> int:
@@ -115,18 +120,51 @@ class Tier:
         destination exactly; False on a mismatch (truncated or over-long
         object) AND on any OSError — a vanished/unreadable file must send
         the caller to the verified-fallback path, never crash a restore
-        pool worker. Bytes actually read pay the token bucket BEFORE the
-        return either way (like ``read_file``), so short reads cannot
-        bypass the bandwidth model the io-sweep A/B depends on."""
+        pool worker. The False paths are NOT conflated though: a missing
+        file (normal tier fallthrough) only bumps ``read_missing``, while
+        a short read or a real IO error is counted separately and warned
+        once per ``(kind, rel)`` — a dying disk stays visible even when
+        every read is absorbed downstream. Bytes actually read pay the
+        token bucket BEFORE the return either way (like ``read_file``),
+        so short reads cannot bypass the bandwidth model the io-sweep
+        A/B depends on."""
         path = self.root / rel
+        n = 0
         try:
             with open(path, "rb") as f:
                 n = f.readinto(dest) or 0
                 ok = n == len(dest) and not f.read(1)
-        except OSError:
+        except FileNotFoundError:
+            # expected during tier fallthrough — count, never warn
+            with self._lock:
+                self.io_counters["read_missing"] = \
+                    self.io_counters.get("read_missing", 0) + 1
+            return False
+        except OSError as e:
+            self._throttle(n)
+            self._note_read_failure(rel, f"{e.__class__.__name__}: {e}",
+                                    "read_error")
             return False
         self._throttle(n)
+        if not ok:
+            self._note_read_failure(
+                rel, f"length mismatch: read {n}, wanted {len(dest)}",
+                "short_read")
         return ok
+
+    def _note_read_failure(self, rel: str, detail: str, kind: str):
+        """Count a non-missing read failure and warn ONCE per
+        ``(kind, rel)`` (dedup set capped so a sweep over a corrupt tree
+        cannot grow it unboundedly)."""
+        key = (kind, rel)
+        with self._lock:
+            self.io_counters[kind] = self.io_counters.get(kind, 0) + 1
+            if key in self._warned_reads:
+                return
+            if len(self._warned_reads) < 256:
+                self._warned_reads.add(key)
+        warn("CKPT_W_READ", f"tier read failed ({kind})",
+             tier=self.name, rel=rel, detail=detail)
 
     def sweep_tmp_litter(self) -> int:
         """Remove orphaned ``.tmp-*`` FILES under this tier's root — the
@@ -200,13 +238,25 @@ class RemoteTier(Tier):
         """ONE ranged GET: fill `dest` from `offset`. False on any OSError
         or short read (the verified-fallback contract of ``read_into``)."""
         self._request()
+        n = 0
         try:
             with open(self.root / rel, "rb") as f:
                 f.seek(offset)
                 n = f.readinto(dest) or 0
-        except OSError:
+        except FileNotFoundError:
+            with self._lock:
+                self.io_counters["read_missing"] = \
+                    self.io_counters.get("read_missing", 0) + 1
+            return False
+        except OSError as e:
+            self._note_read_failure(rel, f"{e.__class__.__name__}: {e}",
+                                    "read_error")
             return False
         self._throttle(n)
+        if n != len(dest):
+            self._note_read_failure(
+                rel, f"ranged GET short: read {n}, wanted {len(dest)} "
+                     f"at offset {offset}", "short_read")
         return n == len(dest)
 
     def read_into(self, rel: str, dest: memoryview) -> bool:
@@ -216,10 +266,20 @@ class RemoteTier(Tier):
         path = self.root / rel
         try:
             size = path.stat().st_size
-        except OSError:
+        except FileNotFoundError:
+            with self._lock:
+                self.io_counters["read_missing"] = \
+                    self.io_counters.get("read_missing", 0) + 1
+            return False
+        except OSError as e:
+            self._note_read_failure(rel, f"{e.__class__.__name__}: {e}",
+                                    "read_error")
             return False
         mv = memoryview(dest)
         if size != len(mv):
+            self._note_read_failure(
+                rel, f"size mismatch: object {size}, wanted {len(mv)}",
+                "short_read")
             return False
         for off in range(0, len(mv), int(self.part_bytes)):
             if not self.read_range(rel, mv[off:off + int(self.part_bytes)],
@@ -270,10 +330,40 @@ class TieredStore:
         self.io_executor = io_executor
         self._drainer: threading.Thread | None = None
         self._drain_err = None
+        # resilience plumbing (wired by CheckpointManager): io_retry is a
+        # resilience.RetryPolicy on the pipelined engine, None on the
+        # serial engine (fail-fast — PR-1 purity); _health maps tier name
+        # → TierHealth, created lazily so bare stores cost nothing
+        self.io_retry = None
+        self._health: dict = {}
+        self._health_lock = threading.Lock()
 
     @property
     def root(self) -> Path:
         return self.fast.root
+
+    def health_for(self, tier) -> "resilience_mod.TierHealth":
+        """The (lazily created) ``TierHealth`` for a mounted tier; accepts
+        the tier object or its name."""
+        from . import resilience as resilience_mod
+        name = tier if isinstance(tier, str) else tier.name
+        with self._health_lock:
+            h = self._health.get(name)
+            if h is None:
+                h = self._health[name] = resilience_mod.TierHealth(name)
+            return h
+
+    def health_report(self) -> dict:
+        """Snapshot of every mounted tier's health: breaker state + error/
+        retry counters (including the tier-level read-failure counters from
+        ``_note_read_failure``) — the payload of ``_CAS/health.json``."""
+        report = {}
+        for t in self.tiers():
+            snap = self.health_for(t).snapshot()
+            for k, v in getattr(t, "io_counters", {}).items():
+                snap["counters"][k] = snap["counters"].get(k, 0) + v
+            report[t.name] = snap
+        return report
 
     def apply_pipeline_policy(self, pipeline) -> "TieredStore":
         """Adopt a ``PipelinePolicy``'s drain mode. ``async_drain=None``
@@ -307,14 +397,24 @@ class TieredStore:
         src = self.fast.root / step_dir_name
         rels = [r for r in extra_files if (self.fast.root / r).is_file()]
 
+        def _slow_write(rel, data):
+            if self.io_retry is None:
+                self.slow.write_file(rel, data, atomic=True)
+                return
+            from . import resilience
+            resilience.retry_io(
+                lambda: self.slow.write_file(rel, data, atomic=True),
+                self.io_retry, health=self.health_for(self.slow),
+                op="drain_write")
+
         def _copy_extra(rel):
             f = self.fast.root / rel
             if f.is_file() and not (self.slow.root / rel).exists():
-                self.slow.write_file(rel, f.read_bytes(), atomic=True)
+                _slow_write(rel, f.read_bytes())
 
         def _copy_step(p):
             rel = str(Path(step_dir_name) / p.relative_to(src))
-            self.slow.write_file(rel, p.read_bytes(), atomic=True)
+            _slow_write(rel, p.read_bytes())
 
         def _copy():
             try:

@@ -35,11 +35,120 @@ from ..core.codec import CHUNK_ENCODED, _np_dtype, entropy_block_stats
 from ..core.codec import decode as codec_decode
 from ..core.elastic import ShardRange
 from ..core.namespace import REPLICA_SUFFIX
-from ..core.storage import Tier, TieredStore
+from ..core.storage import RemoteTier, Tier, TieredStore
 
 
 def _chunk_store(root: Path) -> cas.ChunkStore:
     return cas.ChunkStore(TieredStore(Tier("inspect", root)))
+
+
+def _tiered_store(root: Path, slow_root: Path | None = None,
+                  remote_root: Path | None = None) -> TieredStore:
+    """The cross-tier store view the scrub/health commands operate on —
+    tier names match the runtime's default hierarchy roles."""
+    return TieredStore(
+        Tier("fast", root),
+        Tier("slow", slow_root) if slow_root else None,
+        drain_async=False,
+        remote=RemoteTier("remote", remote_root) if remote_root else None)
+
+
+def _all_manifests(store: TieredStore) -> list:
+    """Every committed manifest on every mounted tier (deduped by step) —
+    the scrub's mark set must span the whole hierarchy or a slow-tier-only
+    step's chunks would read as dead."""
+    manifests, seen = [], set()
+    for tier in store.tiers():
+        for s in atomic.list_committed_steps(tier.root):
+            if s in seen:
+                continue
+            try:
+                manifests.append(json.loads(
+                    (atomic.committed_dir(tier.root, s) /
+                     atomic.MANIFEST).read_text()))
+                seen.add(s)
+            except (OSError, ValueError):
+                pass            # other tiers may hold a readable copy
+    return manifests
+
+
+def run_scrub(root: Path, slow_root: Path | None = None,
+              remote_root: Path | None = None, sample: int | None = None,
+              seed: int = 0, out=print) -> dict:
+    """``inspect_ckpt --scrub``: re-hash live objects across the mounted
+    tiers, quarantine corrupt copies (never the last one) and heal from a
+    good replica/tier. Persists ``_CAS/last_scrub.json``."""
+    store = _tiered_store(root, slow_root, remote_root)
+    chunks = cas.ChunkStore(store)
+    live = cas.live_chunk_refs(_all_manifests(store))
+    rep = chunks.scrub(live, sample=sample, seed=seed)
+    try:
+        atomic.atomic_write_bytes(store.fast.root / cas.SCRUB_FILE,
+                                  json.dumps(rep).encode())
+    except OSError:
+        pass
+    out(f"scrub: {rep['scanned']} scanned, {rep['clean']} clean, "
+        f"{rep['healed']} healed, {rep['quarantined']} quarantined, "
+        f"{rep['unrecoverable']} unrecoverable")
+    rep["ok"] = rep["unrecoverable"] == 0
+    return rep
+
+
+def run_health(root: Path, slow_root: Path | None = None,
+               remote_root: Path | None = None, out=print) -> dict:
+    """``inspect_ckpt --health``: the persisted per-tier error counters +
+    circuit-breaker state (``_CAS/health.json``), the last scrub summary
+    (``_CAS/last_scrub.json``), and the quarantine contents with digests.
+    Reads files only — the writer process owns the live counters."""
+    store = _tiered_store(root, slow_root, remote_root)
+    chunks = cas.ChunkStore(store)
+    rep: dict = {"tiers": {}, "last_scrub": None, "quarantine": []}
+    tier = store.locate(cas.HEALTH_FILE)
+    if tier is not None:
+        try:
+            rep["tiers"] = json.loads(tier.read_file(cas.HEALTH_FILE))
+        except (OSError, ValueError):
+            pass
+    tier = store.locate(cas.SCRUB_FILE)
+    if tier is not None:
+        try:
+            rep["last_scrub"] = json.loads(tier.read_file(cas.SCRUB_FILE))
+        except (OSError, ValueError):
+            pass
+    for tier_name, rel, digest, replica, size in chunks.quarantine_entries():
+        rep["quarantine"].append(
+            {"tier": tier_name, "rel": rel, "digest": digest,
+             "replica": replica, "bytes": size})
+    if not rep["tiers"]:
+        out("health: no recorded tier health (run a save or maintenance "
+            "pass first)")
+    for name, snap in rep["tiers"].items():
+        br = snap.get("breaker", {})
+        counters = snap.get("counters", {})
+        errs = sum(v for k, v in counters.items() if k.endswith("_errors"))
+        retries = sum(v for k, v in counters.items()
+                      if k.endswith("_retries"))
+        out(f"  tier {name}: breaker {br.get('state', '?')} "
+            f"({br.get('trips', 0)} trip(s)), {errs} error(s), "
+            f"{retries} retried")
+        for k in sorted(counters):
+            out(f"    {k}: {counters[k]}")
+    ls = rep["last_scrub"]
+    if ls:
+        out(f"  last scrub: {ls.get('scanned', 0)} scanned, "
+            f"{ls.get('healed', 0)} healed, "
+            f"{ls.get('quarantined', 0)} quarantined, "
+            f"{ls.get('unrecoverable', 0)} unrecoverable "
+            f"(seed {ls.get('seed')})")
+    out(f"  quarantine: {len(rep['quarantine'])} entr"
+        f"{'y' if len(rep['quarantine']) == 1 else 'ies'}")
+    for q in rep["quarantine"]:
+        out(f"    [{q['tier']}] {q['digest']} (replica {q['replica']}, "
+            f"{q['bytes']} B) -> {q['rel']}")
+    rep["ok"] = not any(
+        s.get("breaker", {}).get("state") == "open"
+        for s in rep["tiers"].values())
+    return rep
 
 
 def _cas_report(root: Path, manifests: list, deep: bool = False,
@@ -561,8 +670,36 @@ def main(argv=None):
     ap.add_argument("--remote-root", type=Path, default=None,
                     help="remote object-store tier root — adds its "
                          "per-tier residency column")
+    ap.add_argument("--scrub", action="store_true",
+                    help="re-hash live chunk objects across the mounted "
+                         "tiers; quarantine corrupt copies and heal from "
+                         "a good replica/tier")
+    ap.add_argument("--scrub-sample", type=int, default=None,
+                    help="scrub a seeded N-digest sample instead of the "
+                         "full live set")
+    ap.add_argument("--scrub-seed", type=int, default=0,
+                    help="seed for --scrub-sample (replayable subset)")
+    ap.add_argument("--health", action="store_true",
+                    help="print per-tier error counters, circuit-breaker "
+                         "state, quarantine contents and the last scrub "
+                         "summary")
     args = ap.parse_args(argv)
     sink = (lambda *_: None) if args.json else print
+    if args.scrub or args.health:
+        rep = {}
+        if args.scrub:
+            rep["scrub"] = run_scrub(
+                args.root, slow_root=args.slow_root,
+                remote_root=args.remote_root, sample=args.scrub_sample,
+                seed=args.scrub_seed, out=sink)
+        if args.health:
+            rep["health"] = run_health(
+                args.root, slow_root=args.slow_root,
+                remote_root=args.remote_root, out=sink)
+        rep["ok"] = all(r["ok"] for r in rep.values())
+        if args.json:
+            print(json.dumps(rep, indent=1, default=str))
+        return 0 if rep["ok"] else 1
     rep = inspect(args.root, step=args.step, verify=args.verify, out=sink,
                   slow_root=args.slow_root, remote_root=args.remote_root)
     if args.json:

@@ -15,18 +15,21 @@ from repro.core.storage import DEFAULT_REMOTE_PART_BYTES
 EXPORTED = [
     "AbortedError", "CASError", "CheckpointCoordinator", "CheckpointManager",
     "CheckpointPolicy", "ChunkIOExecutor", "ChunkStore", "ChunkingPolicy",
-    "CkptError", "CodecPolicy", "CodecUnavailableError",
-    "CorruptShardError", "CrashInjector", "CrashPoint",
-    "DrainCounters", "DurabilityPolicy", "GearChunker", "GearScanner",
+    "CircuitBreaker", "CkptError", "CodecPolicy", "CodecUnavailableError",
+    "CorruptShardError", "CrashInjector", "CrashPoint", "Deadline",
+    "DrainCounters", "DurabilityPolicy", "FaultPlane", "FaultSpec",
+    "FaultyTier", "GearChunker", "GearScanner",
     "MissingShardError", "NamespaceError",
     "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
     "PreemptionGuard",
     "ReadCache", "RegistryMismatchError", "RemoteTier", "RestorePlan",
-    "RestorePolicy", "RestoreSession", "RestoreStream",
-    "SavePlan", "SaveSession", "SpaceError", "Tier", "TieredStore",
+    "RestorePolicy", "RestoreSession", "RestoreStream", "RetryPolicy",
+    "SavePlan", "SaveSession", "SpaceError", "Tier", "TierHealth",
+    "TieredStore",
     "abstract_train_state", "config_digest", "default_store",
-    "init_train_state", "leaf_paths", "lower_half_descriptor",
-    "quiesce_device_state", "state_shardings",
+    "init_train_state", "is_tier_full", "is_transient", "leaf_paths",
+    "lower_half_descriptor",
+    "quiesce_device_state", "retry_io", "state_shardings", "wrap_store",
 ]
 
 
@@ -71,7 +74,8 @@ def test_policy_fields_and_defaults_are_pinned():
         "async_drain": None}
     assert _fields(DurabilityPolicy) == {
         "replicas": 1, "retain": 3, "keepalive_s": 10.0,
-        "save_timeout_s": 600.0, "max_retries": 1}
+        "save_timeout_s": 600.0, "max_retries": 1,
+        "io_retries": 2, "io_backoff_ms": 5.0, "io_deadline_s": 30.0}
     assert _fields(CodecPolicy) == {"codec": None, "params_codec": None,
                                     "device_precondition": None,
                                     "device_entropy": None}

@@ -1,0 +1,645 @@
+"""Fault-injection matrix for the self-healing tiered store — every
+schedulable fault point × {serial, pipelined} engine × {fixed, cdc}
+chunking.
+
+Where the crash matrix kills the process at protocol boundaries, this
+matrix keeps the process ALIVE and makes the storage layer lie: EIO on
+read and write, short/torn writes, bit-rot, vanished files, latency
+spikes, and a tier running out of space mid-round. Invariants asserted
+under EVERY schedule:
+
+  1. the pipelined engine (io_retries > 0) absorbs transient faults and
+     fails over fast→slow for persistent tier-full conditions — the
+     round COMMITS (with a ``degraded`` manifest marker on failover)
+     instead of aborting;
+  2. the serial engine (``io_threads=1``, the PR-1 purity baseline)
+     stays fail-FAST: the same schedules abort the round or raise, and a
+     clean retry afterwards lands normally — fail-fast, not fail-forever;
+  3. every committed step restores bit-exact regardless of which tier
+     ended up holding the bytes;
+  4. after one GC the content-addressed store passes fsck — zero leaked
+     objects, zero silently-lost objects.
+
+Every fault site is addressable by ``(op, tier, match, nth)`` and the
+plane is seeded, so any failure in this file is replayable from the
+test id alone. ``FAULT_MATRIX_SEED`` feeds the randomized-schedule test
+(CI's chaos-smoke echoes the seed it used so a red run can be replayed).
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_ckpt_policy
+from repro.core import atomic, cas
+from repro.core.atomic import CrashInjector, CrashPoint
+from repro.core.checkpoint import CheckpointManager
+from repro.core.errors import AbortedError, CkptError, SpaceError
+from repro.core.faults import FaultPlane, wrap_store
+from repro.core.preempt import PreemptionGuard
+from repro.core import resilience
+from repro.core.storage import Tier, TieredStore
+
+KEY = jax.random.PRNGKey(3)
+SEED = int(os.environ.get("FAULT_MATRIX_SEED", "7"))
+
+IO_AXES = [1, 4]                 # 1 = serial fail-fast reference engine
+CHUNKINGS = ["fixed", "cdc"]
+
+
+def _state(seed: int):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (32, 16)),
+                   "frozen": jax.random.normal(KEY, (64, 8))},
+        "opt": {"m": jnp.arange(512, dtype=jnp.float32).reshape(32, 16)},
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+def _abstract(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def _assert_restores(mgr, step, expect):
+    restored, _ = mgr.restore(_abstract(expect), step=step)
+    for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _plane_store(tmp_path, plane=None):
+    plane = plane if plane is not None else FaultPlane(seed=SEED)
+    store = TieredStore(Tier("fast", tmp_path / "fast"),
+                        Tier("slow", tmp_path / "slow"))
+    return wrap_store(store, plane), plane
+
+
+def _mgr(store, io_threads, chunking, mode="incremental", replicas=1):
+    return CheckpointManager(store, policy=make_ckpt_policy(
+        n_writers=2, codec="raw", mode=mode, chunk_size=512,
+        chunking=chunking, retain=2, max_retries=0, replicas=replicas,
+        io_threads=io_threads, io_retries=2, io_backoff_ms=1.0,
+        io_deadline_s=10.0))
+
+
+# Each point: the fault schedule (save-phase and/or restore-phase specs)
+# plus what the serial engine is expected to do about it. Pipelined
+# behaviour is uniform — absorb or degrade, never abort — except where
+# `degraded` pins the failover marker explicitly.
+#
+#   serial_save: "ok" | "abort" (writer fails → AbortedError; a clean
+#                re-save must land) | "space" (preflight SpaceError)
+#   drain_err_serial: the serial engine surfaces the background drain
+#                error as OSError (at save-time maintenance or at
+#                wait_drained) while the pipelined engine retries it away
+#   serial_restore_raises: first restore raises; the retry (fault
+#                exhausted) must succeed
+#   degraded:   pipelined round must commit with manifest["degraded"]
+#   scrub:      run a scrub after the save phase and require it to
+#                quarantine + heal (write-side corruption points)
+#   cold:       wipe the fast tier before restoring (burst buffer lost)
+POINTS = [
+    # -- write-side: transient fast-tier failures the retry budget absorbs
+    dict(name="w-eio-1", serial_save="abort",
+         save=[dict(op="write", kind="eio", tier="fast", match=".obj")]),
+    dict(name="w-eio-mid", serial_save="abort",
+         save=[dict(op="write", kind="eio", tier="fast", match=".obj",
+                    nth=3)]),
+    dict(name="w-eio-replica", replicas=2, serial_save="abort",
+         save=[dict(op="write", kind="eio", tier="fast", match=".obj",
+                    nth=2)]),
+    dict(name="w-enospc-1", serial_save="abort",
+         save=[dict(op="write", kind="enospc", tier="fast",
+                    match=".obj")]),
+    dict(name="w-enospc-burst", serial_save="abort",
+         save=[dict(op="write", kind="enospc", tier="fast", match=".obj",
+                    count=2)]),
+    dict(name="w-short-write", serial_save="abort",
+         save=[dict(op="write", kind="short_write", tier="fast",
+                    match=".obj")]),
+    dict(name="w-latency",
+         save=[dict(op="write", kind="latency", tier="fast", match=".obj",
+                    count=3, latency_s=0.02)]),
+    # -- write-side: persistent tier-full → degraded failover to slow
+    dict(name="w-enospc-persistent", serial_save="abort", degraded=True,
+         save=[dict(op="write", kind="enospc", tier="fast", match=".obj",
+                    count=-1)]),
+    dict(name="w-erofs-persistent", serial_save="abort", degraded=True,
+         save=[dict(op="write", kind="erofs", tier="fast", match=".obj",
+                    count=-1)]),
+    dict(name="preflight-fast-full", serial_save="space", degraded=True,
+         save=[dict(op="free", kind="full", tier="fast", count=-1)]),
+    # -- write-side: silent corruption (no errno) — replica + scrub heal
+    dict(name="w-bitrot-replica", replicas=2, scrub=True,
+         save=[dict(op="write", kind="bitrot", tier="fast",
+                    match=".obj")]),
+    dict(name="w-torn-replica", replicas=2, scrub=True,
+         save=[dict(op="write", kind="torn_write", tier="fast",
+                    match=".obj")]),
+    # -- full-mode shard writes get the same retry budget
+    dict(name="w-eio-fullmode", mode="full", serial_save="abort",
+         save=[dict(op="write", kind="eio", tier="fast")]),
+    # -- drain protocol: slow-tier faults during the background copy
+    dict(name="drain-eio-slow", drain_err_serial=True,
+         save=[dict(op="write", kind="eio", tier="slow", match=".obj")]),
+    dict(name="drain-latency-slow",
+         save=[dict(op="write", kind="latency", tier="slow", match=".obj",
+                    count=2, latency_s=0.02)]),
+    # -- read-side: both engines fall through fast→slow per copy
+    dict(name="r-eio-transient",
+         restore=[dict(op="read", kind="eio", tier="fast",
+                       match=".obj")]),
+    dict(name="r-eio-persistent-fast",
+         restore=[dict(op="read", kind="eio", tier="fast", match=".obj",
+                       count=-1)]),
+    dict(name="r-short-read",
+         restore=[dict(op="read", kind="short_write", tier="fast",
+                       match=".obj")]),
+    dict(name="r-vanish",
+         restore=[dict(op="read", kind="vanish", tier="fast",
+                       match=".obj")]),
+    dict(name="r-latency",
+         restore=[dict(op="read", kind="latency", tier="fast",
+                       match=".obj", count=4, latency_s=0.02)]),
+    dict(name="r-bitrot-transient",
+         restore=[dict(op="read", kind="bitrot", tier="fast",
+                       match=".obj")]),
+    # -- read-side: metadata (manifest / refs cache) faults
+    dict(name="r-eio-manifest", serial_restore_raises=True,
+         restore=[dict(op="read_file", kind="eio", tier="fast",
+                       match="manifest")]),
+    dict(name="r-manifest-latency",
+         restore=[dict(op="read_file", kind="latency", tier="fast",
+                       match="manifest", latency_s=0.02)]),
+    dict(name="refs-eio",
+         restore=[dict(op="read_file", kind="eio", tier="fast",
+                       match="refs.json", count=2)]),
+    # -- cold restart: burst buffer gone, slow tier faults on first read
+    dict(name="r-eio-slow-cold", cold=True, serial_restore_raises=True,
+         restore=[dict(op="read", kind="eio", tier="slow",
+                       match=".obj")]),
+]
+
+
+def _wipe_fast(store):
+    """Simulate a lost burst buffer: committed steps + CAS vanish from
+    the fast tier; LATEST survives (it is tiny and rewritten last)."""
+    root = store.fast.root
+    for s in atomic.list_committed_steps(root):
+        shutil.rmtree(atomic.committed_dir(root, s), ignore_errors=True)
+    shutil.rmtree(root / cas.CAS_DIR, ignore_errors=True)
+
+
+@pytest.mark.parametrize("chunking", CHUNKINGS)
+@pytest.mark.parametrize("io_threads", IO_AXES)
+@pytest.mark.parametrize("point", POINTS, ids=lambda p: p["name"])
+def test_fault_matrix(tmp_path, point, io_threads, chunking):
+    serial = io_threads == 1
+    store, plane = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads, chunking,
+               mode=point.get("mode", "incremental"),
+               replicas=point.get("replicas", 1))
+    states = {1: _state(1), 2: _state(2)}
+    mgr.save(states[1], 1)
+    store.wait_drained()
+
+    for kw in point.get("save", []):
+        plane.add(**kw)
+    expect_serial = point.get("serial_save", "ok")
+    drain_err = False
+    if serial and expect_serial != "ok":
+        exc = {"abort": AbortedError, "space": SpaceError}[expect_serial]
+        with pytest.raises(exc):
+            mgr.save(states[2], 2)
+        assert plane.fired(), "serial round aborted without a fired fault"
+        plane.clear()
+        mgr.save(states[2], 2)        # fail-fast, not fail-forever
+    else:
+        try:
+            rep = mgr.save(states[2], 2)
+        except OSError:
+            # serial drain error can surface inside save-time maintenance
+            assert serial and point.get("drain_err_serial"), point["name"]
+            drain_err, rep = True, None
+        if rep is not None and not serial:
+            if point.get("degraded"):
+                assert rep["degraded"] is True
+                assert mgr.load_manifest(2).get("degraded") is True
+                assert plane.fired()
+            else:
+                assert not rep.get("degraded"), point["name"]
+
+    # settle the background drain; the serial engine must SURFACE a
+    # drain fault (exactly once), the pipelined engine must retry it away
+    try:
+        store.wait_drained()
+    except OSError:
+        drain_err = True
+    assert drain_err == bool(serial and point.get("drain_err_serial")), \
+        point["name"]
+    assert mgr.latest_step() == 2
+    plane.clear()
+
+    if point.get("scrub"):
+        srep = mgr.scrub()["scrub"]
+        assert srep["quarantined"] >= 1, srep
+        assert srep["healed"] >= 1, srep
+        assert srep["unrecoverable"] == 0, srep
+        assert mgr.chunks.quarantine_entries()
+
+    if point.get("cold"):
+        _wipe_fast(store)
+
+    for kw in point.get("restore", []):
+        plane.add(**kw)
+    if serial and point.get("serial_restore_raises"):
+        with pytest.raises((OSError, CkptError)):
+            _assert_restores(mgr, 2, states[2])
+        plane.clear()
+    _assert_restores(mgr, 2, states[2])
+    _assert_restores(mgr, 1, states[1])
+    plane.clear()
+
+    mgr.gc()
+    fsck = mgr.chunks.fsck(mgr._live_chunk_refs())
+    assert fsck["ok"], (point["name"], fsck)
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# randomized schedule — replayable chaos (CI echoes the seed it used)
+# ---------------------------------------------------------------------------
+
+def test_randomized_schedule_replayable(tmp_path):
+    """A seeded random schedule drawn from the RECOVERABLE catalog must
+    never cost a committed round or a byte: every save COMMITS (a
+    degraded commit is acceptable when overlapping random bursts outlast
+    the retry budget — an abort is not), restores stay bit-exact, and
+    fsck stays clean. Replay a red CI run with
+    FAULT_MATRIX_SEED=<echoed seed>."""
+    plane = FaultPlane.random_schedule(SEED, n=6)
+    store, _ = _plane_store(tmp_path, plane)
+    mgr = _mgr(store, io_threads=4, chunking="cdc")
+    states = {1: _state(1), 2: _state(2), 3: _state(3)}
+    for s in (1, 2, 3):
+        assert mgr.save(states[s], s)["step"] == s
+    store.wait_drained()
+    for s in (1, 2, 3):
+        _assert_restores(mgr, s, states[s])
+    mgr.gc()
+    fsck = mgr.chunks.fsck(mgr._live_chunk_refs())
+    assert fsck["ok"], (SEED, [s.key for s in plane.specs], fsck)
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# scrubber: heal, refuse-last-copy, preemption, crash convergence
+# ---------------------------------------------------------------------------
+
+def _corrupt(path, offset=0):
+    raw = bytearray(path.read_bytes())
+    raw[offset] ^= 0x01
+    path.write_bytes(bytes(raw))
+
+
+def _live_primaries(mgr, tier):
+    """(digest, path) for every live primary object on `tier`."""
+    live = mgr._live_chunk_refs()
+    out = []
+    for digest, n in sorted(live.items()):
+        if n <= 0:
+            continue
+        p = tier.root / cas.object_rel(digest)
+        if p.is_file():
+            out.append((digest, p))
+    return out
+
+
+def test_scrub_heals_bitrot_from_replica(tmp_path):
+    """Acceptance: injected bit-rot on a primary is healed from the
+    buddy replica, with the corrupt copy quarantined — and the pass is
+    idempotent (a second scrub reports everything clean)."""
+    store, _ = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads=4, chunking="fixed", replicas=2)
+    state = _state(1)
+    mgr.save(state, 1)
+    store.wait_drained()
+    digest, p = _live_primaries(mgr, store.fast)[0]
+    _corrupt(p)
+    rep = mgr.scrub()["scrub"]
+    assert rep["quarantined"] == 1 and rep["unrecoverable"] == 0
+    assert rep["healed"] >= 1
+    entries = mgr.chunks.quarantine_entries()
+    assert [e[2] for e in entries] == [digest]
+    # the healed slot holds good bytes again; the quarantined copy holds
+    # the damage (kept for forensics, never re-marked by GC)
+    assert cas.chunk_digest(p.read_bytes()) == digest
+    qpath = store.fast.root / entries[0][1]
+    assert cas.chunk_digest(qpath.read_bytes()) != digest
+    _assert_restores(mgr, 1, state)
+    again = mgr.scrub()["scrub"]
+    assert again["quarantined"] == 0 and again["healed"] == 0
+    assert again["clean"] == again["scanned"]
+    mgr.gc()
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    mgr.close()
+
+
+def test_scrub_never_quarantines_last_copy(tmp_path):
+    """A corrupt object with NO good copy anywhere is left in place and
+    reported unrecoverable — quarantining it would destroy the only
+    evidence (and a replica may yet surface from an unmounted tier)."""
+    store = TieredStore(Tier("fast", tmp_path / "fast"))
+    mgr = _mgr(store, io_threads=4, chunking="fixed")
+    mgr.save(_state(1), 1)
+    digest, p = _live_primaries(mgr, store.fast)[0]
+    _corrupt(p)
+    rep = mgr.scrub()["scrub"]
+    assert rep["unrecoverable"] == 1 and rep["quarantined"] == 0
+    assert p.is_file(), "last surviving copy must stay in place"
+    assert not mgr.chunks.quarantine_entries()
+    mgr.close()
+
+
+def test_scrub_heals_from_slow_tier(tmp_path):
+    """With replicas=1 the drained slow-tier copy is the healing source."""
+    store, _ = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads=4, chunking="fixed")
+    state = _state(1)
+    mgr.save(state, 1)
+    store.wait_drained()
+    digest, p = _live_primaries(mgr, store.fast)[0]
+    _corrupt(p)
+    rep = mgr.scrub()["scrub"]
+    assert rep["quarantined"] == 1 and rep["healed"] >= 1
+    assert rep["unrecoverable"] == 0
+    assert cas.chunk_digest(p.read_bytes()) == digest
+    _assert_restores(mgr, 1, state)
+    mgr.close()
+
+
+def test_scrub_preemption_defers_and_converges(tmp_path):
+    """Satellite: SIGTERM mid-scrub. The guard's flag defers the
+    remainder BETWEEN objects, so no quarantine entry is ever
+    half-moved; the re-run after requeue converges to clean."""
+    store, _ = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads=4, chunking="fixed", replicas=2)
+    state = _state(1)
+    mgr.save(state, 1)
+    store.wait_drained()
+    primaries = _live_primaries(mgr, store.fast)
+    assert len(primaries) >= 6
+    for _d, p in primaries[:3]:
+        _corrupt(p)
+
+    with PreemptionGuard() as guard:
+        polls = [0]
+
+        def stop():
+            polls[0] += 1
+            if polls[0] == 3:
+                guard.request()     # the test stand-in for SIGTERM
+            return guard.should_preempt
+
+        rep = mgr.scrub(should_stop=stop)["scrub"]
+    assert rep["deferred"] > 0
+    assert rep["scanned"] < len(primaries)
+    # invariant: nothing half-moved — every quarantined digest's origin
+    # slot is populated again (quarantine+heal is atomic per object)
+    for tier_name, _qrel, digest, replica, _size in \
+            mgr.chunks.quarantine_entries():
+        tier = next(t for t in store.tiers() if t.name == tier_name)
+        assert (tier.root / cas.object_rel(digest, replica)).is_file()
+
+    healed_total = rep["healed"]
+    rep2 = mgr.scrub()["scrub"]     # requeued run: no preemption
+    healed_total += rep2["healed"]
+    assert rep2["deferred"] == 0
+    assert healed_total == 3
+    rep3 = mgr.scrub()["scrub"]
+    assert rep3["quarantined"] == 0 and rep3["healed"] == 0
+    _assert_restores(mgr, 1, state)
+    mgr.close()
+
+
+def test_scrub_converges_after_crash_mid_heal(tmp_path):
+    """Kill the scrubber in the window between the quarantine rename and
+    the heal write: the slot is empty but the quarantine filename holds
+    the provenance, so the NEXT scrub's pass-0 re-replicates it."""
+    store, _ = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads=4, chunking="fixed", replicas=2)
+    state = _state(1)
+    mgr.save(state, 1)
+    store.wait_drained()
+    digest, p = _live_primaries(mgr, store.fast)[0]
+    _corrupt(p)
+    with pytest.raises(CrashPoint):
+        mgr.scrub(crash=CrashInjector("scrub_after_quarantine"))
+    assert not p.is_file(), "crash window: quarantined but not healed"
+    entries = mgr.chunks.quarantine_entries()
+    assert [e[2] for e in entries] == [digest]
+    # reads still work through the buddy replica in the meantime
+    _assert_restores(mgr, 1, state)
+    rep = mgr.scrub()["scrub"]      # fresh process: pass-0 converges
+    assert rep["healed"] >= 1 and rep["unrecoverable"] == 0
+    assert cas.chunk_digest(p.read_bytes()) == digest
+    rep2 = mgr.scrub()["scrub"]
+    assert rep2["quarantined"] == 0 and rep2["healed"] == 0
+    mgr.gc()
+    assert mgr.chunks.fsck(mgr._live_chunk_refs())["ok"]
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode commit + health surfaces
+# ---------------------------------------------------------------------------
+
+def test_degraded_save_commits_and_is_inspectable(tmp_path):
+    """Fast tier goes read-only mid-round: the pipelined engine fails
+    the writers over to the slow tier and COMMITS, marking the manifest;
+    health counters record the failover for the offline inspector."""
+    store, plane = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads=4, chunking="fixed")
+    state = _state(2)
+    plane.add(op="write", kind="erofs", tier="fast", match=".obj",
+              count=-1)
+    rep = mgr.save(state, 2)
+    assert rep["degraded"] is True
+    assert mgr.load_manifest(2).get("degraded") is True
+    assert mgr.chunks.degraded_writes > 0
+    plane.clear()
+    _assert_restores(mgr, 2, state)
+    health = store.health_report()
+    assert health["slow"]["counters"].get("degraded_writes", 0) > 0
+    assert health["fast"]["breaker"]["state"] in ("closed", "open")
+    # maintenance persists the snapshot for the out-of-process inspector
+    mgr.gc()
+    assert (store.fast.root / cas.HEALTH_FILE).is_file()
+    mgr.close()
+
+
+def test_serial_engine_stays_failfast_on_tier_full(tmp_path):
+    """PR-1 purity: the serial engine must NOT fail over — a full fast
+    tier aborts the round exactly as the baseline engine did."""
+    store, plane = _plane_store(tmp_path)
+    mgr = _mgr(store, io_threads=1, chunking="fixed")
+    plane.add(op="write", kind="enospc", tier="fast", match=".obj",
+              count=-1)
+    with pytest.raises(AbortedError):
+        mgr.save(_state(2), 2)
+    assert mgr.chunks.degraded_writes == 0
+    plane.clear()
+    mgr.save(_state(2), 2)          # clean retry lands normally
+    assert mgr.load_manifest(2).get("degraded") is None
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: read_into accounting, replica probe economy
+# ---------------------------------------------------------------------------
+
+def test_read_into_distinguishes_missing_from_damage(tmp_path):
+    """A missing object is an expected cache miss (silent counter); a
+    short read or EIO is DAMAGE and must be counted + warned — once per
+    (kind, rel), not once per chunk access."""
+    tier = Tier("t", tmp_path)
+    buf = bytearray(8)
+    assert tier.read_into("absent.obj", buf) is False
+    assert tier.io_counters.get("read_missing") == 1
+    assert not tier._warned_reads
+
+    tier.write_file("short.obj", b"1234")
+    assert tier.read_into("short.obj", buf) is False
+    assert tier.read_into("short.obj", buf) is False
+    assert tier.io_counters.get("short_read") == 2
+    assert len(tier._warned_reads) == 1   # rate-limited: one warn per site
+
+    from repro.core.faults import FaultyTier
+    plane = FaultPlane()
+    plane.add(op="read_into", kind="eio", tier="t", match="short.obj")
+    wrapped = FaultyTier(tier, plane)
+    tier.write_file("short.obj", bytes(8))
+    assert wrapped.read_into("short.obj", buf) is False
+    assert tier.io_counters.get("read_error") == 1
+    assert wrapped.read_into("short.obj", buf) is True
+
+
+def test_single_replica_skips_dead_replica_probe(tmp_path):
+    """With replicas=1 the hot path must not probe the dead ``.r1``
+    slot; a legacy ``.r1`` copy from an old 2-replica config is still
+    honoured — but only as a last resort after the primary fails."""
+    store = TieredStore(Tier("fast", tmp_path / "fast"))
+    mgr = _mgr(store, io_threads=4, chunking="fixed")
+    data = b"x" * 600
+    digest = cas.chunk_digest(data)
+    assert mgr.chunks.put(digest, data) > 0
+    primary = store.fast.root / cas.object_rel(digest)
+    legacy = store.fast.root / cas.object_rel(digest, 1)
+    assert primary.is_file() and not legacy.exists()
+    # plant a legacy replica, then damage the primary: get() must fall
+    # back to the .r1 copy even though exists() only probes slot 0
+    legacy.parent.mkdir(parents=True, exist_ok=True)
+    legacy.write_bytes(data)
+    _corrupt(primary)
+    assert mgr.chunks.exists(digest) is True
+    assert mgr.chunks.get(digest) == data
+    primary.unlink()
+    assert mgr.chunks.exists(digest) is False   # configured slot only
+    assert mgr.chunks.get(digest) == data       # last-ditch still serves
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# resilience primitives (no IO): retry, deadline, breaker
+# ---------------------------------------------------------------------------
+
+def test_retry_absorbs_transient_and_respects_budget():
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        if calls[0] < 3:
+            raise OSError(5, "Input/output error")
+        return "ok"
+
+    sleeps = []
+    pol = resilience.RetryPolicy(retries=2, backoff_ms=1.0, deadline_s=None)
+    assert resilience.retry_io(flaky, pol, sleep=sleeps.append) == "ok"
+    assert calls[0] == 3 and len(sleeps) == 2
+    # decorrelated jitter: bounded below by base, above by the cap
+    assert all(0.001 <= s <= 0.1 for s in sleeps)
+
+    calls[0] = 0
+    with pytest.raises(OSError):
+        resilience.retry_io(
+            flaky, resilience.RetryPolicy(retries=1, backoff_ms=1.0,
+                                          deadline_s=None),
+            sleep=lambda _s: None)
+    assert calls[0] == 2            # budget exhausted → error propagates
+
+
+def test_retry_fails_fast_on_permanent_and_without_policy():
+    def eperm():
+        raise PermissionError(1, "Operation not permitted")
+    with pytest.raises(PermissionError):
+        resilience.retry_io(
+            eperm, resilience.RetryPolicy(retries=5, backoff_ms=1.0),
+            sleep=lambda _s: None)
+    calls = [0]
+
+    def once():
+        calls[0] += 1
+        raise OSError(5, "io")
+    with pytest.raises(OSError):
+        resilience.retry_io(once, None)
+    assert calls[0] == 1            # retry=None == the serial engine
+
+
+def test_deadline_cuts_retries_short():
+    now = [0.0]
+    dl = resilience.Deadline(1.0, clock=lambda: now[0])
+
+    def always():
+        now[0] += 0.6
+        raise OSError(5, "io")
+    with pytest.raises(OSError):
+        resilience.retry_io(
+            always, resilience.RetryPolicy(retries=99, backoff_ms=1.0),
+            deadline=dl, sleep=lambda _s: None)
+    assert now[0] <= 1.3            # 2 attempts, not 100
+
+
+def test_circuit_breaker_lifecycle():
+    now = [0.0]
+    br = resilience.CircuitBreaker(threshold=3, cooldown_s=30.0,
+                                   clock=lambda: now[0])
+    assert br.state == "closed" and br.allow()
+    for _ in range(2):
+        br.record_error()
+    assert br.state == "closed"     # below threshold
+    br.record_ok()
+    br.record_error(); br.record_error()
+    assert br.state == "closed"     # success resets the streak
+    br.record_error()
+    assert br.state == "open" and not br.allow() and br.trips == 1
+    now[0] += 31.0
+    assert br.state == "half-open" and br.allow()
+    br.record_error()               # probe failed: re-arm
+    assert br.state == "open"
+    now[0] += 31.0
+    br.record_ok()                  # probe succeeded: close
+    assert br.state == "closed" and br.allow()
+
+
+def test_fault_classification():
+    assert resilience.is_transient(OSError(5, "io"))        # EIO
+    assert resilience.is_transient(OSError(28, "nospc"))    # ENOSPC
+    assert resilience.is_tier_full(OSError(28, "nospc"))
+    assert resilience.is_tier_full(OSError(30, "rofs"))     # EROFS
+    assert not resilience.is_tier_full(OSError(5, "io"))
+    assert not resilience.is_transient(PermissionError(1, "eperm"))
+    assert not resilience.is_transient(ValueError("not IO at all"))
