@@ -1,0 +1,180 @@
+"""WeightSync distribution-plane benchmark: checkpoint-as-transport.
+
+Three questions, one synthetic serving fleet:
+
+  1. **Bytes on wire per update** — after a warm full sync, churn X% of
+     the weight leaves (default 10%), publish, and measure what a
+     replica actually pulls. The CAS diff must keep the delta near the
+     churn fraction: ``delta_bytes_frac ≤ 0.25`` at 10% churn is the
+     acceptance floor (recorded inverted as ``delta_reduction`` so the
+     min-floor gate can hold it).
+  2. **Swap latency under load** — the flip a serving loop feels is ONE
+     reference assignment; the bench holds it against a full blocking
+     ``restore()`` of the same step (the cold-redeploy alternative) and
+     records the ratio as ``swap_speedup``.
+  3. **Replicas-per-store scaling** — a pull tree of N replicas must
+     leave the source store serving O(tree root) bytes;
+     ``peer_served_frac`` is the fleet's wire traffic served rack-local
+     by peer caches.
+
+Every rep, every replica: the flipped set is asserted bit-exact against
+a fresh blocking ``restore()`` leaf-by-leaf before any number is
+recorded — a fast wrong answer is not a result.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import statistics
+import tempfile
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cas
+from repro.core.checkpoint import CheckpointManager
+from repro.core.storage import Tier, TieredStore
+from repro.core.weightsync import (WeightPublisher, assert_bitexact,
+                                   build_fleet)
+
+from .common import (abstract, bench_policy, bench_record, emit,
+                     synth_state)
+
+AGG = 64 << 20
+SHARDS = 20
+FLEET = 4
+CHURN = 0.10
+REPS = 3
+
+
+def _params_filter(name: str) -> bool:
+    return name.startswith("params/")
+
+
+def _churn(state: dict, frac: float, rep: int) -> dict:
+    """Mutate ceil(frac · leaves) parameter leaves (rotating which, so
+    successive reps churn different chunks), leave the rest untouched."""
+    names = sorted(state["params"])
+    k = max(int(np.ceil(frac * len(names))), 1)
+    hot = {names[(rep * k + i) % len(names)] for i in range(k)}
+    return {
+        "params": {n: (v + 1.0 if n in hot else v)
+                   for n, v in state["params"].items()},
+        "step": jnp.asarray(rep + 1, jnp.int32),
+    }
+
+
+def run(tiny: bool = False, *, fleet_n: int = FLEET, churn: float = CHURN,
+        io_threads: int = 4, reps: int = REPS, fanout: int = 2) -> dict:
+    tmp = Path(tempfile.mkdtemp(prefix="ws-bench-"))
+    agg = AGG // (16 if tiny else 1)
+    reps = 1 if tiny else reps
+    pol = bench_policy(mode="incremental", chunk_size=256 << 10,
+                       io_threads=io_threads, retain=reps + 2)
+    store = TieredStore(Tier("fast", tmp / "src"))
+    mgr = CheckpointManager(store, policy=pol)
+    WeightPublisher(mgr)
+    state = synth_state(agg, shards=SHARDS, seed=7)
+
+    try:
+        mgr.save(state, 0, blocking=True)
+        mgr.wait()
+        fleet = build_fleet(store, tmp / "fleet", fleet_n, fanout=fanout,
+                            policy=pol, leaf_filter=_params_filter)
+        for sub in fleet:
+            st = sub.sync()
+            assert st["state"] == "live", st["last_error"]
+        wire_mark = [s.counters["wire_bytes"] for s in fleet]
+
+        delta_fracs, swap_ms, restore_ms = [], [], []
+        for rep in range(reps):
+            state = _churn(state, churn, rep)
+            step = rep + 1
+            mgr.save(state, step, blocking=True)
+            mgr.wait()
+            # full weight bytes = the encoded size of every params chunk
+            # this step references — the denominator the ISSUE floors
+            manifest = mgr.load_manifest(step)
+            index = cas.manifest_chunk_index(manifest, _params_filter)
+            full_bytes = sum(n or 0 for n in index.values())
+            if not full_bytes:
+                # raw-codec manifests carry no per-chunk encoded lens;
+                # payload_bytes is the same number for codec="raw"
+                full_bytes = sum(
+                    s.get("payload_bytes", 0)
+                    for nm, rec in manifest["leaves"].items()
+                    if _params_filter(nm) for s in rec.get("shards", []))
+            for i, sub in enumerate(fleet):
+                st = sub.sync()
+                assert st["state"] == "live" and \
+                    st["last_flipped_step"] == step, st["last_error"]
+                pulled = sub.counters["wire_bytes"] - wire_mark[i]
+                wire_mark[i] = sub.counters["wire_bytes"]
+                delta_fracs.append(pulled / max(full_bytes, 1))
+                swap_ms.append(
+                    sub.counters["last_flip_blocking_s"] * 1e3)
+            # the cold alternative: a full blocking restore of this step
+            t0 = time.monotonic()
+            restored, _ = mgr.restore(abstract(state), step=step)
+            restore_ms.append((time.monotonic() - t0) * 1e3)
+            # acceptance gate: every replica bit-exact vs restore(),
+            # leaf by leaf, BEFORE any number is recorded
+            for sub in fleet:
+                _, arrays = sub.current()
+                assert_bitexact(arrays, restored,
+                                leaf_filter=_params_filter)
+
+        delta_frac = statistics.median(delta_fracs)
+        swap = statistics.median(swap_ms)
+        restore = statistics.median(restore_ms)
+        peer = sum(s.counters["peer_bytes"] for s in fleet)
+        source = sum(s.counters["source_bytes"] for s in fleet)
+        out = {
+            "tiny": tiny,
+            "agg_mib": agg / 2**20,
+            "fleet": fleet_n,
+            "churn_frac": churn,
+            "reps": reps,
+            "delta_bytes_frac": delta_frac,
+            "delta_reduction": (1.0 / delta_frac) if delta_frac else
+            float(len(index)),
+            "swap_blocking_ms": swap,
+            "restore_blocking_ms": restore,
+            "swap_speedup": restore / max(swap, 1e-6),
+            "peer_served_frac": peer / max(peer + source, 1),
+            "bitexact_reps": reps,
+        }
+        emit("weightsync", swap * 1e3,
+             f"fleet={fleet_n};churn={churn:.2f};"
+             f"delta_frac={delta_frac:.3f};"
+             f"swap_ms={swap:.3f};restore_ms={restore:.1f};"
+             f"peer_frac={out['peer_served_frac']:.2f}")
+        bench_record("weightsync", out)
+        return out
+    finally:
+        for sub in locals().get("fleet", []):
+            sub.close()
+        mgr.close()
+        shutil.rmtree(tmp, ignore_errors=True)
+        for t in store.tiers():
+            shutil.rmtree(t.root, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke scale (1/16 state, 1 rep)")
+    ap.add_argument("--fleet", type=int, default=FLEET)
+    ap.add_argument("--fanout", type=int, default=2)
+    ap.add_argument("--churn", type=float, default=CHURN)
+    ap.add_argument("--io-threads", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=REPS)
+    args = ap.parse_args()
+    run(tiny=args.tiny, fleet_n=args.fleet, churn=args.churn,
+        io_threads=args.io_threads, reps=args.reps, fanout=args.fanout)
+
+
+if __name__ == "__main__":
+    main()

@@ -91,6 +91,25 @@ def object_rel(digest: str, replica: int = 0) -> str:
     return rel + REPLICA_SUFFIX if replica else rel
 
 
+def manifest_chunk_index(manifest: dict, leaf_filter=None) -> dict:
+    """Digest → encoded-chunk length for every chunk an (incremental)
+    manifest references, optionally restricted to leaves accepted by
+    ``leaf_filter(name)``. The weightsync diff: a subscriber subtracts
+    its cache-resident set from this index and pulls only the rest.
+    Lengths come from ``chunk_lens`` (v5+); ``None`` for older manifests
+    (the object's file size is still authoritative on arrival)."""
+    index: dict = {}
+    for name, rec in manifest.get("leaves", {}).items():
+        if leaf_filter is not None and not leaf_filter(name):
+            continue
+        for s in rec.get("shards", []):
+            chunks = s.get("chunks", [])
+            lens = s.get("chunk_lens") or [None] * len(chunks)
+            for d, n in zip(chunks, lens):
+                index[d] = n
+    return index
+
+
 def live_chunk_refs(manifests) -> Counter:
     """Mark phase: refcounts implied by an iterable of manifest dicts —
     one reference per (shard, chunk) occurrence."""

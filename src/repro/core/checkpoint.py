@@ -148,6 +148,11 @@ class CheckpointManager:
         self._manifest_refs_cache: dict = {}   # (tier, step) → Counter
         self.last_report: dict = {}
         self.last_gc_report: dict = {}
+        # post-COMMIT hooks, called as hook(step, manifest) once the round
+        # is durable (LATEST moved, refcounts published) but before the
+        # slow-tier drain — the weightsync publisher announces here. A
+        # hook failure warns and never aborts the save.
+        self.on_commit: list = []
         self._bind_write_policy(policy)
 
     def _bind_write_policy(self, policy: CheckpointPolicy):
@@ -518,6 +523,15 @@ class CheckpointManager:
                 (lambda refs: self.chunks.apply_refs(refs, crash))
                 if incremental else None))
         commit_total()
+        for hook in list(self.on_commit):
+            # announcement plane: distribution is best-effort, durability
+            # is not — a publisher failure must never abort a committed
+            # save
+            try:
+                hook(step, manifest)
+            except Exception as e:  # noqa: BLE001
+                warn("CKPT_W_HOOK", "on_commit hook failed",
+                     step=step, detail=f"{e.__class__.__name__}: {e}")
 
         # ---- stage 3: maintenance + slow-tier drain ----
         if overlapped and self._persist.fast_flush_requested:

@@ -42,6 +42,13 @@ Fault kinds:
   ``latency``      the op sleeps ``latency_s`` first, then proceeds
   ``vanish``       read: the file is deleted before the read proceeds
   ``full``         ``free_bytes`` reports 0 (capacity preflight fails)
+  ``truncated_get``  remote ranged GET (``read_range``) returns short: a
+                   prefix of the part lands, then False — the multipart
+                   truncation an S3 connection reset produces
+  ``stale_head``   remote HEAD/GET disagreement: ``read_into`` sees a
+                   size mismatch (counts + False), ``read_file`` raises
+                   the typed transient ``RemoteInconsistencyError`` —
+                   read-after-overwrite staleness
 """
 from __future__ import annotations
 
@@ -53,9 +60,14 @@ import time
 from dataclasses import dataclass, field
 
 FAULT_KINDS = ("eio", "enospc", "erofs", "short_write", "torn_write",
-               "bitrot", "latency", "vanish", "full")
+               "bitrot", "latency", "vanish", "full",
+               "truncated_get", "stale_head")
 READ_OPS = ("read", "read_file", "read_into")
-_OPS = ("read", "read_file", "read_into", "write", "free")
+# read_range is NOT folded under the "read" alias: a multipart GET would
+# advance a generic read spec's match counter once per PART, silently
+# reshaping every existing schedule — per-part faults are addressed
+# explicitly by op="read_range"
+_OPS = ("read", "read_file", "read_into", "read_range", "write", "free")
 
 
 @dataclass
@@ -258,8 +270,14 @@ class FaultyTier:
         if k == "vanish":
             inner.delete_file(rel)
             return inner.read_file(rel)     # raises FileNotFoundError
+        if k == "stale_head":
+            from .resilience import RemoteInconsistencyError
+            inner._note_read_failure(rel, "injected stale HEAD",
+                                     "stale_head")
+            raise RemoteInconsistencyError(
+                f"injected stale HEAD: {rel}", rel=rel, kind="stale_head")
         data = inner.read_file(rel)
-        if k in ("short_write", "torn_write"):
+        if k in ("short_write", "torn_write", "truncated_get"):
             return data[:len(data) // 2]    # short READ: truncated bytes
         if k == "bitrot" and data:
             buf = bytearray(data)
@@ -267,25 +285,68 @@ class FaultyTier:
             return bytes(buf)
         return data
 
+    def _inner_read_into(self, rel: str, dest) -> bool:
+        # a remote inner tier re-dispatches through the WRAPPER's
+        # ``read_range`` (same trick as ``preflight``): each part of the
+        # multipart GET polls the plane, so op="read_range" faults
+        # (truncated_get) actually fire mid-object
+        if hasattr(self._inner, "read_range"):
+            from .storage import RemoteTier
+            return RemoteTier.read_into(self, rel, dest)
+        return self._inner.read_into(rel, dest)
+
+    def read_range(self, rel: str, dest, offset: int) -> bool:
+        inner = self._inner
+        spec = self._plane.poll("read_range", inner.name, rel)
+        if spec is None:
+            return inner.read_range(rel, dest, offset)
+        k = spec.kind
+        if k == "latency":
+            time.sleep(spec.latency_s)
+            return inner.read_range(rel, dest, offset)
+        if k == "eio":
+            inner._note_read_failure(rel, "injected EIO", "read_error")
+            return False
+        if k == "truncated_get":
+            # the part's prefix actually lands in dest, then the GET
+            # "connection" dies — short bytes visible, length honest
+            half = memoryview(dest)[:len(dest) // 2]
+            if len(half):
+                inner.read_range(rel, half, offset)
+            inner._note_read_failure(
+                rel, f"injected truncated GET at offset {offset}",
+                "truncated_get")
+            return False
+        if k == "vanish":
+            inner.delete_file(rel)
+            return inner.read_range(rel, dest, offset)
+        return inner.read_range(rel, dest, offset)
+
     def read_into(self, rel: str, dest) -> bool:
         inner = self._inner
         spec = self._plane.poll(("read_into", "read"), inner.name, rel)
         if spec is None:
-            return inner.read_into(rel, dest)
+            return self._inner_read_into(rel, dest)
         k = spec.kind
         if k == "latency":
             time.sleep(spec.latency_s)
-            return inner.read_into(rel, dest)
+            return self._inner_read_into(rel, dest)
         if k == "eio":
             # honour the Tier contract (False, never raise) but keep the
             # failure VISIBLE through the same counters/logging a real
             # EIO inside read_into would hit
             inner._note_read_failure(rel, "injected EIO", "read_error")
             return False
+        if k == "stale_head":
+            # HEAD advertised one size, the object is another: detected
+            # before any part is fetched — counts + False, never raises
+            inner._note_read_failure(rel, "injected stale HEAD",
+                                     "stale_head")
+            return False
         if k == "vanish":
             inner.delete_file(rel)
-            return inner.read_into(rel, dest)
-        ok = inner.read_into(rel, dest)
+            return self._inner_read_into(rel, dest)
+        ok = self._inner_read_into(rel, dest)
         if not ok:
             return False
         if k in ("short_write", "torn_write"):
@@ -320,4 +381,8 @@ def wrap_store(store, plane: FaultPlane):
         tier = getattr(store, name, None)
         if tier is not None and not isinstance(tier, FaultyTier):
             setattr(store, name, FaultyTier(tier, plane))
+    peers = getattr(store, "peers", None)
+    if peers:
+        store.peers = [p if isinstance(p, FaultyTier)
+                       else FaultyTier(p, plane) for p in peers]
     return store

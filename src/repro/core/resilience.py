@@ -53,6 +53,25 @@ TIER_FULL_ERRNOS = frozenset(
     if e is not None)
 
 
+class RemoteInconsistencyError(OSError):
+    """An object store answered, but inconsistently: a multipart ranged
+    GET came back short (``truncated_get``) or the HEAD-advertised size
+    disagreed with the GET body (``stale_head`` — read-after-overwrite
+    staleness). Both are the remote-tier spellings of "ask again": the
+    object itself is content-addressed and immutable, so a re-issued
+    request against a healed replica returns the right bytes. Typed as
+    ``OSError(EIO)`` so every existing errno-based classifier already
+    treats it as transient; carried as its own class so callers (and
+    tests) can tell a remote protocol inconsistency from a dying local
+    disk."""
+
+    def __init__(self, msg: str, *, rel: str | None = None,
+                 kind: str = "inconsistent"):
+        super().__init__(errno.EIO, msg)
+        self.rel = rel
+        self.kind = kind
+
+
 def is_transient(exc: BaseException) -> bool:
     """True for errors a bounded same-tier retry may absorb. ENOSPC is
     deliberately included: transient space pressure (a concurrent GC or

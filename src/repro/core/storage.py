@@ -288,10 +288,15 @@ class RemoteTier(Tier):
         return True
 
     def read_file(self, rel: str) -> bytes:
+        from .resilience import RemoteInconsistencyError
         size = (self.root / rel).stat().st_size   # raises if absent
         buf = bytearray(size)
         if not self.read_into(rel, memoryview(buf)):
-            raise OSError(f"remote object changed mid-read: {rel}")
+            # typed (EIO) so retry_io / is_transient re-issue the GET
+            # instead of treating a stale HEAD as a permanent error
+            raise RemoteInconsistencyError(
+                f"remote object changed mid-read: {rel}", rel=rel,
+                kind="stale_head")
         return bytes(buf)
 
 
@@ -319,10 +324,15 @@ class TieredStore:
 
     def __init__(self, fast: Tier, slow: Tier | None = None,
                  drain_async: bool = True, io_executor=None,
-                 remote: Tier | None = None):
+                 remote: Tier | None = None, peers=()):
         self.fast = fast
         self.slow = slow
         self.remote = remote
+        # read-only sibling caches (weightsync peer fan-out): resolved
+        # after fast but before slow/remote, so a subscriber prefers a
+        # rack-local replica over hammering the shared store. Never
+        # written, never drained, never swept.
+        self.peers = list(peers)
         self.drain_async = drain_async
         # optional ChunkIOExecutor: drain copies fan out over it so the
         # read side (fast tier) overlaps the throttled write side (slow
@@ -330,6 +340,10 @@ class TieredStore:
         self.io_executor = io_executor
         self._drainer: threading.Thread | None = None
         self._drain_err = None
+        # drains deferred because the slow tier's breaker was open:
+        # (step_dir_name, rels) jobs held back — never dropped — until
+        # the breaker half-opens or ``wait_drained`` forces them through
+        self._drain_pending: list = []
         # resilience plumbing (wired by CheckpointManager): io_retry is a
         # resilience.RetryPolicy on the pipelined engine, None on the
         # serial engine (fail-fast — PR-1 purity); _health maps tier name
@@ -384,18 +398,13 @@ class TieredStore:
         return self
 
     def tiers(self):
-        return [t for t in (self.fast, self.slow, self.remote)
+        return [t for t in (self.fast, *self.peers, self.slow, self.remote)
                 if t is not None]
 
-    def drain_step(self, step_dir_name: str, extra_files=()):
-        """Copy a committed checkpoint dir fast→slow (throttled) on ONE
-        background thread, preceded by `extra_files` (CAS chunk objects
-        live outside step directories). All copies are atomic writes, so a
-        killed drain never leaves a torn file under a trusted name."""
-        if self.slow is None:
-            return
+    def _drain_one(self, step_dir_name: str, rels):
+        """Copy ONE committed step dir (plus its CAS objects) fast→slow.
+        Runs on the drainer thread (or inline for sync/forced drains)."""
         src = self.fast.root / step_dir_name
-        rels = [r for r in extra_files if (self.fast.root / r).is_file()]
 
         def _slow_write(rel, data):
             if self.io_retry is None:
@@ -416,49 +425,89 @@ class TieredStore:
             rel = str(Path(step_dir_name) / p.relative_to(src))
             _slow_write(rel, p.read_bytes())
 
-        def _copy():
+        # a drain killed mid-write leaves .tmp- litter in slow-tier
+        # step dirs that nothing else walks (gc_staging covers the
+        # fast root, the CAS sweep covers _CAS) — purge it here,
+        # off the save path; drains are serialized so no live tmp
+        # file can be hit
+        for t in self.slow.root.glob("step_*/**/*.tmp-*"):
             try:
-                # a drain killed mid-write leaves .tmp- litter in slow-tier
-                # step dirs that nothing else walks (gc_staging covers the
-                # fast root, the CAS sweep covers _CAS) — purge it here,
-                # off the save path; drains are serialized so no live tmp
-                # file can be hit
-                for t in self.slow.root.glob("step_*/**/*.tmp-*"):
-                    try:
-                        t.unlink()
-                    except OSError:
-                        pass
-                step_files = [p for p in sorted(src.rglob("*"))
-                              if p.is_file()]
-                ex = self.io_executor
-                if ex is not None and not ex.serial:
-                    # two batches with a barrier between them: CAS objects
-                    # must be fully landed before the step dir (and its
-                    # manifest) can reference them on the slow tier
-                    ex.map_ordered(_copy_extra, rels)
-                    ex.map_ordered(_copy_step, step_files)
-                else:
-                    for rel in rels:
-                        _copy_extra(rel)
-                    for p in step_files:
-                        _copy_step(p)
-            except Exception as e:  # noqa
-                self._drain_err = e
-
-        if self.drain_async:
-            self.wait_drained()
-            self._drainer = threading.Thread(target=_copy, daemon=True)
-            self._drainer.start()
+                t.unlink()
+            except OSError:
+                pass
+        step_files = [p for p in sorted(src.rglob("*")) if p.is_file()]
+        ex = self.io_executor
+        if ex is not None and not ex.serial:
+            # two batches with a barrier between them: CAS objects
+            # must be fully landed before the step dir (and its
+            # manifest) can reference them on the slow tier
+            ex.map_ordered(_copy_extra, rels)
+            ex.map_ordered(_copy_step, step_files)
         else:
-            _copy()
+            for rel in rels:
+                _copy_extra(rel)
+            for p in step_files:
+                _copy_step(p)
 
-    def wait_drained(self):
+    def _run_drain_jobs(self, jobs):
+        try:
+            for step_dir_name, rels in jobs:
+                self._drain_one(step_dir_name, rels)
+        except Exception as e:  # noqa
+            self._drain_err = e
+
+    def drain_step(self, step_dir_name: str, extra_files=()):
+        """Copy a committed checkpoint dir fast→slow (throttled) on ONE
+        background thread, preceded by `extra_files` (CAS chunk objects
+        live outside step directories). All copies are atomic writes, so a
+        killed drain never leaves a torn file under a trusted name.
+
+        Breaker-aware: if the slow tier's circuit breaker is OPEN (a run
+        of consecutive drain-write failures), the copy is DEFERRED — held
+        on a pending queue, never dropped — and retried on the next drain
+        (by which time the breaker has half-opened) or forced through by
+        ``wait_drained``/``evict_fast``. Deprioritize, never skip: a sick
+        scratch filesystem delays durability, it must not silently lose
+        the slow-tier copy a later eviction assumes exists."""
+        if self.slow is None:
+            return
+        rels = [r for r in extra_files if (self.fast.root / r).is_file()]
+        job = (step_dir_name, rels)
+        if not self.drain_async:
+            self._run_drain_jobs([job])
+            return
+        # serialize with any in-flight drain (raises a prior drain error
+        # here, on the save path, like it always has)
+        self._join_drainer()
+        self._drain_pending.append(job)
+        if not self.health_for(self.slow).allow():
+            self.health_for(self.slow).note("drain_deferred")
+            warn("CKPT_W_DRAIN", "slow-tier breaker open: drain deferred",
+                 tier=self.slow.name, step=step_dir_name,
+                 pending=len(self._drain_pending))
+            return
+        jobs, self._drain_pending = self._drain_pending, []
+        self._drainer = threading.Thread(
+            target=self._run_drain_jobs, args=(jobs,), daemon=True)
+        self._drainer.start()
+
+    def _join_drainer(self):
         if self._drainer is not None:
             self._drainer.join()
             self._drainer = None
         if self._drain_err is not None:
             e, self._drain_err = self._drain_err, None
             raise e
+
+    def wait_drained(self):
+        """Join the in-flight drain AND force any breaker-deferred copies
+        through inline — after this returns (without raising), every
+        requested drain has landed on the slow tier."""
+        self._join_drainer()
+        while self._drain_pending:
+            jobs, self._drain_pending = self._drain_pending, []
+            self._run_drain_jobs(jobs)
+            self._join_drainer()    # re-raise anything _run_drain_jobs caught
 
     def locate(self, rel: str) -> Tier | None:
         for t in self.tiers():

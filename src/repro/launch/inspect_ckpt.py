@@ -18,7 +18,7 @@ checkpoint for a restart, *verify* it. This tool:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.inspect_ckpt <ckpt-root> [--step N]
-      [--verify]
+      [--verify] [--scrub] [--health] [--subscribers]
 """
 from __future__ import annotations
 
@@ -148,6 +148,58 @@ def run_health(root: Path, slow_root: Path | None = None,
     rep["ok"] = not any(
         s.get("breaker", {}).get("state") == "open"
         for s in rep["tiers"].values())
+    return rep
+
+
+def run_subscribers(root: Path, out=print) -> dict:
+    """``inspect_ckpt --subscribers``: the WeightSync view of this store —
+    the current announcement (``_WS/ANNOUNCE``) and every replica status
+    file subscribers publish after each sync (``_WS/subscribers/*.json``).
+    Per replica: live/degraded state, last flipped step vs the announced
+    one, cache residency, wire-byte split (peer vs source) and the last
+    error if it is holding last-good. Exit 1 if any replica is degraded
+    or lagging the announcement."""
+    from ..core.weightsync import ANNOUNCE_REL, SUBSCRIBERS_DIR
+    rep: dict = {"announce": None, "subscribers": []}
+    try:
+        rep["announce"] = json.loads((root / ANNOUNCE_REL).read_text())
+    except (OSError, ValueError):
+        pass
+    ann = rep["announce"]
+    if ann:
+        out(f"  announce: step {ann.get('step')} seq {ann.get('seq')} "
+            f"({ann.get('step_dir')})")
+    else:
+        out("  announce: none (no publisher has committed here)")
+    sdir = root / SUBSCRIBERS_DIR
+    for p in sorted(sdir.glob("*.json")) if sdir.is_dir() else []:
+        try:
+            rep["subscribers"].append(json.loads(p.read_text()))
+        except (OSError, ValueError):
+            rep["subscribers"].append(
+                {"name": p.stem, "state": "unreadable"})
+    if not rep["subscribers"]:
+        out("  subscribers: none published")
+    lagging = 0
+    for s in rep["subscribers"]:
+        c = s.get("counters", {})
+        wire = c.get("wire_bytes", 0)
+        peer = c.get("peer_bytes", 0)
+        lag = (ann is not None and s.get("last_flipped_step") is not None
+               and s["last_flipped_step"] < int(ann["step"]))
+        bad = s.get("state") != "live" or lag
+        lagging += bad
+        out(f"  {'!' if bad else ' '} {s.get('name', '?'):16s} "
+            f"{s.get('state', '?'):9s} step {s.get('last_flipped_step')}"
+            + (f" (announced {ann['step']})" if lag else "")
+            + f"  cache {s.get('cache_chunks', 0)} chunk(s) "
+            f"{s.get('cache_bytes', 0)/2**20:.2f} MiB  "
+            f"wire {wire/2**20:.2f} MiB "
+            f"({peer/max(wire, 1)*100:.0f}% peer)  "
+            f"syncs {c.get('syncs', 0)} flips {c.get('flips', 0)}")
+        if s.get("last_error"):
+            out(f"      last_error: {s['last_error']}")
+    rep["ok"] = not lagging
     return rep
 
 
@@ -679,13 +731,17 @@ def main(argv=None):
                          "full live set")
     ap.add_argument("--scrub-seed", type=int, default=0,
                     help="seed for --scrub-sample (replayable subset)")
+    ap.add_argument("--subscribers", action="store_true",
+                    help="print the WeightSync announcement and every "
+                         "published replica status (state, flipped step, "
+                         "cache residency, peer/source wire split)")
     ap.add_argument("--health", action="store_true",
                     help="print per-tier error counters, circuit-breaker "
                          "state, quarantine contents and the last scrub "
                          "summary")
     args = ap.parse_args(argv)
     sink = (lambda *_: None) if args.json else print
-    if args.scrub or args.health:
+    if args.scrub or args.health or args.subscribers:
         rep = {}
         if args.scrub:
             rep["scrub"] = run_scrub(
@@ -696,6 +752,8 @@ def main(argv=None):
             rep["health"] = run_health(
                 args.root, slow_root=args.slow_root,
                 remote_root=args.remote_root, out=sink)
+        if args.subscribers:
+            rep["subscribers"] = run_subscribers(args.root, out=sink)
         rep["ok"] = all(r["ok"] for r in rep.values())
         if args.json:
             print(json.dumps(rep, indent=1, default=str))

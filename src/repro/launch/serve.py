@@ -6,6 +6,12 @@ half — params + KV caches + request-queue cursor — checkpoints and restores
 mid-decode, and generation continues token-exactly.
 
 ``python -m repro.launch.serve --arch gemma3-1b --requests 16``
+
+With ``--weight-sync <store-root>`` the server also subscribes to a
+trainer-side ``WeightPublisher``: between decode steps it polls the
+store's announcement, pulls only the chunks its cache misses, and
+hot-swaps the params pytree atomically — serving never blocks on a full
+restore, and a failed sync holds the last-good weights.
 """
 from __future__ import annotations
 
@@ -35,9 +41,40 @@ class ServeState:
                      "cursor": jax.numpy.asarray(cursor, jax.numpy.int32)}
 
 
+def _hot_swap(params, sub, last_step):
+    """Poll the WeightSync subscriber between decode steps and, on a new
+    flip, rebuild the params pytree from the flipped host arrays (leaf
+    names match ``leaf_paths`` under the ``params/`` root — the same
+    naming the publisher's manifest uses). Any sync failure holds the
+    serving params as-is: the subscriber already degraded to last-good."""
+    from ..core.split_state import leaf_paths
+    sub.sync()
+    step, arrays = sub.current()
+    if step is None or step == last_step:
+        return params, last_step
+    flat = {}
+    missing = []
+    for name, leaf in leaf_paths({"params": params}):
+        host = arrays.get(name)
+        if host is None:
+            missing.append(name)
+            continue
+        flat[name] = jax.numpy.asarray(host, dtype=leaf.dtype)
+    if missing:
+        log.warning("weight-sync step %s misses %d leaf(s) (e.g. %s) — "
+                    "holding current params", step, len(missing),
+                    missing[0])
+        return params, last_step
+    swapped = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params),
+        [flat[n] for n, _ in leaf_paths({"params": params})])
+    log.info("hot-swapped params to published step %s", step)
+    return swapped, step
+
+
 def run(arch: str, *, n_requests=8, prompt_len=32, gen_len=32,
         workdir="runs/serve", ckpt_every=16, preempt_at=None,
-        full_config=False, seed=0):
+        full_config=False, seed=0, weight_sync=None, weight_sync_name=None):
     cfg = get_config(arch) if full_config else reduced(get_config(arch))
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch has no decode serving path")
@@ -47,6 +84,16 @@ def run(arch: str, *, n_requests=8, prompt_len=32, gen_len=32,
     decode_fn = jax.jit(decode_fn)
     manager = CheckpointManager(default_store(f"{workdir}/{arch}"),
                                 policy=CheckpointPolicy(n_writers=2))
+    sub, ws_step = None, None
+    if weight_sync is not None:
+        from ..core.storage import Tier, TieredStore
+        from ..core.weightsync import WeightSubscriber
+        sub = WeightSubscriber(
+            TieredStore(Tier("ws-src", weight_sync)),
+            f"{workdir}/{arch}/ws-cache",
+            name=weight_sync_name or f"serve-{arch}",
+            leaf_filter=lambda n: n.startswith("params/"))
+        log.info("weight-sync: subscribed to %s", weight_sync)
 
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (n_requests, prompt_len),
@@ -75,6 +122,8 @@ def run(arch: str, *, n_requests=8, prompt_len=32, gen_len=32,
 
     t0 = time.time()
     while cursor < gen_len:
+        if sub is not None:
+            params, ws_step = _hot_swap(params, sub, ws_step)
         tok, cache = decode_fn(params, cache, jax.numpy.asarray(out[:, cursor - 1]))
         out[:, cursor] = np.asarray(tok)
         cursor += 1
@@ -91,10 +140,16 @@ def run(arch: str, *, n_requests=8, prompt_len=32, gen_len=32,
                      "cursor": jax.numpy.asarray(cursor, jax.numpy.int32)}
             manager.save(state, cursor, extra={"arch": arch})
             log.info("preempted at token %d — state persisted", cursor)
+            if sub is not None:
+                sub.close()
             return {"status": "preempted", "cursor": cursor, "tokens": out}
     dt = time.time() - t0
-    return {"status": "completed", "cursor": cursor, "tokens": out,
-            "tok_per_s": n_requests * (gen_len - 1) / max(dt, 1e-9)}
+    rep = {"status": "completed", "cursor": cursor, "tokens": out,
+           "tok_per_s": n_requests * (gen_len - 1) / max(dt, 1e-9)}
+    if sub is not None:
+        rep["weight_sync_step"] = ws_step
+        sub.close()
+    return rep
 
 
 def main(argv=None):
@@ -106,12 +161,19 @@ def main(argv=None):
     ap.add_argument("--workdir", default="runs/serve")
     ap.add_argument("--ckpt-every", type=int, default=16)
     ap.add_argument("--preempt-at", type=int, default=None)
+    ap.add_argument("--weight-sync", default=None, metavar="STORE_ROOT",
+                    help="subscribe to a WeightSync publisher's store root "
+                         "and hot-swap params between decode steps")
+    ap.add_argument("--weight-sync-name", default=None,
+                    help="subscriber name published back to the source "
+                         "(inspect_ckpt --subscribers)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
     rep = run(args.arch, n_requests=args.requests,
               prompt_len=args.prompt_len, gen_len=args.gen_len,
               workdir=args.workdir, ckpt_every=args.ckpt_every,
-              preempt_at=args.preempt_at)
+              preempt_at=args.preempt_at, weight_sync=args.weight_sync,
+              weight_sync_name=args.weight_sync_name)
     print({k: v for k, v in rep.items() if k != "tokens"})
     return 0
 

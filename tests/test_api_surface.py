@@ -20,13 +20,14 @@ EXPORTED = [
     "DrainCounters", "DurabilityPolicy", "FaultPlane", "FaultSpec",
     "FaultyTier", "GearChunker", "GearScanner",
     "MissingShardError", "NamespaceError",
-    "NoCheckpointError", "PersistStage", "PipelinePolicy", "PreemptQueue",
-    "PreemptionGuard",
-    "ReadCache", "RegistryMismatchError", "RemoteTier", "RestorePlan",
+    "NoCheckpointError", "PeerTier", "PersistStage", "PipelinePolicy",
+    "PreemptQueue", "PreemptionGuard",
+    "ReadCache", "RegistryMismatchError", "RemoteInconsistencyError",
+    "RemoteTier", "RestorePlan",
     "RestorePolicy", "RestoreSession", "RestoreStream", "RetryPolicy",
     "SavePlan", "SaveSession", "SpaceError", "Tier", "TierHealth",
-    "TieredStore",
-    "abstract_train_state", "config_digest", "default_store",
+    "TieredStore", "WeightPublisher", "WeightSubscriber",
+    "abstract_train_state", "build_fleet", "config_digest", "default_store",
     "init_train_state", "is_tier_full", "is_transient", "leaf_paths",
     "lower_half_descriptor",
     "quiesce_device_state", "retry_io", "state_shardings", "wrap_store",

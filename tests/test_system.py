@@ -27,6 +27,42 @@ def test_serving_preempt_and_resume_token_exact(tmp_path):
     np.testing.assert_array_equal(resumed["tokens"], full["tokens"])
 
 
+@pytest.mark.slow
+def test_serve_hot_swaps_published_weights(tmp_path):
+    """A trainer-side WeightPublisher commits params; a serving run with
+    --weight-sync pulls and hot-swaps them before decoding, so generation
+    diverges from the no-sync baseline and reports the flipped step."""
+    from repro.configs import get_config, reduced
+    from repro.core import (CheckpointManager, CheckpointPolicy, Tier,
+                            TieredStore, WeightPublisher)
+    from repro.models import Model
+
+    base = serve_mod.run("gemma3-1b", n_requests=3, prompt_len=8,
+                         gen_len=12, workdir=str(tmp_path / "base"),
+                         ckpt_every=0, seed=13)
+    assert base["status"] == "completed"
+
+    # trainer: publish DIFFERENT params (another init seed) for the same
+    # arch — leaf names land under params/ exactly as serve expects
+    cfg = reduced(get_config("gemma3-1b"))
+    published = Model(cfg).init(jax.random.PRNGKey(99))
+    trainer = tmp_path / "trainer"
+    mgr = CheckpointManager(
+        TieredStore(Tier("fast", trainer)),
+        policy=CheckpointPolicy(mode="incremental"))
+    WeightPublisher(mgr)
+    mgr.save({"params": published}, 0, blocking=True)
+    mgr.wait()
+    mgr.close()
+
+    swapped = serve_mod.run("gemma3-1b", n_requests=3, prompt_len=8,
+                            gen_len=12, workdir=str(tmp_path / "swap"),
+                            ckpt_every=0, seed=13, weight_sync=trainer)
+    assert swapped["status"] == "completed"
+    assert swapped["weight_sync_step"] == 0
+    assert not np.array_equal(swapped["tokens"], base["tokens"])
+
+
 def test_aot_cache_roundtrip(tmp_path):
     """Static-linking analogue: second bring-up loads the serialized
     executable instead of recompiling (falls back gracefully if the backend

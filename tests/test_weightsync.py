@@ -1,0 +1,524 @@
+"""WeightSync: checkpoint-as-transport weight distribution.
+
+The contract under test, per the subsystem's invariants:
+
+  1. a subscriber's flipped set is BIT-EXACT with a fresh ``restore()``
+     of the announced step, leaf by leaf — structural, because the
+     subscriber assembles through the restore path's own fetch engine;
+  2. a second sync moves ONLY the delta: chunks already cache-resident
+     are never re-pulled;
+  3. peer fan-out spares the source: downstream replicas pull from peer
+     caches, and the source tiers see O(tree root) chunk reads;
+  4. a subscriber killed mid-pull or around the flip resumes to a
+     bit-exact swap, never serves a torn buffer set, and never re-pulls
+     what already landed (every cache write is atomic);
+  5. injected storage faults degrade a sync to hold-last-good — the
+     active set stays the previous step's, bit-exact — and a clean
+     retry recovers;
+  6. the publisher is best-effort: an announce failure never aborts the
+     committed save.
+
+Plus the satellite units: ``truncated_get``/``stale_head`` fault kinds
+with classification, and breaker-aware (deprioritize-never-skip) drain
+scheduling.
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_ckpt_policy
+from repro.core import resilience
+from repro.core.atomic import CrashInjector, CrashPoint
+from repro.core.checkpoint import CheckpointManager
+from repro.core.faults import FaultPlane, FaultyTier, wrap_store
+from repro.core.storage import RemoteTier, Tier, TieredStore
+from repro.core.weightsync import (ANNOUNCE_REL, SUBSCRIBERS_DIR,
+                                   WeightPublisher, WeightSubscriber,
+                                   assert_bitexact, build_fleet)
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _state(step: int):
+    k = jax.random.PRNGKey(step)
+    return {
+        "params": {"emb": jax.random.normal(k, (48, 16)),
+                   "w0": jnp.arange(4096, dtype=jnp.float32) + step,
+                   "frozen": jax.random.normal(KEY, (64, 8))},
+        "opt": {"m": jnp.full((256,), float(step), jnp.float32)},
+        "step": jnp.asarray(step, jnp.int32),
+    }
+
+
+def _abstract(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def _policy(io_threads=2):
+    return make_ckpt_policy(mode="incremental", chunk_size=2048,
+                            io_threads=io_threads, io_retries=2,
+                            io_backoff_ms=1.0, io_deadline_s=10.0)
+
+
+def _store(tmp_path):
+    return TieredStore(Tier("fast", tmp_path / "fast"),
+                       Tier("slow", tmp_path / "slow"))
+
+
+def _mgr(store, io_threads=2):
+    return CheckpointManager(store, policy=_policy(io_threads))
+
+
+def _params_filter(n):
+    return n.startswith("params/")
+
+
+# ---------------------------------------------------------------------------
+# publisher
+# ---------------------------------------------------------------------------
+
+def test_publisher_announces_at_commit(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    pub = WeightPublisher(mgr)
+    mgr.save(_state(0), 0, blocking=True)
+    mgr.wait()
+    assert pub.last_announced_step == 0
+    ann = json.loads(store.fast.read_file(ANNOUNCE_REL).decode())
+    assert ann["step"] == 0 and ann["manifest"]["step"] == 0
+    assert ann["step_dir"] == "step_00000000"
+    # the announcement also reaches the slow tier for cold subscribers
+    assert (store.slow.root / ANNOUNCE_REL).exists()
+    mgr.save(_state(1), 1, blocking=True)
+    mgr.wait()
+    ann = json.loads(store.fast.read_file(ANNOUNCE_REL).decode())
+    assert ann["step"] == 1 and ann["seq"] == 2
+    mgr.close()
+
+
+def test_publisher_failure_never_aborts_save(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    pub = WeightPublisher(mgr)
+
+    def boom(step, manifest):
+        raise RuntimeError("announcement plane on fire")
+
+    mgr.on_commit.insert(0, boom)
+    mgr.save(_state(0), 0, blocking=True)       # must not raise
+    mgr.wait()
+    assert mgr.latest_step() == 0
+    assert pub.last_announced_step == 0         # later hooks still ran
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# subscriber: correctness + delta + fan-out
+# ---------------------------------------------------------------------------
+
+def test_sync_is_bitexact_with_restore(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    state = _state(0)
+    mgr.save(state, 0, blocking=True)
+    mgr.wait()
+    sub = WeightSubscriber(store, tmp_path / "cache0", name="r0",
+                           policy=_policy())
+    st = sub.sync()
+    assert st["state"] == "live" and st["last_flipped_step"] == 0
+    step, arrays = sub.current()
+    restored, _ = mgr.restore(_abstract(state), step=0)
+    assert_bitexact(arrays, restored)
+    # and against the source state too (restore is itself bit-exact)
+    assert_bitexact(arrays, state)
+    sub.close()
+    mgr.close()
+
+
+def test_second_sync_pulls_only_the_delta(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    s0 = _state(0)
+    mgr.save(s0, 0, blocking=True)
+    mgr.wait()
+    sub = WeightSubscriber(store, tmp_path / "cache0", name="r0",
+                           policy=_policy(), leaf_filter=_params_filter)
+    sub.sync()
+    full_wire = sub.counters["wire_bytes"]
+    assert full_wire > 0
+    # step 1 churns ONLY emb (~15% of params bytes); w0 and frozen dedup
+    # to already-resident chunks, so the wire carries just emb's chunks
+    s1 = {"params": {"emb": s0["params"]["emb"] + 1.0,
+                     "w0": s0["params"]["w0"],
+                     "frozen": s0["params"]["frozen"]},
+          "opt": {"m": s0["opt"]["m"]},
+          "step": jnp.asarray(1, jnp.int32)}
+    mgr.save(s1, 1, blocking=True)
+    mgr.wait()
+    sub.sync()
+    delta_wire = sub.counters["wire_bytes"] - full_wire
+    assert 0 < delta_wire < full_wire / 2
+    step, arrays = sub.current()
+    assert step == 1
+    assert_bitexact(arrays, s1, leaf_filter=_params_filter)
+    # idempotent: re-sync of the same announcement moves nothing
+    before = sub.counters["wire_bytes"]
+    sub.sync()
+    assert sub.counters["wire_bytes"] == before
+    sub.close()
+    mgr.close()
+
+
+def test_peer_fanout_spares_the_source(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    state = _state(0)
+    mgr.save(state, 0, blocking=True)
+    mgr.wait()
+    fleet = build_fleet(store, tmp_path / "fleet", 4, fanout=3,
+                        policy=_policy(), leaf_filter=_params_filter)
+    for sub in fleet:
+        sub.sync()
+    # the tree root pulled from the source; every downstream replica was
+    # served entirely by peer caches
+    assert fleet[0].counters["source_bytes"] > 0
+    assert fleet[0].counters["peer_bytes"] == 0
+    for sub in fleet[1:]:
+        assert sub.counters["source_bytes"] == 0
+        assert sub.counters["peer_bytes"] > 0
+        _, arrays = sub.current()
+        assert_bitexact(arrays, state, leaf_filter=_params_filter)
+    # a peer cache is read-only: the pull path can never mutate it
+    peer = fleet[0].as_peer_tier()
+    with pytest.raises(OSError):
+        peer.write_file("x", b"nope")
+    for sub in fleet:
+        sub.close()
+    mgr.close()
+
+
+def test_non_incremental_announcement_degrades(tmp_path):
+    store = _store(tmp_path)
+    mgr = CheckpointManager(store, policy=make_ckpt_policy(mode="full"))
+    WeightPublisher(mgr)
+    mgr.save(_state(0), 0, blocking=True)
+    mgr.wait()
+    sub = WeightSubscriber(store, tmp_path / "c", name="r0",
+                           policy=_policy())
+    st = sub.sync()
+    assert st["state"] == "init"        # nothing ever flipped
+    assert "incremental" in (st["last_error"] or "")
+    assert sub.counters["sync_failures"] == 1
+    sub.close()
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# subscriber: crash points (satellite 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", ["ws_mid_pull", "ws_before_flip",
+                                   "ws_after_flip"])
+def test_subscriber_killed_then_resumes_bitexact(tmp_path, point):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    state = _state(0)
+    mgr.save(state, 0, blocking=True)
+    mgr.wait()
+    cache = tmp_path / "cache0"
+    # serial pull (io_threads=1) makes the mid-pull kill deterministic
+    sub = WeightSubscriber(store, cache, name="r0", policy=_policy(1),
+                           crash=CrashInjector(point))
+    with pytest.raises(CrashPoint):
+        sub.sync()
+    if point == "ws_mid_pull":
+        # killed before the flip: never flipped, never torn
+        assert sub.current() == (None, {})
+    pulled_before = sub.cache_residency()["chunks"]
+    # "restart" the replica over the SAME cache dir
+    sub2 = WeightSubscriber(store, cache, name="r0", policy=_policy(1))
+    st = sub2.sync()
+    assert st["state"] == "live" and st["last_flipped_step"] == 0
+    step, arrays = sub2.current()
+    assert_bitexact(arrays, state)
+    # resume never re-pulls what already landed (atomic cache writes)
+    assert sub2.counters["chunks_pulled"] + pulled_before == \
+        sub2.cache_residency()["chunks"]
+    if point in ("ws_before_flip", "ws_after_flip"):
+        # everything was already resident at the kill: zero wire on resume
+        assert sub2.counters["wire_bytes"] == 0
+    sub.close()
+    sub2.close()
+    mgr.close()
+
+
+def test_readers_never_see_a_torn_set_across_flips(tmp_path):
+    """Concurrent readers snapshot (step, arrays) while syncs flip
+    underneath them: every snapshot must be internally consistent —
+    all leaves from ONE step."""
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    states = {s: {"params": {"w": jnp.full((2048,), float(s), jnp.float32)},
+                  "step": jnp.asarray(s, jnp.int32)}
+              for s in range(4)}
+    mgr.save(states[0], 0, blocking=True)
+    mgr.wait()
+    sub = WeightSubscriber(store, tmp_path / "c", name="r0",
+                           policy=_policy())
+    sub.sync()
+    stop = threading.Event()
+    torn: list = []
+
+    def reader():
+        while not stop.is_set():
+            step, arrays = sub.current()
+            if step is None:
+                continue
+            w = arrays["params/w"]
+            s = arrays["step"]
+            if not (np.all(w == float(step)) and int(s) == step):
+                torn.append((step, float(w[0]), int(s)))
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for s in range(1, 4):
+            mgr.save(states[s], s, blocking=True)
+            mgr.wait()
+            sub.sync()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not torn
+    assert sub.flipped_step == 3
+    sub.close()
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# subscriber: fault plane → degraded hold-last-good
+# ---------------------------------------------------------------------------
+
+def test_faulted_pull_holds_last_good_then_recovers(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    s0 = _state(0)
+    mgr.save(s0, 0, blocking=True)
+    mgr.wait()
+    cache = tmp_path / "c"
+    sub = WeightSubscriber(store, cache, name="r0", policy=_policy(1),
+                           leaf_filter=_params_filter)
+    sub.sync()
+    assert sub.state == "live"
+    s1 = _state(1)
+    mgr.save(s1, 1, blocking=True)
+    mgr.wait()
+    # every source read of chunk objects now dies with EIO, exhausting
+    # the bounded retries — the sync must degrade, not throw
+    plane = FaultPlane(seed=7)
+    plane.add("read", "eio", tier="*", match=".obj", count=-1)
+    wrap_store(sub.store, plane)
+    st = sub.sync()
+    assert st["state"] == "degraded"
+    assert sub.counters["sync_failures"] == 1
+    step, arrays = sub.current()
+    assert step == 0                    # held the last good set
+    assert_bitexact(arrays, s0, leaf_filter=_params_filter)
+    # storage heals: the next sync converges to step 1, bit-exact
+    plane.clear()
+    st = sub.sync()
+    assert st["state"] == "live" and st["last_flipped_step"] == 1
+    _, arrays = sub.current()
+    assert_bitexact(arrays, s1, leaf_filter=_params_filter)
+    sub.close()
+    mgr.close()
+
+
+def test_bitrot_on_peer_falls_through_to_source(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    state = _state(0)
+    mgr.save(state, 0, blocking=True)
+    mgr.wait()
+    fleet = build_fleet(store, tmp_path / "fleet", 2, policy=_policy(1),
+                        leaf_filter=_params_filter)
+    fleet[0].sync()
+    # every peer-served byte is rotten: the digest gate must reject the
+    # peer copy and the pull must fall through to the source, bit-exact
+    plane = FaultPlane(seed=3)
+    plane.add("read", "bitrot", tier=f"ws-peer-{fleet[0].name}",
+              match=".obj", count=-1)
+    wrap_store(fleet[1].store, plane)
+    st = fleet[1].sync()
+    assert st["state"] == "live"
+    assert fleet[1].counters["pull_corrupt"] > 0
+    assert fleet[1].counters["source_bytes"] > 0
+    _, arrays = fleet[1].current()
+    assert_bitexact(arrays, state, leaf_filter=_params_filter)
+    for sub in fleet:
+        sub.close()
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: remote fault kinds + classification
+# ---------------------------------------------------------------------------
+
+def _remote(tmp_path, **kw):
+    return RemoteTier("object-store", tmp_path / "remote", **kw)
+
+
+def test_truncated_get_faults_multipart_read(tmp_path):
+    remote = _remote(tmp_path, part_bytes=1024)
+    payload = bytes(range(256)) * 16            # 4 KiB → 4 parts
+    remote.write_file("obj", payload)
+    plane = FaultPlane(seed=1)
+    plane.add("read_range", "truncated_get", tier="object-store", nth=2)
+    ft = FaultyTier(remote, plane)
+    buf = bytearray(len(payload))
+    assert ft.read_into("obj", memoryview(buf)) is False
+    assert remote.io_counters.get("truncated_get", 0) == 1
+    # the fault window closed: the re-issued GET succeeds and is exact
+    buf = bytearray(len(payload))
+    assert ft.read_into("obj", memoryview(buf)) is True
+    assert bytes(buf) == payload
+    assert [f[3] for f in plane.fired()] == ["truncated_get"]
+
+
+def test_stale_head_faults_and_classification(tmp_path):
+    remote = _remote(tmp_path, part_bytes=1024)
+    remote.write_file("obj", b"x" * 2048)
+    plane = FaultPlane(seed=1)
+    plane.add("read_into", "stale_head", tier="object-store", nth=1)
+    plane.add("read_file", "stale_head", tier="object-store", nth=1)
+    ft = FaultyTier(remote, plane)
+    buf = bytearray(2048)
+    assert ft.read_into("obj", memoryview(buf)) is False
+    assert remote.io_counters.get("stale_head", 0) == 1
+    with pytest.raises(resilience.RemoteInconsistencyError) as ei:
+        ft.read_file("obj")
+    # classified transient (EIO family): retry_io will re-issue it
+    assert resilience.is_transient(ei.value)
+    assert not resilience.is_tier_full(ei.value)
+    assert ei.value.kind == "stale_head"
+    # a bounded retry absorbs it end to end
+    plane.add("read_file", "stale_head", tier="object-store", nth=1)
+    out = resilience.retry_io(
+        lambda: ft.read_file("obj"),
+        resilience.RetryPolicy(retries=2, backoff_ms=0.1))
+    assert out == b"x" * 2048
+
+
+def test_remote_read_file_mismatch_is_typed_transient(tmp_path):
+    """RemoteTier.read_file's own HEAD/GET disagreement (no fault plane)
+    now raises the typed, retryable error."""
+    remote = _remote(tmp_path, part_bytes=64)
+
+    class Shrinking(RemoteTier):
+        def read_range(self, rel, dest, offset):
+            ok = super().read_range(rel, dest, offset)
+            return False                # every part "short"
+
+    t = Shrinking("object-store", tmp_path / "r2", part_bytes=64)
+    t.write_file("obj", b"y" * 256)
+    with pytest.raises(resilience.RemoteInconsistencyError) as ei:
+        t.read_file("obj")
+    assert resilience.is_transient(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# satellite: breaker-aware drain scheduling
+# ---------------------------------------------------------------------------
+
+def test_drain_defers_while_breaker_open_then_flushes(tmp_path):
+    fast = Tier("fast", tmp_path / "fast")
+    slow = Tier("slow", tmp_path / "slow")
+    store = TieredStore(fast, slow, drain_async=True)
+    (fast.root / "step_00000001").mkdir(parents=True)
+    (fast.root / "step_00000001" / "f").write_bytes(b"a" * 128)
+    (fast.root / "step_00000002").mkdir(parents=True)
+    (fast.root / "step_00000002" / "f").write_bytes(b"b" * 128)
+    health = store.health_for(slow)
+    for _ in range(health.breaker.threshold):
+        health.record_error("drain_write")
+    assert not health.allow()
+    store.drain_step("step_00000001")
+    # deprioritized, NOT copied yet — and NOT skipped
+    assert not (slow.root / "step_00000001" / "f").exists()
+    assert store._drain_pending
+    assert health.counters.get("drain_deferred") == 1
+    # next drain with the breaker closed flushes the backlog in order
+    health.record_ok("drain_write")
+    assert health.allow()
+    store.drain_step("step_00000002")
+    store.wait_drained()
+    assert (slow.root / "step_00000001" / "f").read_bytes() == b"a" * 128
+    assert (slow.root / "step_00000002" / "f").read_bytes() == b"b" * 128
+    assert not store._drain_pending
+
+
+def test_wait_drained_forces_deferred_copies(tmp_path):
+    fast = Tier("fast", tmp_path / "fast")
+    slow = Tier("slow", tmp_path / "slow")
+    store = TieredStore(fast, slow, drain_async=True)
+    (fast.root / "step_00000001").mkdir(parents=True)
+    (fast.root / "step_00000001" / "f").write_bytes(b"z" * 64)
+    health = store.health_for(slow)
+    for _ in range(health.breaker.threshold):
+        health.record_error("drain_write")
+    store.drain_step("step_00000001")
+    assert not (slow.root / "step_00000001" / "f").exists()
+    # the barrier every eviction takes must push the copy through even
+    # with the breaker still open — deprioritize, never skip
+    assert not health.allow()
+    store.wait_drained()
+    assert (slow.root / "step_00000001" / "f").read_bytes() == b"z" * 64
+
+
+# ---------------------------------------------------------------------------
+# inspector surface
+# ---------------------------------------------------------------------------
+
+def test_subscriber_status_published_for_inspector(tmp_path):
+    store = _store(tmp_path)
+    mgr = _mgr(store)
+    WeightPublisher(mgr)
+    mgr.save(_state(0), 0, blocking=True)
+    mgr.wait()
+    sub = WeightSubscriber(store, tmp_path / "c", name="edge-7",
+                           policy=_policy())
+    sub.sync()
+    rel = f"{SUBSCRIBERS_DIR}/edge-7.json"
+    doc = json.loads(store.fast.read_file(rel).decode())
+    assert doc["name"] == "edge-7"
+    assert doc["last_flipped_step"] == 0
+    assert doc["cache_chunks"] > 0
+
+    # inspector view: caught up → ok; a newer announcement → lagging
+    from repro.launch.inspect_ckpt import run_subscribers
+    rep = run_subscribers(store.fast.root, out=lambda *_: None)
+    assert rep["ok"] and rep["announce"]["step"] == 0
+    assert [s["name"] for s in rep["subscribers"]] == ["edge-7"]
+    mgr.save(_state(1), 1, blocking=True)
+    mgr.wait()
+    rep = run_subscribers(store.fast.root, out=lambda *_: None)
+    assert not rep["ok"] and rep["announce"]["step"] == 1
+    sub.sync()
+    rep = run_subscribers(store.fast.root, out=lambda *_: None)
+    assert rep["ok"]
+    sub.close()
+    mgr.close()
